@@ -1,0 +1,87 @@
+"""Paper Fig. 5: (a/b) input-conversion transfer curve INL/DNL, (c) 2K
+Monte-Carlo conversion error, (d/e) 8-bit 128-channel MAC transfer curves
+and error; plus the §III-C time-accumulation error and §IV-C total bound."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import analog
+
+
+def run():
+    # --- Fig 5a/b: TC + INL/DNL over all 256 codes (static mismatch) ------
+    codes = jnp.arange(256)
+    chip = analog.sample_chip(jax.random.key(7))
+    v = analog.input_conversion(
+        codes[None, :].repeat(analog.MACRO_ROWS, 0).T, chip)[:, 0]
+    ideal = analog.input_conversion_ideal(codes)
+    inl = np.abs(np.asarray(v - ideal)) / analog.LSB
+    dnl = np.abs(np.diff(np.asarray(v)) - analog.LSB) / analog.LSB
+    emit('fig5ab.inl_max_lsb', 0.0, f'{inl.max():.2f} (paper <2)')
+    emit('fig5ab.dnl_max_lsb', 0.0, f'{dnl.max():.2f} (paper <2)')
+    emit('fig5ab.inl_under_1lsb_fraction', 0.0,
+         f'{(inl < 1).mean()*100:.1f}% (paper: most <1 LSB)')
+
+    # --- Fig 5c: 2K-sample Monte Carlo at mid-code ------------------------
+    n = 2000
+    keys = jax.random.split(jax.random.key(0), n)
+    code = jnp.array([128])
+
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        c = analog.sample_chip(k1, rows=1)
+        return analog.input_conversion(code, c, k2)
+
+    vs = np.asarray(jax.vmap(one)(keys)).reshape(-1)
+    bow = analog.INL_BOW_LSB * analog.LSB * np.sin(np.pi * 128 / 255)
+    err = vs - float(analog.input_conversion_ideal(code)[0]) - bow
+    emit('fig5c.sigma3_mV', 0.0,
+         f'{3*err.std()*1e3:.2f} (paper 2.25; 1 LSB = 3.52)')
+
+    # --- Fig 5d/e: MAC TCs (weight scan & input scan), 128 channels -------
+    rows = analog.MACRO_ROWS
+    chip = analog.sample_chip(jax.random.key(3), cbs=256)
+    # weight scan: input 255, weights 0..255
+    w_scan = jnp.arange(256)[None, :].repeat(rows, 0)
+    v_in = analog.input_conversion(jnp.full((rows,), 255), None)
+    v_w = analog.macro_mac(v_in, w_scan, chip)
+    ideal_w = analog.macro_mac_ideal(jnp.full((rows,), 255), w_scan)
+    fs = float(jnp.max(jnp.abs(ideal_w)))
+    err_w = np.abs(np.asarray(v_w - ideal_w)) / fs
+    # input scan: weight 255, inputs 0..255 (all rows same code)
+    errs_i = []
+    w_fix = jnp.full((rows, 8), 255)
+    for code_i in range(0, 256, 8):
+        vi = analog.input_conversion(jnp.full((rows,), code_i), chip)
+        vm = analog.macro_mac(vi, w_fix, chip)
+        im = analog.macro_mac_ideal(jnp.full((rows,), code_i), w_fix)
+        errs_i.append(float(jnp.max(jnp.abs(vm - im))) / fs)
+    emit('fig5de.mac_err_weight_scan_max', 0.0,
+         f'{err_w.max()*100:.3f}% (paper <=0.68%)')
+    emit('fig5de.mac_err_input_scan_max', 0.0,
+         f'{max(errs_i)*100:.3f}% (paper <=0.68%)')
+
+    # --- §III-C time accumulation + §IV-C total ---------------------------
+    chip8 = analog.sample_chip(jax.random.key(5), n_macros_v=8)
+    v_parts = jnp.full((8, 32), analog.VDD / 2)
+    t_err = np.abs(np.asarray(
+        analog.time_accumulate(v_parts, chip8, 0) - jnp.sum(v_parts, 0)))
+    emit('sec3c.time_acc_err', 0.0,
+         f'{t_err.max()/float(jnp.max(jnp.sum(v_parts,0)))*100:.3f}%'
+         ' (paper <=0.11%)')
+
+    key = jax.random.key(11)
+    x = jax.random.randint(key, (8, 1024), 0, 256)
+    w = jax.random.randint(jax.random.fold_in(key, 1), (1024, 32), 0, 256)
+    got = analog.analog_vmm(x, w, key=jax.random.fold_in(key, 2))
+    ide = analog.analog_vmm_ideal_codes(x, w)
+    emit('sec4c.total_vmm_err', 0.0,
+         f'{np.abs(np.asarray(got-ide)).max()/255*100:.3f}% (paper <0.79%)')
+
+
+if __name__ == '__main__':
+    run()

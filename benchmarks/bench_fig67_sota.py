@@ -1,0 +1,25 @@
+"""Paper Fig. 6/7: energy-efficiency and throughput ratios of AiDAC/YOCO
+over 8 SOTA IMC designs (1.5-40x energy, 9-873x throughput)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import hwmodel
+
+
+def run():
+    rows = hwmodel.sota_comparison()
+    for r in rows:
+        emit(f'fig67.{r["key"]}', 0.0,
+             f'energy_x={r["energy_ratio"]:.1f};'
+             f'throughput_x={r["throughput_ratio"]:.1f};kind={r["kind"]}')
+    e = [r['energy_ratio'] for r in rows]
+    t = [r['throughput_ratio'] for r in rows]
+    emit('fig67.energy_range', 0.0,
+         f'{min(e):.1f}-{max(e):.1f}x (paper 1.5-40x)')
+    emit('fig67.throughput_range', 0.0,
+         f'{min(t):.0f}-{max(t):.0f}x (paper 9-873x)')
+
+
+if __name__ == '__main__':
+    run()

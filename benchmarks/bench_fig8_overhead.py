@@ -1,0 +1,22 @@
+"""Paper Fig. 8: per-function overhead breakdown of a core VMM
+(compute / interconnect / conversion / communication / control)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import hwmodel
+
+
+def run():
+    br = hwmodel.overhead_breakdown()
+    for k, v in br.items():
+        emit(f'fig8.{k}', 0.0, f'{v*100:.1f}%')
+    emit('fig8.sum', 0.0, f'{sum(br.values())*100:.1f}%')
+    lat = hwmodel.core_vmm_latency()
+    for k, v in lat.items():
+        if k != 'total':
+            emit(f'fig8.latency.{k}', 0.0, f'{v/1e-9:.2f}ns')
+
+
+if __name__ == '__main__':
+    run()

@@ -1,0 +1,46 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU) vs XLA vs oracle across
+shapes; correctness deltas + wall time for context. On TPU the same calls
+compile the real kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import quant
+from repro.kernels import ops, ref
+
+
+SHAPES = [(128, 1024, 256), (256, 2048, 512), (512, 4096, 1024)]
+
+
+def run():
+    for (m, k, n) in SHAPES:
+        key = jax.random.key(m + n)
+        x = jax.random.normal(key, (m, k), jnp.float32)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (k, n), jnp.float32)
+
+        t_xla = time_call(lambda: jax.block_until_ready(
+            quant.w8a8_matmul(x, w)), n_iter=3)
+        got = ops.yoco_vmm(x, w)
+        want = ref.yoco_vmm_ref(x, w)
+        err = float(jnp.max(jnp.abs(got - want))
+                    / (jnp.max(jnp.abs(want)) + 1e-9))
+        t_bf16 = time_call(lambda: jax.block_until_ready(
+            jnp.matmul(x.astype(jnp.bfloat16), w.astype(jnp.bfloat16))),
+            n_iter=3)
+        emit(f'kernels.w8a8_xla.{m}x{k}x{n}', t_xla,
+             f'bf16_matmul_us={t_bf16:.0f}')
+        emit(f'kernels.yoco_vmm_vs_oracle.{m}x{k}x{n}', 0.0,
+             f'max_rel_err={err:.2e}')
+
+        xq, sx = ref.quantize_rows_ref(x)
+        xq2, sx2 = ops.quantize_rows(x)
+        emit(f'kernels.quantize_rows.{m}x{k}', 0.0,
+             f'codes_equal={bool(jnp.all(xq == xq2))}')
+
+
+if __name__ == '__main__':
+    run()

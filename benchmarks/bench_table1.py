@@ -1,0 +1,39 @@
+"""Paper Table I + §IV-B headline figures: component energies, core VMM
+energy/latency, 123.8 TOPS/W, 26.2 TOPS; per-arch AiDAC mapping."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro import configs
+from repro.core import hwmodel
+
+
+def run():
+    e = hwmodel.core_vmm_energy()
+    lat = hwmodel.core_vmm_latency()
+    emit('table1.core_energy_nJ', 0.0, f'{e["total"]/1e-9:.3f} (paper 4.235)')
+    emit('table1.core_latency_ns', 0.0,
+         f'{lat["total"]/1e-9:.2f} (paper <20)')
+    emit('table1.macro_energy_pJ', 0.0,
+         f'{hwmodel.macro_energy()["total"]/1e-12:.1f} (paper 29.6)')
+    emit('table1.energy_eff_TOPS_W', 0.0,
+         f'{hwmodel.energy_efficiency_tops_w():.1f} (paper 123.8)')
+    emit('table1.throughput_TOPS', 0.0,
+         f'{hwmodel.throughput_tops():.1f} (paper 26.2)')
+    emit('table1.adc_overhead_saving', 0.0,
+         f'{hwmodel.adc_overhead_reduction()*100:.1f}% (paper 87.5%)')
+    # energy sensitivity to MCC activity (the 50% sparsity assumption)
+    for act in (0.25, 0.5, 0.75, 1.0):
+        emit(f'table1.tops_w_at_activity_{act}', 0.0,
+             f'{hwmodel.energy_efficiency_tops_w(activity=act):.1f}')
+    # per-arch deployment sizing (decode, 1e5 tok/s target)
+    for name in configs.names():
+        r = hwmodel.map_architecture(configs.get(name))
+        emit(f'table1.map.{name}', 0.0,
+             f'uJ/tok={r["energy_per_token"]*1e6:.2f};'
+             f'eff_TOPS_W={r["effective_tops_w"]:.1f};'
+             f'util={r["utilization"]:.3f}')
+
+
+if __name__ == '__main__':
+    run()

@@ -1,0 +1,36 @@
+"""Shared benchmark scaffolding: timing helper + CSV row emission."""
+
+from __future__ import annotations
+
+import sys
+import time
+from typing import Callable
+
+import jax
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ''):
+    row = f'{name},{us_per_call:.2f},{derived}'
+    ROWS.append(row)
+    print(row)
+
+
+def time_call(fn: Callable, *args, n_warmup: int = 1, n_iter: int = 5,
+              **kwargs) -> float:
+    """Median wall time in microseconds (CPU timings are context, not the
+    deliverable — the roofline terms come from the dry-run artifacts)."""
+    for _ in range(n_warmup):
+        jax.block_until_ready(fn(*args, **kwargs))
+    ts = []
+    for _ in range(n_iter):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kwargs))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def header():
+    print('name,us_per_call,derived')

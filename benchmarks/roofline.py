@@ -1,0 +1,102 @@
+"""Roofline table from the dry-run artifacts (deliverable g): per
+(arch x shape) on the single-pod mesh — three terms, dominant bottleneck,
+MODEL/HW flops ratio, and the roofline fraction at the bound."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+from repro import configs
+from repro.core import roofline
+
+ART = os.path.join(os.path.dirname(__file__), '..', 'experiments', 'dryrun')
+OUT = os.path.join(os.path.dirname(__file__), '..', 'experiments',
+                   'roofline.json')
+
+
+def load(arch, shape, mesh='single'):
+    path = os.path.join(ART, mesh, f'{arch}__{shape}.json')
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def run(mesh: str = 'single'):
+    table = []
+    for arch in configs.names():
+        cfg = configs.get(arch)
+        for shape in configs.SHAPES:
+            if not configs.cell_is_live(cfg, shape):
+                continue
+            rec = load(arch, shape, mesh)
+            if rec is None:
+                emit(f'roofline.{arch}.{shape}', 0.0, 'MISSING-ARTIFACT')
+                continue
+            t = roofline.roofline_terms(arch, shape, rec)
+            table.append(t)
+            emit(f'roofline.{arch}.{shape}', 0.0,
+                 f'compute={t["compute_s"]*1e3:.2f}ms;'
+                 f'memory={t["memory_s"]*1e3:.2f}ms;'
+                 f'collective={t["collective_s"]*1e3:.2f}ms;'
+                 f'dominant={t["dominant"].replace("_s","")};'
+                 f'mfu_bound={t["mfu_at_bound"]*100:.1f}%;'
+                 f'model/hw={t["model_over_hw"]:.2f}')
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, 'w') as f:
+        json.dump(table, f, indent=1)
+    # summary: worst cells per category (the hillclimb candidates)
+    if table:
+        train = [t for t in table if t['shape'] == 'train_4k']
+        worst = min(train, key=lambda t: t['mfu_at_bound'])
+        coll = max(table, key=lambda t: t['collective_s'])
+        emit('roofline.worst_train_mfu', 0.0,
+             f'{worst["arch"]}:{worst["mfu_at_bound"]*100:.1f}%')
+        emit('roofline.most_collective_bound', 0.0,
+             f'{coll["arch"]}.{coll["shape"]}:{coll["collective_s"]*1e3:.1f}ms')
+    perf_section()
+
+
+PERF = os.path.join(os.path.dirname(__file__), '..', 'experiments', 'perf')
+
+# the three hillclimbed cells: baseline artifact vs final optimized artifact
+HILLCLIMBED = [
+    ('qwen2-moe-a2.7b', 'train_4k', 'final'),
+    ('deepseek-v3-671b', 'train_4k', 'final'),
+    ('qwen2-vl-72b', 'prefill_32k', 'final'),
+]
+
+
+def perf_section():
+    """§Perf before/after: paper-faithful baseline vs hillclimbed config.
+    Parsed collective bytes on the CPU backend ride f32 (the backend
+    upcasts bf16) — 'tpu_est' halves activation-dominated wire bytes as the
+    documented dtype correction (EXPERIMENTS.md §Perf)."""
+    for arch, shape, tag in HILLCLIMBED:
+        base = load(arch, shape, 'single')
+        fpath = os.path.join(PERF, f'{arch}__{shape}__{tag}.json')
+        if base is None or not os.path.exists(fpath):
+            emit(f'perf.{arch}.{shape}', 0.0, 'MISSING-ARTIFACT')
+            continue
+        with open(fpath) as f:
+            opt = json.load(f)
+        tb = roofline.roofline_terms(arch, shape, base)
+        to = roofline.roofline_terms(arch, shape, opt,
+                                     int8=opt.get('yoco_mode') == 'w8a8')
+        speedup = tb['step_time_lower_bound_s'] / to['step_time_lower_bound_s']
+        emit(f'perf.{arch}.{shape}.baseline', 0.0,
+             f'bound={tb["step_time_lower_bound_s"]*1e3:.0f}ms;'
+             f'dominant={tb["dominant"].replace("_s","")};'
+             f'mfu={tb["mfu_at_bound"]*100:.1f}%')
+        emit(f'perf.{arch}.{shape}.optimized', 0.0,
+             f'bound={to["step_time_lower_bound_s"]*1e3:.0f}ms;'
+             f'dominant={to["dominant"].replace("_s","")};'
+             f'mfu={to["mfu_at_bound"]*100:.1f}%;'
+             f'speedup={speedup:.1f}x;'
+             f'tpu_est_collective={to["collective_s"]*0.5*1e3:.0f}ms')
+
+
+if __name__ == '__main__':
+    run()

@@ -1,0 +1,39 @@
+"""Benchmark entry point: one section per paper table/figure + the roofline
+table from the dry-run artifacts. Prints ``name,us_per_call,derived`` CSV."""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (bench_accuracy, bench_fig5_precision,
+                        bench_fig67_sota, bench_fig8_overhead,
+                        bench_kernels, bench_table1, roofline)
+from benchmarks.common import header
+
+
+def main() -> None:
+    header()
+    sections = [
+        ('table1', bench_table1.run),
+        ('fig5', bench_fig5_precision.run),
+        ('fig67', bench_fig67_sota.run),
+        ('fig8', bench_fig8_overhead.run),
+        ('kernels', bench_kernels.run),
+        ('roofline', roofline.run),
+        ('accuracy', bench_accuracy.run),
+    ]
+    failed = []
+    for name, fn in sections:
+        try:
+            fn()
+        except Exception:                      # noqa: BLE001
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f'FAILED sections: {failed}', file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

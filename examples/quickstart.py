@@ -1,0 +1,66 @@
+"""Quickstart: the paper's 8-bit in-memory VMM as a composable JAX layer.
+
+Runs in seconds on CPU:
+  1. a single YOCO matmul in every execution mode (bf16 / w8a8 / analog_sim)
+  2. the full all-analog circuit simulation (codes -> volts -> time -> codes)
+  3. the Table-I hardware model headline numbers
+  4. a tiny assigned-architecture model doing one forward pass per mode
+
+Usage:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import analog, hwmodel, yoco_linear
+from repro.core.yoco_linear import YocoConfig
+from repro.data import synthetic
+from repro.models import model as M
+
+
+def main():
+    key = jax.random.key(0)
+
+    print('=== 1. one matmul, three execution modes ===')
+    x = jax.random.normal(key, (4, 1024))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (1024, 256))
+    ref = x @ w
+    for mode in ('bf16', 'w8a8', 'analog_sim'):
+        y = yoco_linear.yoco_matmul(x, w, YocoConfig(mode=mode))
+        err = float(jnp.max(jnp.abs(y.astype(jnp.float32) - ref))
+                    / jnp.max(jnp.abs(ref)))
+        print(f'  {mode:11s} max rel err vs f32: {err*100:6.3f}%  '
+              f'(paper total <0.79%)')
+
+    print('=== 2. the all-analog array, circuit level (1024x32 VMM) ===')
+    xc = jax.random.randint(key, (2, 1024), 0, 256)
+    wc = jax.random.randint(jax.random.fold_in(key, 2), (1024, 32), 0, 256)
+    codes = analog.analog_vmm(xc, wc, key=jax.random.fold_in(key, 3))
+    ideal = analog.analog_vmm_ideal_codes(xc, wc)
+    print(f'  output codes (first 6): {codes[0, :6].tolist()}')
+    print(f'  ideal  codes (first 6): {ideal[0, :6].tolist()}')
+    print(f'  max |err| = {int(jnp.max(jnp.abs(codes - ideal)))} LSB')
+
+    print('=== 3. Table-I hardware model ===')
+    print(f'  core VMM energy  : {hwmodel.core_vmm_energy()["total"]/1e-9:.3f} nJ '
+          f'(paper 4.235)')
+    print(f'  core VMM latency : {hwmodel.core_vmm_latency()["total"]/1e-9:.2f} ns '
+          f'(paper <20)')
+    print(f'  energy efficiency: {hwmodel.energy_efficiency_tops_w():.1f} TOPS/W '
+          f'(paper 123.8)')
+    print(f'  throughput       : {hwmodel.throughput_tops():.1f} TOPS '
+          f'(paper 26.2)')
+
+    print('=== 4. an assigned architecture through the array ===')
+    cfg = configs.get('stablelm-1.6b', smoke=True)
+    params = M.init_params(key, cfg)
+    batch = synthetic.make_batch(synthetic.for_arch(cfg, global_batch=2,
+                                                    seq_len=32), 0)
+    for mode in ('bf16', 'w8a8', 'analog_sim'):
+        loss, _ = M.loss_fn(params, batch, cfg, YocoConfig(mode=mode))
+        print(f'  {cfg.name} loss under {mode:11s}: {float(loss):.4f}')
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,25 @@
+"""Serving example: batch-decode three different architecture families
+(dense LM, 4-codebook audio LM, SSM) with int8 weights resident in memory —
+the 'network loaded into the array' deployment mode.
+
+Usage:  PYTHONPATH=src python examples/serve_decode.py
+"""
+
+from repro.launch import serve
+
+
+def main():
+    for arch, kwargs in [
+        ('stablelm-1.6b', dict(mode='w8a8', prequantize=True)),
+        ('musicgen-large', dict(mode='w8a8')),
+        ('mamba2-780m', dict(mode='w8a8', prequantize=True)),
+    ]:
+        print(f'=== {arch} ({kwargs}) ===')
+        out = serve.serve(arch, smoke=True, batch=4, prompt_len=32,
+                          gen_len=16, **kwargs)
+        print(f'  prefill {out["prefill_s"]}s, decode {out["decode_s"]}s, '
+              f'{out["tokens_per_s"]} tok/s, sample={out["sample"]}')
+
+
+if __name__ == '__main__':
+    main()

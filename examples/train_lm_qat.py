@@ -1,0 +1,94 @@
+"""End-to-end driver (deliverable b): train a ~100M-parameter LM for a few
+hundred steps with quantization-aware training, checkpointing every 50
+steps, then deploy the SAME weights onto the simulated 8-bit array (w8a8 +
+analog_sim) and compare next-token accuracy — the paper's <0.5%-loss story,
+end to end.
+
+~100M model: stablelm-2 family scaled to 12L x d=512 (vocab 8192).
+Runtime on this CPU container: ~10-15 min for 300 steps.
+
+Usage:  PYTHONPATH=src python examples/train_lm_qat.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import ArchConfig
+from repro.core.yoco_linear import YocoConfig
+from repro.data import synthetic
+from repro.models import model as M
+from repro.optim import adamw
+from repro.runtime import train_step as TS
+from repro.checkpoint.ckpt import CheckpointManager
+
+
+CFG_100M = ArchConfig(
+    name='stablelm-100m', family='dense',
+    n_layers=12, d_model=512, n_heads=8, n_kv_heads=8, d_ff=1408,
+    vocab_size=8192, rope_theta=10000.0, rope_fraction=0.25,
+    mlp_type='swiglu', norm_type='layernorm', max_seq_len=4096,
+    source='examples', notes='~100M-class stablelm-family model')
+
+
+def token_accuracy(params, cfg, mode, n=4):
+    yoco = YocoConfig(mode=mode)
+    dc = synthetic.for_arch(cfg, seed=4242, global_batch=8, seq_len=128)
+    hit = tot = 0
+    for i in range(n):
+        b = synthetic.make_batch(dc, 10_000 + i)
+        logits, _ = M.forward(params, b, cfg, yoco)
+        pred = jnp.argmax(logits.astype(jnp.float32), -1)
+        hit += int(jnp.sum(pred == b['labels']))
+        tot += b['labels'].size
+    return hit / tot
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--steps', type=int, default=300)
+    ap.add_argument('--batch', type=int, default=16)
+    ap.add_argument('--seq', type=int, default=128)
+    ap.add_argument('--ckpt-dir', default='/tmp/repro_qat_100m')
+    args = ap.parse_args()
+
+    cfg = CFG_100M
+    params = M.init_params(jax.random.key(0), cfg)
+    n_params = M.param_count(params)
+    print(f'model: {cfg.name}, {n_params/1e6:.1f}M params')
+
+    opt_cfg = adamw.OptConfig(lr=1e-3, warmup_steps=30,
+                              total_steps=args.steps, grad_accum=2)
+    opt = adamw.init(params, opt_cfg)
+    # QAT: fake-quant weights AND activations with straight-through grads —
+    # the network learns to live on the 8-bit array
+    step = jax.jit(TS.make_train_step(cfg, YocoConfig(mode='qat'),
+                                      opt_cfg=opt_cfg),
+                   donate_argnums=(0, 1))
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+    dc = synthetic.for_arch(cfg, global_batch=args.batch, seq_len=args.seq)
+    for i in range(args.steps):
+        params, opt, m = step(params, opt, synthetic.make_batch(dc, i))
+        if i % 25 == 0 or i == args.steps - 1:
+            print(f'step {i:4d}  loss {float(m["loss"]):.4f}  '
+                  f'gnorm {float(m["grad_norm"]):.2f}')
+        if (i + 1) % 50 == 0:
+            mgr.save(i + 1, (params, opt))
+    mgr.wait()
+
+    print('\ndeploying the trained network onto the 8-bit array...')
+    accs = {m: token_accuracy(params, cfg, m)
+            for m in ('bf16', 'w8a8', 'analog_sim')}
+    print(f'  digital bf16 accuracy : {accs["bf16"]*100:.2f}%')
+    print(f'  YOCO w8a8             : {accs["w8a8"]*100:.2f}%  '
+          f'(delta {100*(accs["bf16"]-accs["w8a8"]):+.3f}pp)')
+    print(f'  analog array (sim)    : {accs["analog_sim"]*100:.2f}%  '
+          f'(delta {100*(accs["bf16"]-accs["analog_sim"]):+.3f}pp)')
+    print('paper claim: <0.5% accuracy loss on 8-bit deployment')
+
+
+if __name__ == '__main__':
+    main()

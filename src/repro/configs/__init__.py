@@ -1,0 +1,8 @@
+# Importing this package registers every assigned architecture.
+from repro.configs import base  # noqa: F401
+from repro.configs import (  # noqa: F401
+    deepseek_v3_671b, gemma3_27b, mamba2_780m, musicgen_large,
+    qwen2_moe_a2p7b, qwen2_vl_72b, stablelm_12b, stablelm_1p6b,
+    starcoder2_15b, zamba2_1p2b,
+)
+from repro.configs.base import SHAPES, ArchConfig, cell_is_live, get, names  # noqa: F401

@@ -1,0 +1,24 @@
+"""stablelm-1.6b [dense] — hf:stabilityai/stablelm-2-1_6b.
+24L d_model=2048 32H (MHA kv=32) d_ff=5632 vocab=100352."""
+from repro.configs.base import ArchConfig, register
+
+FULL = ArchConfig(
+    name='stablelm-1.6b', family='dense',
+    n_layers=24, d_model=2048, n_heads=32, n_kv_heads=32, d_ff=5632,
+    vocab_size=100352,
+    rope_theta=10000.0, rope_fraction=0.25,
+    mlp_type='swiglu', norm_type='layernorm', max_seq_len=4096,
+    source='hf:stabilityai/stablelm-2-1_6b',
+    notes='partial rotary (25%)',
+)
+
+SMOKE = ArchConfig(
+    name='stablelm-1.6b', family='dense',
+    n_layers=2, d_model=48, n_heads=4, n_kv_heads=4, d_ff=128,
+    vocab_size=256,
+    rope_theta=10000.0, rope_fraction=0.25,
+    mlp_type='swiglu', norm_type='layernorm', max_seq_len=4096,
+    source='smoke', notes='reduced stablelm-1.6b',
+)
+
+register(FULL, SMOKE)

@@ -1,0 +1,7 @@
+# The paper's primary contribution: the YOCO/AiDAC 8-bit in-memory VMM execution
+# model as a composable JAX layer, its circuit-behavioral simulator, and the
+# Table-I hardware performance model.
+from repro.core import analog, bitplane, hwmodel, quant, yoco_linear  # noqa: F401
+from repro.core.yoco_linear import (  # noqa: F401
+    DEFAULT_YOCO, QuantizedWeight, YocoConfig, linear, quantize_tree, yoco_matmul,
+)

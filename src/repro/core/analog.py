@@ -1,0 +1,256 @@
+"""Behavioral simulator of the AiDAC/YOCO analog pipeline (paper §III, Fig. 4/5).
+
+This is the *circuit-fidelity* layer: it works in the paper's native space —
+unsigned N-bit digital codes in, voltages through the array, time signals across
+macros, unsigned codes out — and carries paper-calibrated non-idealities:
+
+  stage                         paper mechanism              non-ideality modeled
+  ------------------------------------------------------------------------------
+  input conversion (Eq. 2)      grouped row caps (1:2:..:128) unit-cap mismatch,
+                                charge share                  code-dependent bow
+                                                              (switch parasitics),
+                                                              PVT thermal noise
+  1-bit MAC (Eq. 3)             column charge share / M       share-line parasitic
+                                                              gain loss, column
+                                                              mismatch, kT/C noise
+  CB recombination (Eq. 4)      column-to-column cap groups   group-ratio mismatch
+  inter-macro accumulation      VTC chain (time domain)       per-VTC gain error
+  output conversion             8-bit TDC                     quantization
+
+Calibration targets (all unit-tested in ``tests/test_analog.py`` and reported by
+``benchmarks/bench_fig5_precision.py``):
+
+  * INL/DNL of the input transfer curve < 2 LSB, mostly < 1 LSB   (Fig. 5a/b)
+  * input-conversion 3-sigma error 2.25 mV < 1 LSB = 3.52 mV      (Fig. 5c)
+  * 8-bit, 128-channel MAC error <= 0.68% of full scale           (Fig. 5d/e)
+  * time-accumulation error <= 0.11% of full scale                (§III-C)
+  * total VMM error < 0.79%                                       (§IV-C)
+
+The network-level hook is :func:`analog_vmm` (full 1024x256-class VMM across
+vertically-stacked macros); ``core.yoco_linear`` uses the summary statistics of
+this simulator as its ``analog_sim`` noise model so that whole-model accuracy
+studies stay cheap while remaining paper-calibrated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitplane
+
+# ----------------------------------------------------------------------------
+# Circuit constants (paper §IV-A, Table I)
+# ----------------------------------------------------------------------------
+VDD = 0.9                       # V
+NBITS = 8
+LSB = VDD / (2 ** NBITS - 1)    # 3.529 mV — paper quotes 3.52 mV
+MACRO_ROWS = 128                # MCC rows per macro
+MACRO_COLS = 256                # MCC columns per macro
+CB_COLS = NBITS                 # columns per compute block (one per bit plane)
+MACRO_CBS = MACRO_COLS // CB_COLS   # 32 compute blocks (outputs) per macro
+
+# ----------------------------------------------------------------------------
+# Non-ideality magnitudes (calibrated to the paper's Fig. 5 numbers)
+# ----------------------------------------------------------------------------
+SIGMA_VNOISE = 0.66e-3          # V; thermal+PVT on input conversion; with group
+                                # mismatch folded in -> 3-sigma ~ 2.25 mV (Fig. 5c)
+SIGMA_UNIT_CAP = 0.01           # relative unit-capacitor mismatch (MOM, 28 nm)
+INL_BOW_LSB = 0.7               # deterministic bow amplitude from switch parasitics
+MAC_GAIN_LOSS = 0.006           # share-line parasitic: V_meas = (1-a) V_ideal
+SIGMA_MAC_NOISE = 0.4e-3        # V; kT/C + charge-injection on the share line
+SIGMA_VTC_GAIN = 0.00035        # per-VTC relative gain error -> chain <= 0.11% FS
+TDC_BITS = 8
+
+
+@dataclasses.dataclass
+class ChipSample:
+    """One Monte-Carlo instance of a chip's static mismatch (Fig. 5c's 2K MC
+    draws are 2K ``ChipSample``s)."""
+    row_group_err: jnp.ndarray    # (rows, NBITS) input-conversion group mismatch
+    col_gain_err: jnp.ndarray     # (cols,) column share-line gain mismatch
+    cb_group_err: jnp.ndarray     # (cbs, NBITS) CB recombination ratio mismatch
+    vtc_gain_err: jnp.ndarray     # (n_macros_v,) per-VTC gain error
+
+
+def sample_chip(key: jax.Array, rows: int = MACRO_ROWS, cbs: int = MACRO_CBS,
+                n_macros_v: int = 8) -> ChipSample:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # Group of 2^j unit caps averages unit mismatch down by sqrt(2^j).
+    group_sigma = SIGMA_UNIT_CAP / jnp.sqrt(2.0 ** jnp.arange(NBITS))
+    return ChipSample(
+        row_group_err=jax.random.normal(k1, (rows, NBITS)) * group_sigma,
+        col_gain_err=jax.random.normal(k2, (cbs * CB_COLS,)) * SIGMA_UNIT_CAP
+        / jnp.sqrt(float(rows)),
+        cb_group_err=jax.random.normal(k3, (cbs, NBITS)) * group_sigma,
+        vtc_gain_err=jax.random.normal(k4, (n_macros_v,)) * SIGMA_VTC_GAIN,
+    )
+
+
+# ----------------------------------------------------------------------------
+# Stage 1 — DAC-less input conversion (Eq. 2)
+# ----------------------------------------------------------------------------
+def input_conversion(codes: jnp.ndarray, chip: Optional[ChipSample] = None,
+                     noise_key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Row-capacitor charge-share conversion of unsigned codes -> volts.
+
+    codes: (..., rows) integer in [0, 255]. Returns volts, same shape.
+    Ideal: V = IN/(2^N-1) * VDD  (Eq. 2).
+    """
+    codes = codes.astype(jnp.int32)
+    bits = ((codes[..., None] >> jnp.arange(NBITS)) & 1).astype(jnp.float32)
+    cap_w = 2.0 ** jnp.arange(NBITS)                      # ideal group ratios
+    if chip is not None:
+        cap_w = cap_w * (1.0 + chip.row_group_err)        # (rows, NBITS)
+    num = jnp.sum(bits * cap_w, axis=-1)
+    den = jnp.sum(cap_w, axis=-1) + (0.0 if chip is None else 0.0)
+    v = num / (2 ** NBITS - 1) * (255.0 / den) * VDD if chip is not None \
+        else num / (2 ** NBITS - 1) * VDD
+    # Deterministic bow: switch/parasitic INL, worst mid-scale (classic DAC bow).
+    x = codes.astype(jnp.float32) / (2 ** NBITS - 1)
+    v = v + INL_BOW_LSB * LSB * jnp.sin(jnp.pi * x)
+    if noise_key is not None:
+        v = v + SIGMA_VNOISE * jax.random.normal(noise_key, v.shape)
+    return v
+
+
+def input_conversion_ideal(codes: jnp.ndarray) -> jnp.ndarray:
+    return codes.astype(jnp.float32) / (2 ** NBITS - 1) * VDD
+
+
+# ----------------------------------------------------------------------------
+# Stage 2+3 — 1-bit MAC by column charge share (Eq. 3) + CB recombine (Eq. 4)
+# ----------------------------------------------------------------------------
+def macro_mac(v_in: jnp.ndarray, w_codes: jnp.ndarray,
+              chip: Optional[ChipSample] = None,
+              noise_key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """One macro: (rows,) input volts x (rows, cbs) unsigned 8-bit weights ->
+    (cbs,) compute-block output volts.
+
+    Eq. 3: V_out^j = sum_i V_in_i * B_ij / M   (charge share divides by M)
+    Eq. 4: V_CB    = sum_j 2^j V_out^j / (2^N - 1)
+    """
+    rows = v_in.shape[-1]
+    planes = bitplane.decompose_unsigned(w_codes, NBITS).astype(jnp.float32)
+    # (rows, cbs, NBITS) bit planes; column charge share averages over rows.
+    v_cols = jnp.einsum('...r,rcb->...cb', v_in, planes) / rows      # Eq. 3
+    gain = 1.0 - MAC_GAIN_LOSS
+    if chip is not None:
+        col_gain = 1.0 + chip.col_gain_err[: w_codes.shape[1] * NBITS]
+        v_cols = v_cols * col_gain.reshape(w_codes.shape[1], NBITS)
+    v_cols = v_cols * gain
+    if noise_key is not None:
+        v_cols = v_cols + SIGMA_MAC_NOISE * jax.random.normal(noise_key, v_cols.shape)
+    cap_w = 2.0 ** jnp.arange(NBITS)
+    if chip is not None:
+        n_cbs = w_codes.shape[1]
+        cap_w = cap_w * (1.0 + chip.cb_group_err[:n_cbs])    # (cbs, NBITS)
+        v_cb = jnp.sum(v_cols * cap_w, axis=-1) / jnp.sum(cap_w, axis=-1) \
+            * (jnp.sum(2.0 ** jnp.arange(NBITS)) / (2 ** NBITS - 1))
+    else:
+        v_cb = jnp.sum(v_cols * cap_w, axis=-1) / (2 ** NBITS - 1)   # Eq. 4
+    return v_cb
+
+
+def macro_mac_ideal(codes: jnp.ndarray, w_codes: jnp.ndarray) -> jnp.ndarray:
+    """Exact value Eq. 2-4 compute with perfect circuits (volts)."""
+    rows = codes.shape[-1]
+    acc = jnp.einsum('...r,rc->...c', codes.astype(jnp.float32),
+                     w_codes.astype(jnp.float32))
+    return acc / (2 ** NBITS - 1) ** 2 / rows * VDD
+
+
+# ----------------------------------------------------------------------------
+# Stage 4+5 — inter-macro time accumulation + TDC
+# ----------------------------------------------------------------------------
+def time_accumulate(v_parts: jnp.ndarray, chip: Optional[ChipSample] = None,
+                    axis: int = 0) -> jnp.ndarray:
+    """VTC chain: each partial-sum voltage becomes a time increment; increments
+    add along the chain (§III-C(2)). Per-VTC gain mismatch is the 0.11% error."""
+    gain = 1.0
+    if chip is not None:
+        n = v_parts.shape[axis]
+        g = 1.0 + chip.vtc_gain_err[:n]
+        shape = [1] * v_parts.ndim
+        shape[axis] = n
+        gain = g.reshape(shape)
+    return jnp.sum(v_parts * gain, axis=axis)
+
+
+def tdc(t_signal: jnp.ndarray, full_scale: float) -> jnp.ndarray:
+    """8-bit time-to-digital conversion — the single output conversion."""
+    code = jnp.round(t_signal / full_scale * (2 ** TDC_BITS - 1))
+    return jnp.clip(code, 0, 2 ** TDC_BITS - 1).astype(jnp.int32)
+
+
+# ----------------------------------------------------------------------------
+# Full pipeline — the complete analog VMM (Fig. 4d phases I..VI)
+# ----------------------------------------------------------------------------
+def analog_vmm(x_codes: jnp.ndarray, w_codes: jnp.ndarray,
+               key: Optional[jax.Array] = None,
+               return_volts: bool = False):
+    """All-analog VMM: unsigned x (..., K) @ unsigned w (K, N) -> codes (..., N).
+
+    K is split into ceil(K/128) vertically-stacked macros whose CB outputs are
+    accumulated in the time domain; one TDC conversion at the end (YOCO).
+    With ``key=None`` the circuits are ideal (useful as the oracle).
+    """
+    *lead, K = x_codes.shape
+    Kw, N = w_codes.shape
+    assert K == Kw, (K, Kw)
+    n_macros = -(-K // MACRO_ROWS)
+    pad = n_macros * MACRO_ROWS - K
+    xp = jnp.pad(x_codes, [(0, 0)] * len(lead) + [(0, pad)])
+    wp = jnp.pad(w_codes, [(0, pad), (0, 0)])
+    xp = xp.reshape(*lead, n_macros, MACRO_ROWS)
+    wp = wp.reshape(n_macros, MACRO_ROWS, N)
+
+    chip = None
+    nkeys = [None] * (2 * n_macros)
+    if key is not None:
+        key, ck = jax.random.split(key)
+        chip = sample_chip(ck, cbs=max(N, MACRO_CBS), n_macros_v=n_macros)
+        nkeys = list(jax.random.split(key, 2 * n_macros))
+
+    v_cbs = []
+    for m in range(n_macros):
+        v_in = input_conversion(xp[..., m, :], chip, nkeys[2 * m])
+        v_cbs.append(macro_mac(v_in, wp[m], chip, nkeys[2 * m + 1]))
+    v_stack = jnp.stack(v_cbs, axis=0)                    # (n_macros, ..., N)
+    t_sum = time_accumulate(v_stack, chip, axis=0)
+    full_scale = n_macros * VDD                           # chain full scale
+    codes = tdc(t_sum, full_scale)
+    if return_volts:
+        return codes, t_sum
+    return codes
+
+
+def analog_vmm_ideal_codes(x_codes: jnp.ndarray, w_codes: jnp.ndarray) -> jnp.ndarray:
+    """The exact digital result quantized to the TDC's 8-bit grid — what a
+    perfect chip would output. Comparing against this isolates circuit error
+    from (inherent) TDC quantization."""
+    K = x_codes.shape[-1]
+    n_macros = -(-K // MACRO_ROWS)
+    acc = jnp.einsum('...k,kn->...n', x_codes.astype(jnp.float32),
+                     w_codes.astype(jnp.float32))
+    t_ideal = acc / (2 ** NBITS - 1) ** 2 / MACRO_ROWS * VDD
+    return tdc(t_ideal, n_macros * VDD)
+
+
+# ----------------------------------------------------------------------------
+# Summary statistics -> network-level noise model
+# ----------------------------------------------------------------------------
+def error_model_summary() -> dict:
+    """Closed-form summary used by ``yoco_linear`` analog_sim mode: relative-to-
+    full-scale error components (paper §IV-B/C)."""
+    return dict(
+        mac_gain_loss=MAC_GAIN_LOSS,                 # deterministic, <= 0.68% FS
+        mac_sigma_fs=SIGMA_MAC_NOISE / VDD,          # stochastic share-line noise
+        input_sigma_fs=SIGMA_VNOISE / VDD,           # input-conversion noise
+        time_sigma_fs=SIGMA_VTC_GAIN,                # VTC chain, <= 0.11% FS
+        tdc_bits=TDC_BITS,
+        total_bound=0.0079,                          # paper: < 0.79% total
+    )

@@ -1,0 +1,260 @@
+"""Analytical energy/latency/area model of the AiDAC/YOCO core (paper Table I).
+
+Reproduces, bottom-up from component numbers, the paper's headline figures:
+
+  * 4.235 nJ and < 20 ns per full-parallel 1024x256 8-bit VMM (50% activity)
+  * 123.8 TOPS/W   = (1024*256*2) / 4.235 nJ
+  * 26.2  TOPS     = (1024*256*2) / 20 ns
+  * ADC energy/area reduced 87.5% vs digital bit-serial weighting (Fig. 7b)
+  * SOTA comparison ranges: 1.5-40x energy, 9-873x throughput (Fig. 6/7)
+  * per-operation overhead breakdown (Fig. 8)
+
+Two component-level residuals are calibrated so the bottom-up sums hit the
+paper's macro (29.6 pJ) and core (4235 pJ) totals exactly; they are reported
+explicitly as ``macro_other`` (input-conversion charging + S0..S4 switching)
+and ``core_control`` (controller/decoders/clock tree, which the paper calls
+"small enough ... so it is neglected") so nothing is hidden.
+
+The model also *maps workloads*: :func:`map_matmul` tiles an arbitrary (M,K,N)
+matmul onto 1024x256 core-shots, and :func:`map_architecture` walks a model
+config from ``repro.configs`` and reports per-token energy/latency and the
+number of cores needed for a target decode rate — how one would size an AiDAC
+deployment for each assigned architecture.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+# ----------------------------------------------------------------------------
+# Table I — component parameters (28 nm, 0.9 V, 50 MHz analog / 1 GHz digital)
+# ----------------------------------------------------------------------------
+FJ = 1e-15
+PJ = 1e-12
+NS = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class CoreConfig:
+    macro_rows: int = 128          # MCC rows per macro
+    macro_cols: int = 256          # MCC columns per macro
+    cb_bits: int = 8               # columns per compute block (weight bits)
+    macros_v: int = 8              # vertically stacked (time-accumulated)
+    macros_h: int = 8              # horizontally tiled (row-driver broadcast)
+    # component energies
+    mcc_energy_per_act: float = 0.81 * FJ
+    row_driver_energy: float = 9.36 * FJ
+    time_acc_energy: float = 58.5 * FJ
+    tdc_energy: float = 7.7 * PJ
+    io_energy_per_256b: float = 2.9 * PJ
+    # component latencies
+    macro_latency: float = 13.0 * NS          # phases I..V
+    time_acc_latency: float = 113e-12         # per VTC hop
+    tdc_latency: float = 0.9 * NS
+    io_latency_per_256b: float = 0.112 * NS
+    # component areas (um^2)
+    mcc_area: float = 0.8
+    row_driver_area: float = 0.18
+    time_acc_area: float = 5.3
+    tdc_area_total: float = 6865.0            # all 256 TDCs
+    io_area: float = 4656.0
+    # paper totals used to calibrate residuals
+    paper_macro_energy: float = 29.6 * PJ     # @ 50% MCC activity
+    paper_core_energy: float = 4235.0 * PJ
+    paper_core_latency: float = 20.0 * NS
+    paper_core_area_mm2: float = 18.5
+
+    @property
+    def vmm_k(self) -> int:       # input channels per core-shot
+        return self.macro_rows * self.macros_v          # 1024
+
+    @property
+    def vmm_n(self) -> int:       # outputs per core-shot
+        return (self.macro_cols // self.cb_bits) * self.macros_h  # 256
+
+    @property
+    def n_macros(self) -> int:
+        return self.macros_v * self.macros_h            # 64
+
+    @property
+    def n_tdcs(self) -> int:
+        return self.vmm_n                               # 256
+
+    @property
+    def cbs_per_macro(self) -> int:
+        return self.macro_cols // self.cb_bits          # 32
+
+
+DEFAULT_CORE = CoreConfig()
+
+
+# ----------------------------------------------------------------------------
+# Macro- and core-level energy (bottom-up, residual-calibrated)
+# ----------------------------------------------------------------------------
+def macro_energy(cfg: CoreConfig = DEFAULT_CORE, activity: float = 0.5) -> Dict[str, float]:
+    mcc = cfg.macro_rows * cfg.macro_cols * activity * cfg.mcc_energy_per_act
+    drivers = cfg.macro_rows * cfg.row_driver_energy
+    taccs = cfg.cbs_per_macro * cfg.time_acc_energy
+    # Residual at the paper's reference activity (0.5): charging of the grouped
+    # row capacitors during Phase I/II + S0..S4 switch drive.
+    mcc_ref = cfg.macro_rows * cfg.macro_cols * 0.5 * cfg.mcc_energy_per_act
+    other = cfg.paper_macro_energy - (mcc_ref + drivers + taccs)
+    return dict(mcc=mcc, row_drivers=drivers, time_accumulators=taccs, macro_other=other,
+                total=mcc + drivers + taccs + other)
+
+
+def core_vmm_energy(cfg: CoreConfig = DEFAULT_CORE, activity: float = 0.5) -> Dict[str, float]:
+    """Energy of ONE full-parallel 1024x256 8-bit VMM on one core."""
+    m = macro_energy(cfg, activity)
+    macros = cfg.n_macros * m['total']
+    tdcs = cfg.n_tdcs * cfg.tdc_energy
+    in_bits = cfg.vmm_k * 8
+    out_bits = cfg.vmm_n * 8
+    io = (in_bits + out_bits) / 256.0 * cfg.io_energy_per_256b
+    # Controller/decoder residual, calibrated at reference activity.
+    m_ref = macro_energy(cfg, 0.5)
+    control = cfg.paper_core_energy - (cfg.n_macros * m_ref['total'] + tdcs + io)
+    total = macros + tdcs + io + control
+    return dict(macros=macros, tdcs=tdcs, io=io, core_control=control, total=total,
+                breakdown_macro=m)
+
+
+def core_vmm_latency(cfg: CoreConfig = DEFAULT_CORE) -> Dict[str, float]:
+    """Latency of one core-shot VMM (the <20 ns claim)."""
+    chain = cfg.macros_v * cfg.time_acc_latency
+    in_lat = (cfg.vmm_k * 8) / 256.0 * cfg.io_latency_per_256b
+    out_lat = (cfg.vmm_n * 8) / 256.0 * cfg.io_latency_per_256b
+    total = in_lat + cfg.macro_latency + chain + cfg.tdc_latency + out_lat
+    return dict(io_in=in_lat, macro=cfg.macro_latency, vtc_chain=chain,
+                tdc=cfg.tdc_latency, io_out=out_lat, total=total)
+
+
+def core_area_um2(cfg: CoreConfig = DEFAULT_CORE) -> Dict[str, float]:
+    mcc = cfg.macro_rows * cfg.macro_cols * cfg.mcc_area
+    drv = cfg.macro_rows * cfg.row_driver_area
+    tac = cfg.cbs_per_macro * cfg.time_acc_area
+    macro = mcc + drv + tac
+    total = cfg.n_macros * macro + cfg.tdc_area_total + cfg.io_area
+    return dict(macro=macro, macros=cfg.n_macros * macro, tdcs=cfg.tdc_area_total,
+                io=cfg.io_area, total=total)
+
+
+# ----------------------------------------------------------------------------
+# Headline figures
+# ----------------------------------------------------------------------------
+def ops_per_vmm(cfg: CoreConfig = DEFAULT_CORE) -> int:
+    """Multiply and add each count as one op (paper §IV-B)."""
+    return cfg.vmm_k * cfg.vmm_n * 2
+
+
+def energy_efficiency_tops_w(cfg: CoreConfig = DEFAULT_CORE, activity: float = 0.5) -> float:
+    return ops_per_vmm(cfg) / core_vmm_energy(cfg, activity)['total'] / 1e12
+
+
+def throughput_tops(cfg: CoreConfig = DEFAULT_CORE) -> float:
+    # The paper quotes throughput against the 20 ns budget (one VMM per cycle
+    # of the 50 MHz analog clock fits 20 ns).
+    return ops_per_vmm(cfg) / cfg.paper_core_latency / 1e12
+
+
+def adc_overhead_reduction(cfg: CoreConfig = DEFAULT_CORE) -> float:
+    """Fig. 7b: vs digital bit-plane weighting, which needs one conversion per
+    bit-plane column (8 per output) instead of one per output -> 1 - 1/8."""
+    return 1.0 - 1.0 / cfg.cb_bits
+
+
+def overhead_breakdown(cfg: CoreConfig = DEFAULT_CORE, activity: float = 0.5) -> Dict[str, float]:
+    """Fig. 8: fraction of core energy by function."""
+    e = core_vmm_energy(cfg, activity)
+    m = e['breakdown_macro']
+    n = cfg.n_macros
+    total = e['total']
+    return dict(
+        compute=(m['mcc'] * n) / total,
+        interconnect=((m['row_drivers'] + m['time_accumulators']) * n) / total,
+        conversion=(e['tdcs'] + m['macro_other'] * n) / total,
+        communication=e['io'] / total,
+        control=e['core_control'] / total,
+    )
+
+
+# ----------------------------------------------------------------------------
+# SOTA comparison (Fig. 1 / 6 / 7 — values digitized from the paper's charts
+# and the cited publications; 8-bit-equivalent numbers)
+# ----------------------------------------------------------------------------
+SOTA_BASELINES: List[Dict] = [
+    dict(key='tu_isscc22', ref='[15]', kind='digital CIM', tops_w=36.5, tops=2.90),
+    dict(key='jia_jssc22', ref='[16]', kind='programmable IMC', tops_w=30.0, tops=1.00),
+    dict(key='wu_isscc22', ref='[17]', kind='time-domain CIM', tops_w=37.01, tops=1.241),
+    dict(key='hsieh_isscc23', ref='[20]', kind='word-wise ACIM', tops_w=86.27, tops=1.80),
+    dict(key='si_jssc21', ref='[9]', kind='6T LCC macro', tops_w=17.5, tops=0.060),
+    dict(key='chen_capram', ref='[18]', kind='charge-domain 6T', tops_w=25.0, tops=0.030),
+    dict(key='wang_sepwl', ref='[19]', kind='separate-WL 6T', tops_w=3.1, tops=0.176),
+    dict(key='wang_c2c', ref='[7]', kind='C-2C ladder', tops_w=32.2, tops=0.100),
+]
+
+
+def sota_comparison(cfg: CoreConfig = DEFAULT_CORE) -> List[Dict]:
+    ours_e = energy_efficiency_tops_w(cfg)
+    ours_t = throughput_tops(cfg)
+    rows = []
+    for b in SOTA_BASELINES:
+        rows.append(dict(**b, energy_ratio=ours_e / b['tops_w'],
+                         throughput_ratio=ours_t / b['tops']))
+    return rows
+
+
+# ----------------------------------------------------------------------------
+# Workload mapping
+# ----------------------------------------------------------------------------
+def map_matmul(m_tokens: int, k: int, n: int, cfg: CoreConfig = DEFAULT_CORE,
+               n_cores: int = 1, activity: float = 0.5) -> Dict[str, float]:
+    """Tile an (M x K) @ (K x N) matmul onto core-shots.
+
+    Every core-shot consumes K<=1024 inputs and produces N<=256 outputs for one
+    token; vertical K-tiles are time-accumulated *inside* a shot, but K>1024
+    needs digital partial-sum adds (counted into io energy at 1 extra output
+    readback per extra K-tile)."""
+    k_tiles = math.ceil(k / cfg.vmm_k)
+    n_tiles = math.ceil(n / cfg.vmm_n)
+    shots = m_tokens * k_tiles * n_tiles
+    e_shot = core_vmm_energy(cfg, activity)['total']
+    extra_io = (k_tiles - 1) * n_tiles * m_tokens * (cfg.vmm_n * 8 / 256.0) \
+        * cfg.io_energy_per_256b
+    energy = shots * e_shot + extra_io
+    lat_shot = cfg.paper_core_latency
+    latency = math.ceil(shots / n_cores) * lat_shot
+    useful_ops = 2.0 * m_tokens * k * n
+    return dict(shots=shots, energy=energy, latency=latency,
+                useful_ops=useful_ops,
+                utilization=useful_ops / (shots * ops_per_vmm(cfg)),
+                effective_tops_w=useful_ops / energy / 1e12)
+
+
+def map_architecture(arch_cfg, cfg: CoreConfig = DEFAULT_CORE,
+                     activity: float = 0.5,
+                     target_tokens_per_s: float = 1e5) -> Dict[str, float]:
+    """Per-decode-token AiDAC cost of an assigned architecture.
+
+    ``arch_cfg`` is a ``repro.configs.base.ArchConfig``. Embedding lookup is
+    excluded (not a VMM); lm_head included."""
+    mms = arch_cfg.per_token_matmuls()       # list of (name, K, N, count)
+    total_e = 0.0
+    total_shots = 0
+    useful = 0.0
+    for _, kk, nn, cnt in mms:
+        r = map_matmul(1, kk, nn, cfg, activity=activity)
+        total_e += r['energy'] * cnt
+        total_shots += r['shots'] * cnt
+        useful += r['useful_ops'] * cnt
+    lat = total_shots * cfg.paper_core_latency   # single-core serial bound
+    cores = max(1, math.ceil(target_tokens_per_s * lat / 1.0))
+    return dict(energy_per_token=total_e, shots_per_token=total_shots,
+                useful_ops_per_token=useful,
+                effective_tops_w=useful / total_e / 1e12,
+                single_core_latency_per_token=lat,
+                cores_for_target=math.ceil(target_tokens_per_s /
+                                           (1.0 / lat)) if lat > 0 else 1,
+                utilization=useful / (total_shots * ops_per_vmm(cfg)))

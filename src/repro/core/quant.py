@@ -1,0 +1,133 @@
+"""Int8 symmetric quantization primitives — the digital contract of the YOCO/AiDAC
+execution model.
+
+The paper's array computes 8-bit VMM with a *single* input conversion (Eq. 2,
+DAC-less row-capacitor sharing) and a *single* output conversion (TDC). The exact
+digital twin of that contract is:
+
+    y = dequant( int32_accumulate( q8(x) @ q8(w) ) )
+
+with no intermediate rounding. This module provides the quantize/dequantize
+primitives, the straight-through-estimator fake-quant used for QAT, and the
+int8-accumulating dot used by ``yoco_linear`` in ``w8a8`` mode.
+
+Conventions
+-----------
+* Symmetric signed quantization to ``[-(2^(b-1)-1), 2^(b-1)-1]`` (±127 for b=8);
+  code -128 is unused so negation is exact, mirroring the paper's sign-magnitude
+  treatment of weights in the analog array.
+* ``scale`` always has the same rank as ``x`` (broadcastable), so per-tensor,
+  per-channel and per-token quantization share one code path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Axis = Union[None, int, Sequence[int]]
+
+INT8_MAX = 127.0
+
+
+def _reduce_axes(x: jnp.ndarray, axis: Axis) -> Tuple[int, ...]:
+    """Axes reduced when computing the scale. ``axis`` lists the axes that KEEP
+    their own scale (quantization granularity); everything else is reduced."""
+    if axis is None:
+        return tuple(range(x.ndim))
+    if isinstance(axis, int):
+        axis = (axis,)
+    keep = {a % x.ndim for a in axis}
+    return tuple(a for a in range(x.ndim) if a not in keep)
+
+
+def absmax_scale(x: jnp.ndarray, axis: Axis = None, bits: int = 8,
+                 eps: float = 1e-8) -> jnp.ndarray:
+    """Symmetric absmax scale. ``axis`` = axes that keep independent scales.
+
+    Matches Eq. 2's full-scale mapping IN/(2^N-1)*VDD: the largest magnitude maps
+    to the top code.
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    red = _reduce_axes(x, axis)
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=red, keepdims=True)
+    return jnp.maximum(amax, eps) / qmax
+
+
+def quantize(x: jnp.ndarray, scale: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    """Round-to-nearest symmetric quantization. Returns int8 for bits<=8 else int32."""
+    qmax = 2 ** (bits - 1) - 1
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax)
+    return q.astype(jnp.int8 if bits <= 8 else jnp.int32)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray,
+               dtype: jnp.dtype = jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def fake_quant(x: jnp.ndarray, axis: Axis = None, bits: int = 8) -> jnp.ndarray:
+    """Quantize-dequantize with a straight-through estimator.
+
+    Forward: exact w8/a8 rounding as the analog array would see it.
+    Backward: identity within the clip range (STE), zero outside — the standard
+    QAT estimator; lets us *train* networks that later deploy onto the
+    YOCO/AiDAC array.
+    """
+    scale = absmax_scale(x, axis, bits)
+    return dequantize(quantize(x, scale, bits), scale, x.dtype)
+
+
+def _fake_quant_fwd(x, axis, bits):
+    scale = absmax_scale(x, axis, bits)
+    y = dequantize(quantize(x, scale, bits), scale, x.dtype)
+    # STE with clip mask: pass gradients only where |x| <= absmax (always true for
+    # absmax scaling, but keep the mask so custom clip ranges stay correct).
+    qmax = float(2 ** (bits - 1) - 1)
+    mask = (jnp.abs(x.astype(jnp.float32)) <= scale * qmax + 1e-6)
+    return y, mask
+
+
+def _fake_quant_bwd(axis, bits, mask, g):
+    return (g * mask.astype(g.dtype),)
+
+
+fake_quant.defvjp(_fake_quant_fwd, _fake_quant_bwd)
+
+
+def int8_dot(xq: jnp.ndarray, wq: jnp.ndarray) -> jnp.ndarray:
+    """int8 x int8 -> int32 matmul: the MXU-systolic twin of the paper's
+    column charge-share accumulation (Eq. 3). Never rounds mid-reduction —
+    that is the YOCO property."""
+    return jax.lax.dot_general(
+        xq, wq,
+        dimension_numbers=(((xq.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def w8a8_matmul(x: jnp.ndarray, w: jnp.ndarray, *,
+                out_dtype: jnp.dtype = jnp.float32) -> jnp.ndarray:
+    """Dynamic-quantized W8A8 matmul. Per-token activation scales (the DAC-less
+    input conversion happens once per row) x per-out-channel weight scales.
+
+    x: (..., K) float; w: (K, N) float. Returns (..., N) float.
+    """
+    sx = absmax_scale(x, axis=tuple(range(x.ndim - 1)))     # per-token
+    sw = absmax_scale(w, axis=1)                            # per-out-channel
+    xq = quantize(x, sx)
+    wq = quantize(w, sw)
+    acc = int8_dot(xq, wq)                                  # int32, exact
+    # Single output conversion — the "TDC" of the digital pipeline.
+    # sx: (..., 1) per-token; sw: (1, N) per-out-channel — both broadcast.
+    return (acc.astype(jnp.float32) * sx * sw).astype(out_dtype)
+
+
+def quant_error_bound(bits: int = 8) -> float:
+    """Worst-case relative rounding error of symmetric b-bit quantization
+    (half an LSB of full scale). Used by property tests."""
+    return 0.5 / (2 ** (bits - 1) - 1)

@@ -1,0 +1,217 @@
+"""``yoco_linear`` — the paper's technique as a first-class, composable layer.
+
+Every matmul in every assigned architecture routes through here. Execution modes:
+
+  bf16        digital baseline (what the paper compares against)
+  qat         quantization-aware training: fake-quant weights (per-out-channel)
+              and activations (per-token) with straight-through gradients, so the
+              trained network deploys losslessly onto the 8-bit array
+  w8a8        YOCO inference: activations dynamically quantized ONCE (Eq. 2),
+              int8 x int8 -> int32 matmul with no mid-reduction rounding
+              (Eq. 3/4 + time-domain accumulation), ONE dequant at the end (TDC).
+              Uses the Pallas TPU kernel when ``use_pallas=True``; an XLA int8
+              dot otherwise (CPU dry-runs / non-TPU backends).
+  analog_sim  w8a8 + the paper-calibrated analog error model from
+              ``core.analog.error_model_summary`` + 8-bit TDC output
+              quantization — the accuracy-fidelity mode used to reproduce the
+              "< 0.5% inference accuracy loss" claim.
+
+Weights can be given as plain float arrays (dynamic weight quantization — QAT /
+training-time) or pre-quantized ``QuantizedWeight`` pytrees (serving: int8
+weights resident in memory, the in-situ analogue; also halves HBM traffic on
+decode — see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import analog, quant
+
+
+class QuantizedWeight(NamedTuple):
+    """int8 weight + per-out-channel scale: weights 'in situ', pre-converted."""
+    wq: jnp.ndarray        # (..., K, N) int8
+    scale: jnp.ndarray     # (..., 1, N) f32
+
+
+def prequantize_weight(w: jnp.ndarray) -> QuantizedWeight:
+    """Per-out-channel scales; the contraction dim is axis -2 (layer stacks
+    (L, K, N) keep a scale per (layer, out-channel))."""
+    keep = tuple(a for a in range(w.ndim) if a != w.ndim - 2)
+    sw = quant.absmax_scale(w, axis=keep)
+    return QuantizedWeight(quant.quantize(w, sw), sw)
+
+
+@dataclasses.dataclass(frozen=True)
+class YocoConfig:
+    mode: str = 'bf16'             # bf16 | qat | w8a8 | analog_sim
+    bits: int = 8
+    use_pallas: bool = False       # True on TPU / in kernel tests (interpret)
+    tdc_bits: int = 8              # analog_sim output conversion width
+    noise_seed: int = 0
+    compute_dtype: jnp.dtype = jnp.bfloat16
+
+
+DEFAULT_YOCO = YocoConfig()
+
+
+# ----------------------------------------------------------------------------
+# w8a8 forward with straight-through backward (training *through* the array)
+# ----------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _w8a8_ste(x: jnp.ndarray, w: jnp.ndarray, use_pallas: bool) -> jnp.ndarray:
+    return _w8a8_fwd_impl(x, w, use_pallas)
+
+
+def _w8a8_fwd_impl(x, w, use_pallas):
+    if use_pallas:
+        from repro.kernels import ops  # lazy: kernels import pallas
+        return ops.yoco_vmm(x, w)
+    return quant.w8a8_matmul(x, w)
+
+
+def _w8a8_fwd(x, w, use_pallas):
+    return _w8a8_fwd_impl(x, w, use_pallas), (x, w)
+
+
+def _w8a8_bwd(use_pallas, res, g):
+    x, w = res
+    g = g.astype(jnp.float32)
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    g2 = g.reshape(-1, g.shape[-1])
+    dx = (g2 @ w.astype(jnp.float32).T).reshape(x.shape).astype(x.dtype)
+    dw = (x2.T @ g2).astype(w.dtype)
+    return dx, dw
+
+
+_w8a8_ste.defvjp(_w8a8_fwd, _w8a8_bwd)
+
+
+# ----------------------------------------------------------------------------
+# analog_sim noise model (network-level twin of core.analog)
+# ----------------------------------------------------------------------------
+def _analog_noise(y: jnp.ndarray, k_channels: int, n_ktiles: int,
+                  key: jax.Array, cfg: YocoConfig) -> jnp.ndarray:
+    """Inject paper-calibrated error into the dequantized output ``y``.
+
+    Error components are expressed relative to the layer's analog full scale
+    (per-tensor absmax of the ideal output), exactly how Fig. 5e normalizes."""
+    em = analog.error_model_summary()
+    fs = jnp.max(jnp.abs(y)) + 1e-9
+    k1, k2, k3 = jax.random.split(key, 3)
+    # deterministic share-line gain loss (Eq. 3 parasitics)
+    y = y * (1.0 - em['mac_gain_loss'])
+    # stochastic: share-line kT/C + input-conversion noise folded over channels
+    sigma = fs * jnp.sqrt(em['mac_sigma_fs'] ** 2 +
+                          em['input_sigma_fs'] ** 2 / max(k_channels, 1))
+    y = y + sigma * jax.random.normal(k1, y.shape)
+    # time-domain accumulation: per-K-tile VTC gain error
+    if n_ktiles > 1:
+        g = 1.0 + em['time_sigma_fs'] * jax.random.normal(k2, y.shape)
+        y = y * g
+    # TDC: the single 8-bit output conversion
+    scale = quant.absmax_scale(y, axis=None, bits=cfg.tdc_bits)
+    y = quant.dequantize(quant.quantize(y, scale, cfg.tdc_bits), scale)
+    del k3
+    return y
+
+
+# ----------------------------------------------------------------------------
+# public layer
+# ----------------------------------------------------------------------------
+def yoco_matmul(x: jnp.ndarray, w: Union[jnp.ndarray, QuantizedWeight],
+                cfg: YocoConfig = DEFAULT_YOCO,
+                noise_key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """(..., K) @ (K, N) under the configured execution mode. Returns compute
+    dtype (bf16 by default) except analog_sim diagnostics, which stay f32."""
+    mode = cfg.mode
+    if isinstance(w, QuantizedWeight):
+        if mode in ('bf16', 'qat'):
+            w = quant.dequantize(w.wq, w.scale, jnp.float32)
+        else:
+            return _w8a8_prequant(x, w, cfg, noise_key)
+
+    if mode == 'bf16':
+        return jnp.matmul(x.astype(cfg.compute_dtype),
+                          w.astype(cfg.compute_dtype))
+    if mode == 'qat':
+        xq = quant.fake_quant(x, axis=tuple(range(x.ndim - 1)), bits=cfg.bits)
+        wq = quant.fake_quant(w, axis=1, bits=cfg.bits)
+        return jnp.matmul(xq.astype(cfg.compute_dtype),
+                          wq.astype(cfg.compute_dtype))
+    if mode == 'w8a8':
+        return _w8a8_ste(x, w, cfg.use_pallas).astype(cfg.compute_dtype)
+    if mode == 'analog_sim':
+        y = _w8a8_ste(x, w, cfg.use_pallas).astype(jnp.float32)
+        if noise_key is None:
+            noise_key = jax.random.fold_in(jax.random.key(cfg.noise_seed),
+                                           x.shape[-1] * 131 + w.shape[-1])
+        k = x.shape[-1]
+        y = _analog_noise(y, k, -(-k // (analog.MACRO_ROWS * 8)), noise_key, cfg)
+        return y.astype(cfg.compute_dtype)
+    raise ValueError(f'unknown yoco mode: {mode}')
+
+
+def _w8a8_prequant(x, w: QuantizedWeight, cfg: YocoConfig,
+                   noise_key: Optional[jax.Array]) -> jnp.ndarray:
+    """Serving path: weights already int8 in memory (in-situ)."""
+    sx = quant.absmax_scale(x, axis=tuple(range(x.ndim - 1)), bits=cfg.bits)
+    xq = quant.quantize(x, sx, cfg.bits)
+    if cfg.use_pallas:
+        from repro.kernels import ops
+        acc = ops.int8_matmul(xq, w.wq)
+    else:
+        acc = quant.int8_dot(xq, w.wq)
+    y = acc.astype(jnp.float32) * sx * w.scale
+    if cfg.mode == 'analog_sim':
+        if noise_key is None:
+            noise_key = jax.random.fold_in(jax.random.key(cfg.noise_seed),
+                                           x.shape[-1] * 131 + w.wq.shape[-1])
+        k = x.shape[-1]
+        y = _analog_noise(y, k, -(-k // (analog.MACRO_ROWS * 8)), noise_key, cfg)
+    return y.astype(cfg.compute_dtype)
+
+
+def linear(x: jnp.ndarray, w, b: Optional[jnp.ndarray] = None,
+           cfg: YocoConfig = DEFAULT_YOCO,
+           noise_key: Optional[jax.Array] = None) -> jnp.ndarray:
+    y = yoco_matmul(x, w, cfg, noise_key)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+_WEIGHT_NAMES = ('wq', 'wk', 'wv', 'wo', 'w_gate', 'w_up', 'w_down', 'w_in',
+                 'w_out', 'sh_gate', 'sh_up', 'sh_in', 'sh_down', 'sh_out',
+                 'w_dq', 'w_uq', 'w_dkv', 'w_ukv', 'in_proj', 'out_proj',
+                 'lm_head')
+
+
+def quantize_tree(params, min_size: int = 1024):
+    """Convert every linear weight into a QuantizedWeight — the 'load the
+    network into the array' step for serving. Dispatch is by parameter NAME
+    (biases/norms/embeddings stay float; stacked (L, K, N) weights get
+    per-(layer, out-channel) scales). MoE expert stacks (E/L, E, d, f) and
+    codebook heads keep their float path (einsum consumers)."""
+    def conv(path, leaf):
+        names = [str(getattr(p, 'key', getattr(p, 'idx', p))) for p in path]
+        name = names[-1]
+        if (isinstance(leaf, jnp.ndarray)
+                and jnp.issubdtype(leaf.dtype, jnp.floating)
+                and leaf.size >= min_size
+                and name in _WEIGHT_NAMES
+                and leaf.ndim in (2, 3)
+                and not (name == 'lm_head' and leaf.ndim == 3)
+                and not ('moe' in names
+                         and name in ('w_gate', 'w_up', 'w_down', 'w_in',
+                                      'w_out'))):
+            return prequantize_weight(leaf)
+        return leaf
+    return jax.tree_util.tree_map_with_path(
+        conv, params, is_leaf=lambda l: isinstance(l, QuantizedWeight))

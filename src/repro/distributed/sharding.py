@@ -1,0 +1,268 @@
+"""Logical-axis sharding rules: every parameter / batch / cache / optimizer
+leaf gets a ``PartitionSpec`` from its tree path, MaxText-style.
+
+Mesh axes
+---------
+  'pod'    cross-pod data parallelism (multi-pod mesh only; DCI links)
+  'data'   in-pod data parallel + FSDP parameter sharding
+  'model'  tensor parallel / expert parallel / head sharding (ICI)
+
+Conventions (DESIGN.md §4):
+  * column-parallel inputs  (d_in, d_out): P('data', 'model')
+  * row-parallel outputs    (d_in, d_out): P('model', 'data')
+  * experts (E, ...):                      P('model', ...)  [EP == TP axis]
+  * stacked layer dims get a leading None (lax.scan axis is unsharded)
+  * batch shards over ('pod', 'data'); long-context (batch < dp) caches
+    shard the *sequence* axis over 'data' instead (sequence parallelism)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# ----------------------------------------------------------------------------
+# path helpers
+# ----------------------------------------------------------------------------
+def _key_str(p) -> str:
+    for attr in ('key', 'name', 'idx'):                 # Dict/GetAttr/Index
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
+def _path_str(path) -> str:
+    return '/'.join(_key_str(p) for p in path)
+
+
+# parameters whose *last two* dims are (d_in, d_out) column-parallel
+_COL_NAMES = ('wq', 'wk', 'wv', 'w_gate', 'w_up', 'w_in', 'sh_gate', 'sh_up',
+              'sh_in', 'w_dq', 'w_uq', 'w_dkv', 'w_ukv', 'in_proj')
+# row-parallel (contracting dim sharded over 'model')
+_ROW_NAMES = ('wo', 'w_down', 'w_out', 'sh_down', 'sh_out', 'out_proj')
+# per-head / per-channel vectors sharded over 'model'
+_TP_VECS = ('bq', 'bk', 'bv', 'conv_b', 'a_log', 'dt_bias', 'd_skip',
+            'gate_norm')
+
+
+def _core_spec(path: str, leaf) -> Tuple:
+    """Spec for the *unstacked* trailing dims of a parameter leaf."""
+    name = path.split('/')[-1]
+    nd = np.ndim(leaf)
+    if 'moe' in path and name in ('w_gate', 'w_up', 'w_in'):
+        return ('model', 'data', None)               # (E, d, f): EP + FSDP
+    if 'moe' in path and name in ('w_down', 'w_out'):
+        return ('model', None, 'data')               # (E, f, d)
+    if name == 'router':
+        return ('data', None)
+    if name == 'embed':
+        if nd >= 3:                                  # (CB, V, d)
+            return (None, 'model', None)
+        return ('model', None)                       # (V, d): vocab over TP
+        # (embed dim deliberately unsharded: a second sharded dim forces an
+        # involuntary full-remat of the gather in SPMD — see EXPERIMENTS §Perf)
+    if name == 'lm_head':
+        if nd >= 3:                                  # (CB, d, V)
+            return (None, 'data', 'model')
+        return ('data', 'model')                     # logits vocab-sharded
+    if name == 'conv_w':
+        return (None, 'model')                       # (W, conv_dim)
+    if name in _COL_NAMES:
+        return ('data', 'model')
+    if name in _ROW_NAMES:
+        return ('model', 'data')
+    if name in _TP_VECS:
+        return ('model',)
+    return tuple([None] * 1)                         # norms etc: replicated
+
+
+# stacked-prefix detection: these subtrees carry a leading scan/site dim
+_STACKED_PREFIXES = ('layers', 'dense_prefix')
+
+
+def _axis_size(mesh: Optional[Mesh], axis) -> int:
+    if mesh is None or axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return int(mesh.shape[axis])
+
+
+def sanitize(spec: P, shape, mesh: Optional[Mesh]) -> P:
+    """Drop spec axes that do not divide the dim evenly (jit in_shardings
+    requires exact divisibility): qwen2-moe's 60 experts over a 16-way EP
+    axis, 8-KV-head caches over TP=16, batch-1 long-context, etc."""
+    if mesh is None:
+        return spec
+    out = []
+    for d, ax in enumerate(tuple(spec) + (None,) * (len(shape) - len(spec))):
+        sz = _axis_size(mesh, ax)
+        out.append(ax if sz > 1 and shape[d] % sz == 0 else None)
+    return P(*out)
+
+
+def _fsdp2d_spec(path: str, leaf) -> Tuple:
+    """'fsdp2d' layout (§Perf): every big matrix is fully sharded over BOTH
+    mesh axes on ONE dim (ZeRO-3-style 256-way FSDP); no tensor-parallel
+    activation all-reduces exist. Experts keep EP over 'model' (the
+    all_to_all path); embeddings/lm_head keep vocab over 'model' so logits
+    stay vocab-sharded for the loss."""
+    name = path.split('/')[-1]
+    nd = np.ndim(leaf)
+    both = ('data', 'model')
+    if 'moe' in path and name in ('w_gate', 'w_up', 'w_in'):
+        return ('model', 'data', None)
+    if 'moe' in path and name in ('w_down', 'w_out'):
+        return ('model', None, 'data')
+    # (tried: experts EP-only/'stationary' — saves only ~6 GiB/step at
+    # grad_accum=1 but replicates expert optimizer state over 'data',
+    # +17 GiB/device: refuted, see EXPERIMENTS §Perf qwen2-moe iter 6)
+    if name == 'router':
+        return (both, None)
+    if name == 'embed':
+        return (None, 'model', 'data') if nd >= 3 else ('model', 'data')
+    if name == 'lm_head':
+        return (None, 'data', 'model') if nd >= 3 else ('data', 'model')
+    if name == 'conv_w':
+        return (None, both)
+    if name in _COL_NAMES or name in _ROW_NAMES:
+        # shard across all devices on a dim that divides evenly (prefer the
+        # larger); fall back to single-axis sharding (e.g. d_ff=29568 does
+        # not divide 256 but divides 16)
+        d0, d1 = np.shape(leaf)[-2:]
+        order = [(-2, d0), (-1, d1)] if d0 >= d1 else [(-1, d1), (-2, d0)]
+        for axes in (both, ('model',), ('data',)):
+            sz = 16 * 16 if axes == both else 16
+            for dim, ext in order:
+                if ext % sz == 0:
+                    sp = [None, None]
+                    sp[dim] = axes if axes == both else axes[0]
+                    return tuple(sp)
+        return (None, None)
+    if name in _TP_VECS:
+        return (both,)
+    return (None,)
+
+
+def param_specs(params: Any, mesh: Optional[Mesh] = None,
+                layout: str = 'tp') -> Any:
+    """PartitionSpec pytree matching ``params``. ``layout``:
+    'tp' (Megatron TP x FSDP, the baseline) | 'fsdp2d' (§Perf iteration)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    rule = _core_spec if layout == 'tp' else _fsdp2d_spec
+    specs = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        parts = ps.split('/')
+        name = parts[-1]
+        # pre-quantized serving params: QuantizedWeight(wq, scale) children
+        # inherit the parent weight's rule — ONLY when the parent is a
+        # weight name (the attention q-projection is itself named 'wq')
+        if name == 'wq' and len(parts) >= 2 and parts[-2] in \
+                _COL_NAMES + _ROW_NAMES + ('lm_head',):
+            ps = '/'.join(parts[:-1])
+            name = parts[-2]
+        elif name == 'scale' and len(parts) >= 2 and parts[-2] in \
+                _COL_NAMES + _ROW_NAMES + ('lm_head',):
+            core = rule('/'.join(parts[:-1]), np.zeros((1, 1)))
+            last = core[-1] if len(core) >= 2 else None
+            specs.append(sanitize(P(None, last), np.shape(leaf), mesh))
+            continue
+        nd = np.ndim(leaf)
+        stacked = parts[0] in _STACKED_PREFIXES
+        if parts[0] == 'shared' and parts[-1] == 'in_proj' and nd == 3:
+            specs.append(sanitize(P(None, 'data', 'model'), np.shape(leaf),
+                                  mesh))
+            continue
+        if name in ('embed', 'lm_head') or parts[0] == 'final_norm':
+            core = rule(ps if name in ('embed', 'lm_head') else 'final_norm',
+                        leaf)
+            specs.append(sanitize(P(*core[:nd]), np.shape(leaf), mesh)
+                         if name in ('embed', 'lm_head') else P())
+            continue
+        core = list(rule(ps, leaf))
+        if stacked:
+            core = [None] + core
+        # pad/truncate to leaf rank
+        core = (core + [None] * nd)[:nd]
+        specs.append(sanitize(P(*core), np.shape(leaf), mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_specs(cfg, dp_axes: Tuple[str, ...]) -> dict:
+    """Specs for a training batch dict(inputs, labels)."""
+    dp = P(dp_axes)
+    if cfg.input_kind == 'embeddings':
+        return dict(inputs=P(dp_axes, None, None), labels=P(dp_axes, None))
+    if cfg.input_kind == 'codebooks':
+        return dict(inputs=P(dp_axes, None, None),
+                    labels=P(dp_axes, None, None))
+    del dp
+    return dict(inputs=P(dp_axes, None), labels=P(dp_axes, None))
+
+
+def cache_specs(cache: Any, *, batch: int, dp_axes: Tuple[str, ...],
+                mesh: Mesh, tp_axis: str = 'model') -> Any:
+    """KV/SSM cache specs. If the batch is too small to fill the dp axes
+    (long-context), shard the sequence axis over 'data' instead (SP)."""
+    dp_size = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    seq_parallel = batch < dp_size
+
+    def spec_for(path, leaf):
+        name = _path_str(path).split('/')[-1]
+        nd = np.ndim(leaf)
+        shape = np.shape(leaf)
+        if name in ('k', 'v'):            # (L|sites, B, S, Hkv, dh)
+            heads_ok = shape[3] % mesh.shape[tp_axis] == 0
+            if seq_parallel:
+                sp = P(None, None, dp_axes, tp_axis if heads_ok else None,
+                       None)
+            elif heads_ok:
+                sp = P(None, dp_axes, None, tp_axis, None)
+            else:
+                # few-KV-head GQA (e.g. 8 heads, TP=16): shard the sequence
+                # dim over TP instead — partial-softmax attention, GSPMD
+                # inserts the stat reductions
+                sp = P(None, dp_axes, tp_axis, None, None)
+            return sanitize(sp, shape, mesh)
+        if name == 'ckv' or name == 'krope':   # (L, B, S, r)
+            if seq_parallel:
+                sp = P(None, None, dp_axes, None)
+            else:
+                sp = P(None, dp_axes, tp_axis, None)   # MLA: S over TP
+            return sanitize(sp, shape, mesh)
+        if name == 'conv':                # (L, B, W-1, C)
+            return sanitize(P(None, dp_axes if not seq_parallel else None,
+                              None, tp_axis), shape, mesh)
+        if name == 'ssm':                 # (L, B, H, Pdim, N)
+            return sanitize(P(None, dp_axes if not seq_parallel else None,
+                              tp_axis, None, None), shape, mesh)
+        return P(*([None] * nd))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(p, l) for p, l in flat])
+
+
+def opt_specs(pspecs: Any, opt_state) -> Any:
+    """Optimizer state mirrors parameter sharding; scalars replicated."""
+    import repro.optim.adamw as adamw
+    ef = None if opt_state.ef is None else pspecs
+    return adamw.OptState(step=P(), mu=pspecs, nu=pspecs, ef=ef)
+
+
+# ----------------------------------------------------------------------------
+# NamedSharding helpers
+# ----------------------------------------------------------------------------
+def to_shardings(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def dp_axes_of(mesh: Mesh) -> Tuple[str, ...]:
+    return ('pod', 'data') if 'pod' in mesh.axis_names else ('data',)

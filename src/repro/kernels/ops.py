@@ -1,0 +1,91 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles: backend dispatch (compiled on TPU, ``interpret=True`` everywhere
+else so CPU tests execute the *same kernel body*), padding to MXU-aligned
+block multiples, and VMEM-budget-aware block-size selection.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import quantize as _quantize
+from repro.kernels import yoco_vmm as _yoco
+
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024   # leave headroom below the 16 MiB VMEM
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != 'tpu'
+
+
+def _pad_to(x: jnp.ndarray, mult0: int, mult1: int) -> jnp.ndarray:
+    p0 = (-x.shape[0]) % mult0
+    p1 = (-x.shape[1]) % mult1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def _pick_bm(k: int, itemsize: int = 4) -> int:
+    """Row-block height so a (bm, K) block fits the VMEM budget."""
+    bm = 128
+    while bm > 8 and bm * k * itemsize > VMEM_BUDGET_BYTES // 2:
+        bm //= 2
+    return bm
+
+
+def quantize_rows(x: jnp.ndarray):
+    """(..., K) float -> (int8 codes, per-token scale). Leading dims folded."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    bm = _pick_bm(k)
+    m = x2.shape[0]
+    xp = _pad_to(x2, bm, 1)
+    xq, s = _quantize.quantize_rows(xp, bm=bm, interpret=_interpret())
+    return (xq[:m].reshape(*lead, k),
+            s[:m].reshape(*lead, 1))
+
+
+def int8_matmul(xq: jnp.ndarray, wq: jnp.ndarray) -> jnp.ndarray:
+    """int8 (..., K) @ int8 (K, N) -> int32, via the tiled MXU kernel."""
+    lead = xq.shape[:-1]
+    k = xq.shape[-1]
+    n = wq.shape[-1]
+    x2 = xq.reshape(-1, k)
+    m = x2.shape[0]
+    bm = min(_yoco.DEFAULT_BM, max(8, 1 << (m - 1).bit_length()))
+    bk = min(_yoco.DEFAULT_BK, max(128, 1 << (k - 1).bit_length()))
+    bn = min(_yoco.DEFAULT_BN, max(128, 1 << (n - 1).bit_length()))
+    xp = _pad_to(x2, bm, bk)
+    wp = _pad_to(wq, bk, bn)
+    out = _yoco.int8_matmul(xp, wp, bm=bm, bn=bn, bk=bk,
+                            interpret=_interpret())
+    return out[:m, :n].reshape(*lead, n)
+
+
+def yoco_vmm(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """End-to-end YOCO matmul: fused dynamic quantization + int8 MXU matmul +
+    single fused dequant epilogue. x: (..., K) float, w: (K, N) float."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w.shape[-1]
+    xq, sx = quantize_rows(x)
+    wq_t, sw_t = quantize_rows(w.T)          # per-out-channel scales
+    x2 = xq.reshape(-1, k)
+    s2 = sx.reshape(-1, 1)
+    m = x2.shape[0]
+    bm = min(_yoco.DEFAULT_BM, max(8, 1 << (m - 1).bit_length()))
+    bk = min(_yoco.DEFAULT_BK, max(128, 1 << (k - 1).bit_length()))
+    bn = min(_yoco.DEFAULT_BN, max(128, 1 << (n - 1).bit_length()))
+    xp = _pad_to(x2, bm, bk)
+    wp = _pad_to(wq_t.T, bk, bn)
+    sp = _pad_to(s2, bm, 1)
+    swp = _pad_to(sw_t.T, 1, bn)
+    out = _yoco.yoco_vmm_int8(xp, wp, sp, swp, bm=bm, bn=bn, bk=bk,
+                              interpret=_interpret())
+    return out[:m, :n].reshape(*lead, n)

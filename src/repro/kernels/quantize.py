@@ -1,0 +1,53 @@
+"""Pallas TPU kernel for fused row-wise dynamic quantization — the DAC-less
+input conversion (paper Eq. 2) of the digital pipeline.
+
+One pass over the activations in VMEM produces both the int8 codes and the
+per-token scale; the activation tensor is read from HBM exactly once and the
+int8 result is 4x smaller going back — the conversion happens *once*, at the
+array boundary, exactly like the grouped row capacitors convert the digital
+input as a side effect of loading it.
+
+Grid: (M/bm,) with the full K extent of a row block in VMEM (the wrapper
+shrinks bm for very wide rows so the block stays within the VMEM budget).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INT8_MAX = 127.0
+
+
+def _quantize_kernel(x_ref, xq_ref, scale_ref):
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / INT8_MAX
+    q = jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX)
+    xq_ref[...] = q.astype(jnp.int8)
+    scale_ref[...] = scale
+
+
+@functools.partial(jax.jit, static_argnames=('bm', 'interpret'))
+def quantize_rows(x: jnp.ndarray, *, bm: int = 128,
+                  interpret: bool = False):
+    """x: (M, K) float -> (xq int8 (M, K), scale f32 (M, 1)). M % bm == 0."""
+    m, k = x.shape
+    assert m % bm == 0, (m, bm)
+    return pl.pallas_call(
+        _quantize_kernel,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.int8),
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Pallas kernels. Every kernel test sweeps shapes
+and dtypes and asserts allclose against these."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+def quantize_rows_ref(x: jnp.ndarray):
+    x = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / INT8_MAX
+    q = jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, scale
+
+
+def int8_matmul_ref(xq: jnp.ndarray, wq: jnp.ndarray) -> jnp.ndarray:
+    return jnp.matmul(xq.astype(jnp.int32), wq.astype(jnp.int32))
+
+
+def yoco_vmm_int8_ref(xq, wq, sx, sw) -> jnp.ndarray:
+    acc = int8_matmul_ref(xq, wq)
+    return acc.astype(jnp.float32) * sx * sw
+
+
+def yoco_vmm_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """End-to-end oracle: dynamic per-token/per-channel quantized matmul."""
+    xq, sx = quantize_rows_ref(x)
+    wq_t, sw_t = quantize_rows_ref(w.T)      # per-out-channel == rows of w.T
+    acc = int8_matmul_ref(xq, wq_t.T)
+    return acc.astype(jnp.float32) * sx * sw_t.T

@@ -1,0 +1,390 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST run before any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, and dump the artifacts the roofline analysis reads.
+
+For each cell this produces a JSON under ``experiments/dryrun/<mesh>/``:
+  * memory_analysis (bytes per device: args/outputs/temps/peak)
+  * cost_analysis   (HLO flops / bytes accessed / transcendentals)
+  * collective operand bytes parsed from the post-SPMD HLO, per op kind,
+    with wire-byte estimates from replica-group sizes
+  * static workload facts (params, model flops) for the roofline ratio
+
+Usage:
+  python -m repro.launch.dryrun --arch stablelm-1.6b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single|multi|both]
+  python -m repro.launch.dryrun --all --fast   # skip cells already done
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core.yoco_linear import YocoConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as model_mod
+from repro.models.model import ModelRuntime
+from repro.optim import adamw
+from repro.runtime import serve_step as SS
+from repro.runtime import train_step as TS
+from repro.distributed import sharding
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), '..', '..', '..',
+                       'experiments', 'dryrun')
+
+
+# ----------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ----------------------------------------------------------------------------
+def input_specs(cfg, shape_name: str) -> dict:
+    sh = configs.SHAPES[shape_name]
+    b, s = sh['global_batch'], sh['seq_len']
+    if sh['kind'] == 'train':
+        if cfg.input_kind == 'embeddings':
+            return dict(
+                inputs=jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16),
+                labels=jax.ShapeDtypeStruct((b, s), jnp.int32))
+        if cfg.input_kind == 'codebooks':
+            return dict(
+                inputs=jax.ShapeDtypeStruct((b, s, cfg.n_codebooks), jnp.int32),
+                labels=jax.ShapeDtypeStruct((b, s, cfg.n_codebooks), jnp.int32))
+        return dict(inputs=jax.ShapeDtypeStruct((b, s), jnp.int32),
+                    labels=jax.ShapeDtypeStruct((b, s), jnp.int32))
+    if sh['kind'] == 'prefill':
+        if cfg.input_kind == 'embeddings':
+            return dict(inputs=jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                    jnp.bfloat16))
+        if cfg.input_kind == 'codebooks':
+            return dict(inputs=jax.ShapeDtypeStruct((b, s, cfg.n_codebooks),
+                                                    jnp.int32))
+        return dict(inputs=jax.ShapeDtypeStruct((b, s), jnp.int32))
+    # decode: one new token against a seq_len-deep cache
+    if cfg.input_kind == 'embeddings':
+        tok = jax.ShapeDtypeStruct((b, cfg.d_model), jnp.bfloat16)
+    elif cfg.input_kind == 'codebooks':
+        tok = jax.ShapeDtypeStruct((b, cfg.n_codebooks), jnp.int32)
+    else:
+        tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+    return dict(token=tok, pos=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+# grad-accumulation per train cell: microbatching keeps the dominant
+# activation working set ~1/A (DESIGN.md §4); chosen so the global
+# microbatch still divides both meshes' dp extents (16 and 32).
+TRAIN_GRAD_ACCUM = 8
+
+
+# ----------------------------------------------------------------------------
+# HLO collective parsing
+# ----------------------------------------------------------------------------
+_DTYPE_BYTES = {
+    'pred': 1, 's8': 1, 'u8': 1, 's16': 2, 'u16': 2, 'bf16': 2, 'f16': 2,
+    's32': 4, 'u32': 4, 'f32': 4, 's64': 8, 'u64': 8, 'f64': 8,
+}
+_COLLECTIVES = ('all-gather', 'all-reduce', 'reduce-scatter', 'all-to-all',
+                'collective-permute')
+_SHAPE_RE = re.compile(r'(\w+)\[([\d,]*)\]')
+_GROUP_RE = re.compile(r'replica_groups=\{([^}]*)\}')
+_GROUP_V2_RE = re.compile(r'replica_groups=\[(\d+),(\d+)\]')
+
+
+def _shape_bytes(sig: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(','):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUP_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUP_RE.search(line)
+    if m:
+        first = m.group(1).split('}')[0].strip('{} ')
+        return len([t for t in first.split(',') if t.strip() != ''])
+    return 1
+
+
+_OP_RE = re.compile(
+    r'= *(.*?) (all-gather|all-reduce|reduce-scatter|all-to-all|'
+    r'collective-permute)(-start|-done)?\(')
+_COMP_HEADER_RE = re.compile(r'^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$')
+_CALLEE_RE = re.compile(r'(body|condition|calls|to_apply)=%?([\w\.\-]+)')
+_TRIP_RE = re.compile(r'known_trip_count\\?":\{\\?"n\\?":\\?"(\d+)\\?"')
+
+
+def _split_computations(hlo_text: str):
+    """{computation_name: [instruction lines]}, plus the ENTRY name."""
+    comps, entry, cur = {}, None, None
+    for line in hlo_text.splitlines():
+        m = _COMP_HEADER_RE.match(line)
+        if m and not line.startswith(' '):
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if line.strip() == '}':
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line.strip())
+    return comps, entry
+
+
+def _execution_multipliers(comps: dict, entry: str) -> dict:
+    """How many times each computation runs per step: while bodies multiply
+    by their known_trip_count (lax.scan layers/microbatches annotate this)."""
+    edges = {name: [] for name in comps}        # caller -> [(callee, mult)]
+    for name, lines in comps.items():
+        for ls in lines:
+            trip = 1
+            tm = _TRIP_RE.search(ls)
+            is_while = re.search(r'\bwhile\(', ls) is not None
+            if tm and is_while:
+                trip = int(tm.group(1))
+            for kind, callee in _CALLEE_RE.findall(ls):
+                mult = trip if (is_while and kind in ('body', 'condition')) \
+                    else 1
+                if callee in comps:
+                    edges[name].append((callee, mult))
+    mults = {name: 0.0 for name in comps}
+    if entry is None:
+        entry = next(iter(comps))
+    mults[entry] = 1.0
+    # call graph is a DAG: propagate until stable
+    for _ in range(len(comps) + 2):
+        changed = False
+        new = {name: 0.0 for name in comps}
+        new[entry] = 1.0
+        for caller, lst in edges.items():
+            for callee, m in lst:
+                new[callee] += mults[caller] * m
+        for name in comps:
+            tgt = max(new[name], 1.0 if name == entry else 0.0)
+            if abs(tgt - mults[name]) > 1e-9:
+                changed = True
+            mults[name] = tgt
+        if not changed:
+            break
+    return mults
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device wire bytes by collective kind, weighted by how many times
+    the enclosing computation executes (scan/while trip counts) — without
+    the weighting, everything inside a ``lax.scan`` over layers or
+    microbatches counts once.
+
+    Standard ring costs on the mesh axis: AG/RS move (g-1)/g of the full
+    payload per device; AR = 2x RS; A2A moves (g-1)/g of the shard."""
+    comps, entry = _split_computations(hlo_text)
+    mults = _execution_multipliers(comps, entry)
+    per_kind = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    raw_bytes = 0.0
+    trip_counts = [int(m) for m in
+                   (_TRIP_RE.search(l).group(1)
+                    for ls in comps.values() for l in ls
+                    if _TRIP_RE.search(l) and re.search(r'\bwhile\(', l))]
+    for cname, lines in comps.items():
+        weight = mults.get(cname, 1.0)
+        for ls in lines:
+            m = _OP_RE.search(ls)
+            if not m:
+                continue
+            if m.group(3) == '-done':      # async pair: count -start only
+                continue
+            kind = m.group(2)
+            nbytes = _shape_bytes(m.group(1))
+            g = _group_size(ls)
+            if g <= 1 and kind != 'collective-permute':
+                continue
+            if kind == 'all-gather':
+                wire = nbytes * (g - 1) / g        # result = full gather
+            elif kind == 'reduce-scatter':
+                wire = nbytes * (g - 1)            # result = 1/g of input
+            elif kind == 'all-reduce':
+                wire = nbytes * 2 * (g - 1) / g    # RS + AG phases
+            elif kind == 'all-to-all':
+                wire = nbytes * (g - 1) / g
+            else:                                  # collective-permute
+                wire = nbytes
+            per_kind[kind] += wire * weight
+            raw_bytes += wire
+            counts[kind] += 1
+    total = sum(per_kind.values())
+    return dict(per_kind_bytes=per_kind, counts=counts, total_bytes=total,
+                unweighted_bytes=raw_bytes, while_trip_counts=trip_counts)
+
+
+# ----------------------------------------------------------------------------
+# per-cell dry run
+# ----------------------------------------------------------------------------
+def dryrun_cell(arch: str, shape_name: str, mesh_kind: str,
+                verbose: bool = True, *, layout: str = 'tp',
+                grad_accum: int = TRAIN_GRAD_ACCUM, remat: str = 'full',
+                yoco_mode: str = 'bf16', prequant: bool = False) -> dict:
+    cfg = configs.get(arch)
+    sh = configs.SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == 'multi'))
+    dp = sharding.dp_axes_of(mesh)
+    yoco = YocoConfig(mode=yoco_mode)
+    t0 = time.time()
+
+    if sh['kind'] == 'train':
+        opt_cfg = adamw.OptConfig(grad_accum=grad_accum)
+        with jax.set_mesh(mesh):
+            step, (params_abs, opt_abs) = TS.jit_train_step(
+                mesh, cfg, yoco, opt_cfg=opt_cfg, donate=False,
+                layout=layout, remat=remat)
+            lowered = step.lower(params_abs, opt_abs,
+                                 input_specs(cfg, shape_name))
+    else:
+        b, s = sh['global_batch'], sh['seq_len']
+        with jax.set_mesh(mesh):
+            if sh['kind'] == 'prefill':
+                step, (params_abs, cache_abs) = SS.jit_prefill_step(
+                    mesh, cfg, b, s, s, yoco, layout=layout,
+                    prequant=prequant)
+                lowered = step.lower(params_abs, input_specs(cfg, shape_name),
+                                     cache_abs)
+            else:
+                step, (params_abs, cache_abs) = SS.jit_decode_step(
+                    mesh, cfg, b, s, yoco, layout=layout, prequant=prequant)
+                ins = input_specs(cfg, shape_name)
+                lowered = step.lower(params_abs, ins['token'], ins['pos'],
+                                     cache_abs)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_d = {k: int(getattr(mem, k, 0)) for k in
+             ('argument_size_in_bytes', 'output_size_in_bytes',
+              'temp_size_in_bytes', 'generated_code_size_in_bytes',
+              'alias_size_in_bytes', 'peak_memory_in_bytes')}
+    cost = compiled.cost_analysis() or {}
+    cost_d = {k: float(v) for k, v in cost.items()
+              if isinstance(v, (int, float)) and k in
+              ('flops', 'bytes accessed', 'transcendentals',
+               'utilization operand 0 {}', 'bytes accessed output {}')}
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+
+    n_chips = mesh.size
+    rec = dict(
+        arch=arch, shape=shape_name, mesh=mesh_kind,
+        mesh_shape={k: int(v) for k, v in mesh.shape.items()},
+        kind=sh['kind'], seq_len=sh['seq_len'],
+        global_batch=sh['global_batch'],
+        grad_accum=grad_accum if sh['kind'] == 'train' else 1,
+        layout=layout, remat=remat, yoco_mode=yoco_mode, prequant=prequant,
+        n_chips=n_chips,
+        params=int(cfg.param_count()),
+        active_params=int(cfg.active_param_count()),
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory=mem_d, cost=cost_d, collectives=coll,
+        hlo_bytes=len(hlo),
+    )
+    if verbose:
+        print(f"[ok] {arch} x {shape_name} x {mesh_kind}: "
+              f"compile {t_compile:.1f}s, "
+              f"flops/dev {cost_d.get('flops', 0):.3e}, "
+              f"temp/dev {mem_d['temp_size_in_bytes']/2**30:.2f} GiB, "
+              f"collective wire {coll['total_bytes']/2**30:.3f} GiB/dev")
+    return rec
+
+
+def cell_list(mesh_kind: str):
+    for arch in configs.names():
+        cfg = configs.get(arch)
+        for shape_name in configs.SHAPES:
+            if not configs.cell_is_live(cfg, shape_name):
+                continue
+            yield arch, shape_name, mesh_kind
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--arch')
+    ap.add_argument('--shape')
+    ap.add_argument('--mesh', default='both',
+                    choices=['single', 'multi', 'both'])
+    ap.add_argument('--all', action='store_true')
+    ap.add_argument('--fast', action='store_true',
+                    help='skip cells with an existing artifact')
+    ap.add_argument('--out', default=OUT_DIR)
+    # §Perf iteration knobs
+    ap.add_argument('--layout', default='tp', choices=['tp', 'fsdp2d'])
+    ap.add_argument('--accum', type=int, default=TRAIN_GRAD_ACCUM)
+    ap.add_argument('--remat', default='full', choices=['full', 'none'])
+    ap.add_argument('--yoco-mode', default='bf16',
+                    choices=['bf16', 'w8a8'])
+    ap.add_argument('--prequant', action='store_true',
+                    help='serve cells: int8 weights resident (in-situ)')
+    ap.add_argument('--tag', default='',
+                    help='write artifact to experiments/perf/<cell>__<tag>')
+    args = ap.parse_args(argv)
+
+    meshes = ['single', 'multi'] if args.mesh == 'both' else [args.mesh]
+    cells = []
+    for mk in meshes:
+        if args.all:
+            cells += list(cell_list(mk))
+        else:
+            assert args.arch and args.shape, '--arch/--shape or --all'
+            cells.append((args.arch, args.shape, mk))
+
+    failures = []
+    for arch, shape_name, mk in cells:
+        if args.tag:
+            out_dir = os.path.join(args.out, '..', 'perf')
+            path = os.path.join(out_dir,
+                                f'{arch}__{shape_name}__{args.tag}.json')
+        else:
+            out_dir = os.path.join(args.out, mk)
+            path = os.path.join(out_dir, f'{arch}__{shape_name}.json')
+        os.makedirs(out_dir, exist_ok=True)
+        if args.fast and os.path.exists(path):
+            print(f'[skip] {arch} x {shape_name} x {mk}')
+            continue
+        try:
+            rec = dryrun_cell(arch, shape_name, mk, layout=args.layout,
+                              grad_accum=args.accum, remat=args.remat,
+                              yoco_mode=args.yoco_mode,
+                              prequant=args.prequant)
+            rec['tag'] = args.tag
+            with open(path, 'w') as f:
+                json.dump(rec, f, indent=1)
+        except Exception as e:   # noqa: BLE001 — report all failures at end
+            traceback.print_exc()
+            failures.append((arch, shape_name, mk, repr(e)))
+    if failures:
+        print('\nFAILURES:')
+        for f in failures:
+            print(' ', f)
+        sys.exit(1)
+    print(f'\nall {len(cells)} cells passed')
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,392 @@
+"""Attention: GQA (with KV cache, sliding window, qk-norm, biases) and
+DeepSeek MLA (multi-head latent attention) with the *absorbed* decode path.
+
+All projections route through ``core.yoco_linear`` so the paper's 8-bit
+execution modes apply. The softmax/AV contraction itself stays bf16/f32 —
+the paper quantizes VMMs against *stored* weights; dynamic QK^T products
+carry >8b dynamic range and are exactly the "no mid-reduction rounding"
+boundary (DESIGN.md §7).
+
+Cache layouts
+-------------
+GQA:  dict(k=(B, S_max, Hkv, dh), v=(B, S_max, Hkv, dh), pos=())
+MLA:  dict(ckv=(B, S_max, r), krope=(B, S_max, d_rope), pos=())
+      — the latent cache; decode absorbs W_uk/W_uv so attention runs in
+      latent space (r + d_rope per token instead of 2*H*dh).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import yoco_linear
+from repro.core.yoco_linear import YocoConfig
+from repro.models import rope as rope_mod
+from repro.models.layers import dense_init, rmsnorm
+
+NEG_INF = -2.0e38
+
+
+# ----------------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------------
+def init_attention(key: jax.Array, cfg) -> dict:
+    """Standard GQA projection weights (optionally biased / qk-normed)."""
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = dict(
+        wq=dense_init(k1, d, h * dh),
+        wk=dense_init(k2, d, hkv * dh),
+        wv=dense_init(k3, d, hkv * dh),
+        wo=dense_init(k4, h * dh, d),
+    )
+    if cfg.attn_bias:
+        p['bq'] = jnp.zeros((h * dh,), jnp.float32)
+        p['bk'] = jnp.zeros((hkv * dh,), jnp.float32)
+        p['bv'] = jnp.zeros((hkv * dh,), jnp.float32)
+    if cfg.qk_norm:
+        p['q_norm'] = jnp.zeros((dh,), jnp.float32)
+        p['k_norm'] = jnp.zeros((dh,), jnp.float32)
+    return p
+
+
+def init_mla(key: jax.Array, cfg) -> dict:
+    m, d, h = cfg.mla, cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    return dict(
+        w_dq=dense_init(ks[0], d, m.q_lora_rank),
+        w_uq=dense_init(ks[1], m.q_lora_rank,
+                        h * (m.nope_head_dim + m.rope_head_dim)),
+        w_dkv=dense_init(ks[2], d, m.kv_lora_rank + m.rope_head_dim),
+        w_ukv=dense_init(ks[3], m.kv_lora_rank,
+                         h * (m.nope_head_dim + m.v_head_dim)),
+        wo=dense_init(ks[4], h * m.v_head_dim, d),
+        q_ln=jnp.zeros((m.q_lora_rank,), jnp.float32),
+        kv_ln=jnp.zeros((m.kv_lora_rank,), jnp.float32),
+    )
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16,
+               n_sites: int = 0) -> dict:
+    """Empty KV cache. ``n_sites`` > 0 prepends a site dim (zamba2 shared
+    blocks: one cache per application site)."""
+    lead = (n_sites,) if n_sites else ()
+    if cfg.mla is not None:
+        m = cfg.mla
+        return dict(
+            ckv=jnp.zeros(lead + (batch, max_seq, m.kv_lora_rank), dtype),
+            krope=jnp.zeros(lead + (batch, max_seq, m.rope_head_dim), dtype),
+        )
+    hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    return dict(
+        k=jnp.zeros(lead + (batch, max_seq, hkv, dh), dtype),
+        v=jnp.zeros(lead + (batch, max_seq, hkv, dh), dtype),
+    )
+
+
+# ----------------------------------------------------------------------------
+# masks
+# ----------------------------------------------------------------------------
+def causal_mask(sq: int, skv: int, offset: int = 0,
+                window: Optional[int] = None) -> jnp.ndarray:
+    """(sq, skv) additive mask. ``offset`` = absolute position of query 0
+    minus position of key 0. ``window``: sliding-window width (keys within
+    [pos_q - window + 1, pos_q])."""
+    qpos = jnp.arange(sq)[:, None] + offset
+    kpos = jnp.arange(skv)[None, :]
+    ok = kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+# ----------------------------------------------------------------------------
+# core attention math (pure, shared by all paths)
+# ----------------------------------------------------------------------------
+def _sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+          mask: Optional[jnp.ndarray], scale: float) -> jnp.ndarray:
+    """q: (B, Sq, H, dh); k/v: (B, Skv, Hkv, dh) with H % Hkv == 0.
+
+    Operands stay bf16 with f32 MXU accumulation (preferred_element_type);
+    only the softmax runs in f32. Keeping q/k/v bf16 halves every
+    sequence-parallel K/V gather on the wire (EXPERIMENTS §Perf iter 4) at
+    identical accumulation precision."""
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    q = q.reshape(b, sq, hkv, g, dh)
+    logits = jnp.einsum('bqkgd,bskd->bkgqs', q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        logits = logits + mask                      # (sq, skv) broadcasts
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum('bkgqs,bskd->bqkgd', probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, h, dh).astype(v.dtype)
+
+
+# ----------------------------------------------------------------------------
+# GQA forward (train / prefill / decode)
+# ----------------------------------------------------------------------------
+def _project_qkv(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig,
+                 positions: jnp.ndarray, theta: float):
+    b, s, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = yoco_linear.linear(x, p['wq'], p.get('bq'), cfg=yoco)
+    k = yoco_linear.linear(x, p['wk'], p.get('bk'), cfg=yoco)
+    v = yoco_linear.linear(x, p['wv'], p.get('bv'), cfg=yoco)
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, hkv, dh)
+    v = v.reshape(b, s, hkv, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p['q_norm'])
+        k = rmsnorm(k, p['k_norm'])
+    if cfg.mrope:
+        if positions.ndim == 2:
+            positions = jnp.stack([positions] * 3, axis=-1)
+        q = rope_mod.apply_mrope(q, positions, theta)
+        k = rope_mod.apply_mrope(k, positions, theta)
+    else:
+        q = rope_mod.apply_rope(q, positions, theta, cfg.rope_fraction)
+        k = rope_mod.apply_rope(k, positions, theta, cfg.rope_fraction)
+    return q, k, v
+
+
+def attention(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
+              positions: Optional[jnp.ndarray] = None,
+              window: Optional[int] = None,
+              theta: Optional[float] = None,
+              cache: Optional[dict] = None,
+              cache_pos: Optional[jnp.ndarray] = None,
+              ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Full-sequence attention (train) or prefill (``cache`` given: KV written
+    at [0, s)). Returns (out, updated_cache)."""
+    b, s, _ = x.shape
+    dh = cfg.resolved_head_dim
+    theta = theta if theta is not None else cfg.rope_theta
+    if positions is None:
+        positions = rope_mod.default_positions(b, s)
+    q, k, v = _project_qkv(p, x, cfg, yoco, positions, theta)
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(
+            k=jax.lax.dynamic_update_slice(
+                cache['k'], k.astype(cache['k'].dtype), (0, 0, 0, 0)),
+            v=jax.lax.dynamic_update_slice(
+                cache['v'], v.astype(cache['v'].dtype), (0, 0, 0, 0)),
+        )
+    mask = causal_mask(s, s, 0, window)
+    out = _sdpa(q, k, v, mask, 1.0 / jnp.sqrt(dh).astype(jnp.float32))
+    out = yoco_linear.linear(out.reshape(b, s, -1), p['wo'], cfg=yoco)
+    return out, new_cache
+
+
+def attention_decode(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
+                     cache: dict, pos: jnp.ndarray,
+                     window: Optional[int] = None,
+                     theta: Optional[float] = None,
+                     ) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode. x: (B, 1, d); ``pos``: scalar int — the absolute
+    position being generated; cache holds [0, pos) valid entries."""
+    b = x.shape[0]
+    dh = cfg.resolved_head_dim
+    theta = theta if theta is not None else cfg.rope_theta
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, yoco, positions, theta)
+    ck = jax.lax.dynamic_update_slice(
+        cache['k'], k.astype(cache['k'].dtype), (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache['v'], v.astype(cache['v'].dtype), (0, pos, 0, 0))
+    smax = ck.shape[1]
+    kpos = jnp.arange(smax)
+    ok = kpos <= pos
+    if window is not None:
+        ok &= kpos > pos - window
+    mask = jnp.where(ok, 0.0, NEG_INF)[None, :]     # (1, smax)
+    out = _sdpa(q, ck, cv, mask, 1.0 / jnp.sqrt(dh).astype(jnp.float32))
+    out = yoco_linear.linear(out.reshape(b, 1, -1), p['wo'], cfg=yoco)
+    return out, dict(k=ck, v=cv)
+
+
+# ----------------------------------------------------------------------------
+# MLA (DeepSeek-V3)
+# ----------------------------------------------------------------------------
+def _mla_qkv_full(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig,
+                  positions: jnp.ndarray):
+    """Naive (non-absorbed) q/k/v for train & prefill."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    cq = rmsnorm(yoco_linear.linear(x, p['w_dq'], cfg=yoco), p['q_ln'])
+    q = yoco_linear.linear(cq, p['w_uq'], cfg=yoco)
+    q = q.reshape(b, s, h, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+    q_rope = rope_mod.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = yoco_linear.linear(x, p['w_dkv'], cfg=yoco)
+    ckv = rmsnorm(dkv[..., :m.kv_lora_rank], p['kv_ln'])
+    krope = dkv[..., m.kv_lora_rank:]                       # (b, s, d_rope)
+    krope = rope_mod.apply_rope(krope[:, :, None, :], positions,
+                                cfg.rope_theta)[:, :, 0, :]
+    kv = yoco_linear.linear(ckv, p['w_ukv'], cfg=yoco)
+    kv = kv.reshape(b, s, h, m.nope_head_dim + m.v_head_dim)
+    k_nope, v = kv[..., :m.nope_head_dim], kv[..., m.nope_head_dim:]
+    return q_nope, q_rope, k_nope, krope, v, ckv
+
+
+def mla_attention(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
+                  positions: Optional[jnp.ndarray] = None,
+                  cache: Optional[dict] = None,
+                  rt=None,
+                  ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """MLA train / prefill (materializes per-head k/v; caches only latents).
+
+    Sequence-parallel layouts gather the LATENT (r + d_rope = 576/token)
+    across ranks and expand k/v locally, instead of letting the partitioner
+    gather the expanded per-head K/V (2*H*dh = 32768/token) — 56x less
+    wire for DeepSeek-V3, at the cost of TP-redundant kv_up compute
+    (EXPERIMENTS §Perf deepseek iter 3: the paper's keep-it-compressed-
+    on-the-wire principle applied to training)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    if positions is None:
+        positions = rope_mod.default_positions(b, s)
+    latent_gather = (rt is not None and rt.mesh is not None
+                     and getattr(rt, 'act_layout', 'batch') == '2d'
+                     and s % rt.mesh.shape[rt.tp_axis] == 0 and s > 1
+                     and cache is None)
+    if latent_gather:
+        h = cfg.n_heads
+        cq = rmsnorm(yoco_linear.linear(x, p['w_dq'], cfg=yoco), p['q_ln'])
+        q = yoco_linear.linear(cq, p['w_uq'], cfg=yoco)
+        q = q.reshape(b, s, h, m.nope_head_dim + m.rope_head_dim)
+        q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+        q_rope = rope_mod.apply_rope(q_rope, positions, cfg.rope_theta)
+        dkv = yoco_linear.linear(x, p['w_dkv'], cfg=yoco)
+        ckv = rmsnorm(dkv[..., :m.kv_lora_rank], p['kv_ln'])
+        krope = dkv[..., m.kv_lora_rank:]
+        krope = rope_mod.apply_rope(krope[:, :, None, :], positions,
+                                    cfg.rope_theta)[:, :, 0, :]
+        out = _mla_sdpa_latent_2d(q_nope, q_rope, ckv, krope, p['w_ukv'],
+                                  cfg, rt, s)
+        out = out.reshape(b, s, -1).astype(x.dtype)
+        out = yoco_linear.linear(out, p['wo'], cfg=yoco)
+        return out, None
+    q_nope, q_rope, k_nope, krope, v, ckv = _mla_qkv_full(
+        p, x, cfg, yoco, positions)
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(
+            ckv=jax.lax.dynamic_update_slice(
+                cache['ckv'], ckv.astype(cache['ckv'].dtype), (0, 0, 0)),
+            krope=jax.lax.dynamic_update_slice(
+                cache['krope'], krope.astype(cache['krope'].dtype), (0, 0, 0)),
+        )
+    scale = 1.0 / jnp.sqrt(float(m.nope_head_dim + m.rope_head_dim))
+    mask = causal_mask(s, s)
+    lo = jnp.einsum('bqhd,bshd->bhqs', q_nope, k_nope,
+                    preferred_element_type=jnp.float32)
+    lo += jnp.einsum('bqhd,bsd->bhqs', q_rope, krope,
+                     preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(lo * scale + mask, axis=-1)
+    out = jnp.einsum('bhqs,bshd->bqhd', probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, s, -1).astype(x.dtype)
+    out = yoco_linear.linear(out, p['wo'], cfg=yoco)
+    return out, new_cache
+
+
+def _mla_sdpa_latent_2d(q_nope, q_rope, ckv, krope, w_ukv, cfg, rt, s):
+    """shard_map MLA core for sequence-parallel training: each rank
+    all_gathers the (r + d_rope)-wide LATENT, expands K/V locally, and
+    attends its own query shard. Autodiff transposes the all_gather into a
+    psum_scatter ON THE LATENT — the dK/dV reduction never materializes at
+    2*H*dh width (EXPERIMENTS §Perf deepseek iter 4)."""
+    m = cfg.mla
+    h = cfg.n_heads
+    tp = rt.tp_axis
+    scale = 1.0 / jnp.sqrt(float(m.nope_head_dim + m.rope_head_dim))
+    from jax.sharding import PartitionSpec as P
+
+    def core(qn, qr, ck, kr, wukv):
+        ck_f = jax.lax.all_gather(ck, tp, axis=1, tiled=True)   # (bl, s, r)
+        kr_f = jax.lax.all_gather(kr, tp, axis=1, tiled=True)
+        w = wukv.reshape(m.kv_lora_rank, h,
+                         m.nope_head_dim + m.v_head_dim).astype(qn.dtype)
+        kv = jnp.einsum('bsr,rhd->bshd', ck_f, w,
+                        preferred_element_type=jnp.float32).astype(qn.dtype)
+        kn, v = kv[..., :m.nope_head_dim], kv[..., m.nope_head_dim:]
+        lo = jnp.einsum('bqhd,bshd->bhqs', qn, kn,
+                        preferred_element_type=jnp.float32)
+        lo += jnp.einsum('bqhd,bsd->bhqs', qr, kr_f,
+                         preferred_element_type=jnp.float32)
+        sl = qn.shape[1]
+        offset = jax.lax.axis_index(tp) * sl
+        mask = causal_mask(sl, s, offset)
+        probs = jax.nn.softmax(lo * scale + mask, axis=-1)
+        out = jnp.einsum('bhqs,bshd->bqhd', probs.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return out.astype(qn.dtype)
+
+    dp = rt.dp_axes
+    return jax.shard_map(
+        core, mesh=rt.mesh,
+        in_specs=(P(dp, tp, None, None), P(dp, tp, None, None),
+                  P(dp, tp, None), P(dp, tp, None), P()),
+        out_specs=P(dp, tp, None, None),
+        check_vma=False,
+    )(q_nope, q_rope, ckv, krope, w_ukv)
+
+
+def mla_attention_decode(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
+                         cache: dict, pos: jnp.ndarray,
+                         ) -> Tuple[jnp.ndarray, dict]:
+    """Absorbed MLA decode: attention runs in the latent space.
+
+    scores = (q_nope @ W_uk) · ckv + q_rope · krope      (per head)
+    out    = (probs · ckv) @ W_uv                        (per head)
+
+    The KV cache stores only (ckv, krope) — r + d_rope = 576 values/token for
+    DeepSeek-V3 vs 2·128·128 = 32768 for naive GQA: the paper's 'keep it
+    compressed until the last moment' on the memory side."""
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    cq = rmsnorm(yoco_linear.linear(x, p['w_dq'], cfg=yoco), p['q_ln'])
+    q = yoco_linear.linear(cq, p['w_uq'], cfg=yoco)
+    q = q.reshape(b, 1, h, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+    q_rope = rope_mod.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = yoco_linear.linear(x, p['w_dkv'], cfg=yoco)
+    ckv_t = rmsnorm(dkv[..., :m.kv_lora_rank], p['kv_ln'])
+    krope_t = dkv[..., m.kv_lora_rank:]
+    krope_t = rope_mod.apply_rope(krope_t[:, :, None, :], positions,
+                                  cfg.rope_theta)[:, :, 0, :]
+    ckv = jax.lax.dynamic_update_slice(
+        cache['ckv'], ckv_t.astype(cache['ckv'].dtype), (0, pos, 0))
+    krope = jax.lax.dynamic_update_slice(
+        cache['krope'], krope_t.astype(cache['krope'].dtype), (0, pos, 0))
+
+    # absorb W_uk into q: (b,1,h,dn) @ (r, h, dn) -> (b,1,h,r)
+    w_ukv = p['w_ukv'].reshape(m.kv_lora_rank, h, m.nope_head_dim + m.v_head_dim)
+    w_uk = w_ukv[..., :m.nope_head_dim]                    # (r, h, dn)
+    w_uv = w_ukv[..., m.nope_head_dim:]                    # (r, h, dv)
+    q_lat = jnp.einsum('bqhd,rhd->bqhr', q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    lo = jnp.einsum('bqhr,bsr->bhqs', q_lat, ckv.astype(jnp.float32))
+    lo += jnp.einsum('bqhd,bsd->bhqs', q_rope.astype(jnp.float32),
+                     krope.astype(jnp.float32))
+    scale = 1.0 / jnp.sqrt(float(m.nope_head_dim + m.rope_head_dim))
+    smax = ckv.shape[1]
+    mask = jnp.where(jnp.arange(smax) <= pos, 0.0, NEG_INF)[None, :]
+    probs = jax.nn.softmax(lo * scale + mask, axis=-1)
+    o_lat = jnp.einsum('bhqs,bsr->bqhr', probs, ckv.astype(jnp.float32))
+    out = jnp.einsum('bqhr,rhd->bqhd', o_lat, w_uv.astype(jnp.float32))
+    out = out.reshape(b, 1, -1).astype(x.dtype)
+    out = yoco_linear.linear(out, p['wo'], cfg=yoco)
+    return out, dict(ckv=ckv, krope=krope)

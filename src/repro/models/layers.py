@@ -1,0 +1,113 @@
+"""Common layers: norms, MLPs, embeddings. All matmuls route through
+``core.yoco_linear`` so the paper's execution mode (bf16 / qat / w8a8 /
+analog_sim) applies uniformly across every architecture."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import yoco_linear
+from repro.core.yoco_linear import YocoConfig
+
+
+# ----------------------------------------------------------------------------
+# init helpers
+# ----------------------------------------------------------------------------
+def dense_init(key: jax.Array, d_in: int, d_out: int,
+               scale: Optional[float] = None) -> jnp.ndarray:
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int) -> jnp.ndarray:
+    return jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+
+
+# ----------------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------------
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def init_norm(cfg, d: Optional[int] = None) -> dict:
+    d = d or cfg.d_model
+    if cfg.norm_type == 'rmsnorm':
+        return dict(scale=jnp.zeros((d,), jnp.float32))
+    return dict(scale=jnp.ones((d,), jnp.float32),
+                bias=jnp.zeros((d,), jnp.float32))
+
+
+def apply_norm(params: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    if cfg.norm_type == 'rmsnorm':
+        return rmsnorm(x, params['scale'])
+    return layernorm(x, params['scale'], params['bias'])
+
+
+# ----------------------------------------------------------------------------
+# MLPs
+# ----------------------------------------------------------------------------
+def init_mlp(key: jax.Array, d: int, d_ff: int, mlp_type: str) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if mlp_type in ('swiglu', 'geglu'):
+        return dict(w_gate=dense_init(k1, d, d_ff),
+                    w_up=dense_init(k2, d, d_ff),
+                    w_down=dense_init(k3, d_ff, d))
+    return dict(w_in=dense_init(k1, d, d_ff),
+                w_out=dense_init(k2, d_ff, d))
+
+
+def apply_mlp(params: dict, x: jnp.ndarray, mlp_type: str,
+              yoco: YocoConfig) -> jnp.ndarray:
+    if mlp_type in ('swiglu', 'geglu'):
+        g = yoco_linear.linear(x, params['w_gate'], cfg=yoco)
+        u = yoco_linear.linear(x, params['w_up'], cfg=yoco)
+        act = jax.nn.silu if mlp_type == 'swiglu' else \
+            (lambda t: jax.nn.gelu(t, approximate=True))
+        return yoco_linear.linear(act(g) * u, params['w_down'], cfg=yoco)
+    h = yoco_linear.linear(x, params['w_in'], cfg=yoco)
+    return yoco_linear.linear(jax.nn.gelu(h, approximate=True),
+                              params['w_out'], cfg=yoco)
+
+
+# ----------------------------------------------------------------------------
+# embeddings / heads
+# ----------------------------------------------------------------------------
+def embed_tokens(emb: jnp.ndarray, tokens: jnp.ndarray,
+                 dtype=jnp.bfloat16) -> jnp.ndarray:
+    """tokens: (..., ) int or (..., n_codebooks) int — codebook embeddings sum
+    (musicgen)."""
+    if tokens.ndim >= 2 and emb.ndim == 3:          # (n_codebooks, vocab, d)
+        e = jnp.take(emb, tokens, axis=1)           # (cb, ..., cb?, d) — no:
+        # emb (CB, V, d); tokens (..., CB) -> gather per codebook then sum
+        parts = [jnp.take(emb[c], tokens[..., c], axis=0)
+                 for c in range(emb.shape[0])]
+        return sum(parts).astype(dtype)
+    return jnp.take(emb, tokens, axis=0).astype(dtype)
+
+
+def lm_head(params, x: jnp.ndarray, yoco: YocoConfig) -> jnp.ndarray:
+    """x: (..., d) -> logits (..., V) or (..., CB, V) for codebook models."""
+    w = params
+    if isinstance(w, dict):
+        w = w['w']
+    if isinstance(w, jnp.ndarray) and w.ndim == 3:  # (CB, d, V)
+        outs = [yoco_linear.linear(x, w[c], cfg=yoco) for c in range(w.shape[0])]
+        return jnp.stack(outs, axis=-2)
+    return yoco_linear.linear(x, w, cfg=yoco)

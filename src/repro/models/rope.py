@@ -1,0 +1,83 @@
+"""Rotary position embeddings: standard RoPE, partial RoPE (stablelm), and
+M-RoPE (qwen2-vl multimodal sections)."""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+
+
+def rope_freqs(dim: int, theta: float) -> jnp.ndarray:
+    """(dim/2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               fraction: float = 1.0) -> jnp.ndarray:
+    """x: (B, S, H, dh); positions: (B, S) int. Rotates the first
+    ``fraction * dh`` dims (partial rotary), leaves the rest."""
+    dh = x.shape[-1]
+    rot = int(dh * fraction) // 2 * 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    inv = rope_freqs(rot, theta)                          # (rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B, S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]                      # (B, S, 1, rot/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin,
+                           x2f * cos + x1f * sin], axis=-1).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1) if xp.shape[-1] else out
+
+
+MROPE_SECTIONS = (16, 24, 24)   # qwen2-vl @ dh=128: (t, h, w) half-dims
+
+
+def mrope_sections(half: int) -> tuple:
+    """(t, h, w) partition of the half-dim, 1:1.5:1.5 as in qwen2-vl
+    (16:24:24 at dh=128); scales to reduced smoke head dims."""
+    t = max(half // 4, 1) if half >= 4 else half
+    h = (half - t + 1) // 2
+    w = half - t - h
+    return (t, h, w)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections: Optional[Sequence[int]] = None) -> jnp.ndarray:
+    """M-RoPE: the dh/2 frequency slots are partitioned into (t, h, w)
+    sections, each rotated by its own position stream.
+
+    x: (B, S, H, dh); positions3: (B, S, 3). For pure-text streams all three
+    position components are equal and M-RoPE reduces to RoPE (tested)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    if sections is None:
+        sections = mrope_sections(half)
+    assert sum(sections) == half, (sections, half)
+    inv = rope_freqs(dh, theta)                           # (half,)
+    # build the per-slot position selector
+    sec_id = jnp.repeat(jnp.arange(len(sections)),
+                        jnp.array(sections), total_repeat_length=half)
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),                   # (B, S, 3)
+        jnp.broadcast_to(sec_id, positions3.shape[:-1] + (half,)).astype(jnp.int32) \
+        if False else sec_id[None, None, :].repeat(positions3.shape[0], 0)
+        .repeat(positions3.shape[1], 1), axis=-1)         # (B, S, half)
+    ang = pos * inv                                        # (B, S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def default_positions(batch: int, seq: int, offset=0) -> jnp.ndarray:
+    return jnp.arange(seq)[None, :] + jnp.zeros((batch, 1), jnp.int32) + offset
+
+
+def default_positions3(batch: int, seq: int, offset=0) -> jnp.ndarray:
+    p = default_positions(batch, seq, offset)
+    return jnp.stack([p, p, p], axis=-1)

@@ -1,0 +1,289 @@
+"""Mamba2 / SSD (state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the *chunked* SSD form: intra-chunk attention-like
+matmuls (MXU-friendly, O(S·Q) with chunk size Q) + an inter-chunk recurrence
+over per-chunk states (associative scan, log-depth). Decode keeps an O(1)
+recurrent state per layer — which is why the pure-SSM and hybrid archs are
+the `long_500k`-eligible cells.
+
+Layout conventions (following the reference SSD implementation):
+  x        (B, S, H, P)       P = head_dim, H = d_inner / P heads
+  dt       (B, S, H)          softplus-positive step sizes
+  A        (H,)               negative reals (log-parameterized)
+  B, C     (B, S, G, N)       N = d_state, G = n_groups (broadcast to heads)
+  state    (B, H, P, N)
+
+The inner projections route through ``core.yoco_linear`` (the paper's VMM
+modes); the scan itself stays bf16/f32 — state carries >8b dynamic range,
+exactly the no-mid-reduction-rounding boundary (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import yoco_linear
+from repro.core.yoco_linear import YocoConfig
+from repro.models.layers import dense_init, rmsnorm
+
+
+# ----------------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------------
+def dims(cfg) -> dict:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    # in_proj emits [z, x, B, C, dt]
+    d_in_proj = 2 * d_inner + 2 * s.n_groups * s.d_state + n_heads
+    return dict(d_inner=d_inner, n_heads=n_heads, conv_dim=conv_dim,
+                d_in_proj=d_in_proj)
+
+
+def init_mamba2(key: jax.Array, cfg) -> dict:
+    s = cfg.ssm
+    dm = dims(cfg)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    # dt bias initialized so softplus(dt_bias) spans [dt_min, dt_max]
+    u = jax.random.uniform(k4, (dm['n_heads'],))
+    dt_init = jnp.exp(u * (math.log(s.dt_max) - math.log(s.dt_min))
+                      + math.log(s.dt_min))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))      # inv softplus
+    a_init = jnp.ones((dm['n_heads'],)) * jnp.log(
+        jnp.linspace(1.0, 16.0, dm['n_heads']))
+    return dict(
+        in_proj=dense_init(k1, cfg.d_model, dm['d_in_proj']),
+        conv_w=jax.random.normal(k2, (s.conv_width, dm['conv_dim']),
+                                 jnp.float32) / math.sqrt(s.conv_width),
+        conv_b=jnp.zeros((dm['conv_dim'],), jnp.float32),
+        a_log=a_init,                                      # A = -exp(a_log)
+        d_skip=jnp.ones((dm['n_heads'],), jnp.float32),
+        dt_bias=dt_bias,
+        gate_norm=jnp.zeros((dm['d_inner'],), jnp.float32),
+        out_proj=dense_init(k3, dm['d_inner'], cfg.d_model),
+    )
+
+
+def init_ssm_state(cfg, batch: int, dtype=jnp.float32) -> dict:
+    s = cfg.ssm
+    dm = dims(cfg)
+    return dict(
+        conv=jnp.zeros((batch, s.conv_width - 1, dm['conv_dim']), dtype),
+        ssm=jnp.zeros((batch, dm['n_heads'], s.head_dim, s.d_state), dtype),
+    )
+
+
+# ----------------------------------------------------------------------------
+# chunked SSD core
+# ----------------------------------------------------------------------------
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., Q) -> (..., Q, Q) lower-tri segment sums:
+    out[.., i, j] = sum_{j < k <= i} x[.., k]; -inf above diagonal."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                b: jnp.ndarray, c: jnp.ndarray, chunk: int,
+                init_state: Optional[jnp.ndarray] = None,
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD forward. x (B,S,H,P); dt (B,S,H); a (H,); b/c (B,S,G,N).
+    Returns (y (B,S,H,P) f32, final_state (B,H,P,N) f32)."""
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    xf = x.astype(jnp.float32).reshape(bsz, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, chunk, h)
+    bf = b.astype(jnp.float32).reshape(bsz, nc, chunk, g, n)
+    cf = c.astype(jnp.float32).reshape(bsz, nc, chunk, g, n)
+    bf = jnp.repeat(bf, rep, axis=3)                       # (B,nc,Q,H,N)
+    cf = jnp.repeat(cf, rep, axis=3)
+
+    da = dtf * a.astype(jnp.float32)                       # (B,nc,Q,H) <= 0
+    da = jnp.moveaxis(da, -1, 1)                           # (B,H,nc,Q)
+    da_cs = jnp.cumsum(da, axis=-1)
+
+    xdt = xf * dtf[..., None]                              # dt-weighted input
+
+    # 1. intra-chunk (diagonal blocks): quadratic within chunk
+    ell = jnp.exp(_segsum(da))                             # (B,H,nc,Q,Q)
+    y_diag = jnp.einsum('bclhn,bcshn,bhcls,bcshp->bclhp',
+                        cf, bf, ell, xdt)
+
+    # 2. per-chunk final states
+    decay_states = jnp.exp(da_cs[..., -1:] - da_cs)        # (B,H,nc,Q)
+    states = jnp.einsum('bclhn,bhcl,bclhp->bchpn', bf, decay_states, xdt)
+
+    # 3. inter-chunk recurrence over chunk states (associative, log-depth):
+    #    state_out[c] = decay[c] * state_out[c-1] + states[c]
+    chunk_decay = jnp.exp(da_cs[..., -1])                  # (B,H,nc)
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def comb(carry, nxt):
+        d1, s1 = carry
+        d2, s2 = nxt
+        return d1 * d2, s2 + d2[..., None, None] * s1
+
+    dec_t = jnp.moveaxis(chunk_decay, -1, 0)               # (nc,B,H)
+    st_t = jnp.moveaxis(states, 1, 0)                      # (nc,B,H,P,N)
+    # fold the initial state into the first chunk
+    st_t = st_t.at[0].add(dec_t[0][..., None, None] * init_state)
+    dec_acc, st_acc = jax.lax.associative_scan(comb, (dec_t, st_t), axis=0)
+    final_state = st_acc[-1]
+    # states *entering* each chunk
+    prev = jnp.concatenate([init_state[None], st_acc[:-1]], axis=0)
+    prev = jnp.moveaxis(prev, 0, 1)                        # (B,nc,H,P,N)
+
+    # 4. inter-chunk contribution to outputs
+    state_decay_out = jnp.exp(da_cs)                       # (B,H,nc,Q)
+    y_off = jnp.einsum('bclhn,bchpn,bhcl->bclhp', cf, prev, state_decay_out)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, final_state
+
+
+def ssd_step(x_t: jnp.ndarray, dt_t: jnp.ndarray, a: jnp.ndarray,
+             b_t: jnp.ndarray, c_t: jnp.ndarray, state: jnp.ndarray,
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single recurrent step (decode). x_t (B,H,P); dt_t (B,H);
+    b_t/c_t (B,G,N); state (B,H,P,N) -> (y (B,H,P), new_state)."""
+    h = x_t.shape[1]
+    g = b_t.shape[1]
+    bf = jnp.repeat(b_t.astype(jnp.float32), h // g, axis=1)   # (B,H,N)
+    cf = jnp.repeat(c_t.astype(jnp.float32), h // g, axis=1)
+    da = jnp.exp(dt_t.astype(jnp.float32) * a.astype(jnp.float32))  # (B,H)
+    upd = jnp.einsum('bhp,bhn->bhpn', x_t.astype(jnp.float32)
+                     * dt_t.astype(jnp.float32)[..., None], bf)
+    new_state = da[..., None, None] * state + upd
+    y = jnp.einsum('bhpn,bhn->bhp', new_state, cf)
+    return y, new_state
+
+
+# ----------------------------------------------------------------------------
+# full Mamba2 block (in_proj -> conv -> SSD -> gated norm -> out_proj)
+# ----------------------------------------------------------------------------
+def _split_in_proj(zxbcdt: jnp.ndarray, cfg):
+    s = cfg.ssm
+    dm = dims(cfg)
+    di, gn = dm['d_inner'], s.n_groups * s.d_state
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + dm['conv_dim']]
+    dt = zxbcdt[..., di + dm['conv_dim']:]
+    return z, xbc, dt, di, gn
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray,
+                 history: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv1d. xbc (B,S,C); w (W,C). ``history``: (B,W-1,C)
+    left context (decode/chunked-prefill), else zero-pad."""
+    width = w.shape[0]
+    if history is None:
+        history = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    xp = jnp.concatenate([history, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    return jax.nn.silu(out + bias[None, None, :])
+
+
+def mamba2_forward(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
+                   state: Optional[dict] = None,
+                   ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Full-sequence forward. x (B,S,d). Returns (out (B,S,d), final state
+    dict if ``state`` was given — prefill — else None)."""
+    s_cfg = cfg.ssm
+    bsz, s, _ = x.shape
+    dm = dims(cfg)
+    zxbcdt = yoco_linear.linear(x, p['in_proj'], cfg=yoco)
+    z, xbc, dt, di, gn = _split_in_proj(zxbcdt, cfg)
+    hist = state['conv'] if state is not None else None
+    xbc = _causal_conv(xbc, p['conv_w'], p['conv_b'], hist)
+    xs = xbc[..., :di]
+    b = xbc[..., di:di + gn].reshape(bsz, s, s_cfg.n_groups, s_cfg.d_state)
+    c = xbc[..., di + gn:].reshape(bsz, s, s_cfg.n_groups, s_cfg.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p['dt_bias'])
+    a = -jnp.exp(p['a_log'])
+    xh = xs.reshape(bsz, s, dm['n_heads'], s_cfg.head_dim)
+
+    chunk = min(s_cfg.chunk_size, s)
+    pad = (-s) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    init = state['ssm'].astype(jnp.float32) if state is not None else None
+    y, fin = ssd_chunked(xh, dt, a, b, c, chunk, init)
+    if pad:
+        y = y[:, :s]
+    y = y + xh[:, :s] * p['d_skip'][None, None, :, None]   # D skip
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p['gate_norm'])
+    out = yoco_linear.linear(y, p['out_proj'], cfg=yoco)
+    new_state = None
+    if state is not None:
+        w = s_cfg.conv_width
+        xbc_raw = zxbcdt[..., di:di + dm['conv_dim']]
+        tail = jnp.concatenate([state['conv'],
+                                xbc_raw.astype(state['conv'].dtype)], axis=1)
+        new_state = dict(conv=tail[:, -(w - 1):],
+                         ssm=fin.astype(state['ssm'].dtype))
+    return out, new_state
+
+
+def mamba2_decode(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
+                  state: dict) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode. x (B,1,d); state dict(conv (B,W-1,C), ssm (B,H,P,N))."""
+    s_cfg = cfg.ssm
+    bsz = x.shape[0]
+    dm = dims(cfg)
+    zxbcdt = yoco_linear.linear(x, p['in_proj'], cfg=yoco)
+    z, xbc, dt, di, gn = _split_in_proj(zxbcdt, cfg)
+    # conv over the stored window
+    win = jnp.concatenate([state['conv'],
+                           xbc.astype(state['conv'].dtype)], axis=1)
+    conv_out = jnp.einsum('bwc,wc->bc', win.astype(jnp.float32),
+                          p['conv_w']) + p['conv_b']
+    xbc_t = jax.nn.silu(conv_out)                          # (B, C)
+    xs = xbc_t[..., :di]
+    b = xbc_t[..., di:di + gn].reshape(bsz, s_cfg.n_groups, s_cfg.d_state)
+    c = xbc_t[..., di + gn:].reshape(bsz, s_cfg.n_groups, s_cfg.d_state)
+    dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p['dt_bias'])
+    a = -jnp.exp(p['a_log'])
+    xh = xs.reshape(bsz, dm['n_heads'], s_cfg.head_dim)
+    y, new_ssm = ssd_step(xh, dt_t, a, b, c, state['ssm'].astype(jnp.float32))
+    y = y + xh * p['d_skip'][None, :, None]
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p['gate_norm'])
+    out = yoco_linear.linear(y, p['out_proj'], cfg=yoco)
+    new_state = dict(conv=win[:, 1:], ssm=new_ssm.astype(state['ssm'].dtype))
+    return out, new_state
+
+
+def ssd_reference(x, dt, a, b, c, init_state=None):
+    """O(S^2)-free exact sequential recurrence — the oracle for property
+    tests of ``ssd_chunked`` (slow, small shapes only)."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    state = (jnp.zeros((bsz, h, p, n), jnp.float32) if init_state is None
+             else init_state.astype(jnp.float32))
+    ys = []
+    for t in range(s):
+        y, state = ssd_step(x[:, t].astype(jnp.float32),
+                            dt[:, t].astype(jnp.float32), a,
+                            b[:, t], c[:, t], state)
+        ys.append(y)
+    return jnp.stack(ys, axis=1), state

@@ -1,0 +1,124 @@
+"""Serving-step builders: batched prefill and single-token decode with
+sharded KV caches. The decode step is what the ``decode_32k`` / ``long_500k``
+dry-run cells lower."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.yoco_linear import YocoConfig, DEFAULT_YOCO
+from repro.distributed import sharding
+from repro.models import model as model_mod
+from repro.models.model import ModelRuntime, DEFAULT_RT
+
+
+def make_prefill_step(cfg, yoco: YocoConfig = DEFAULT_YOCO,
+                      rt: ModelRuntime = DEFAULT_RT):
+    def prefill_step(params, batch, cache):
+        return model_mod.prefill(params, batch, cache, cfg, yoco, rt)
+    return prefill_step
+
+
+def make_decode_step(cfg, yoco: YocoConfig = DEFAULT_YOCO,
+                     rt: ModelRuntime = DEFAULT_RT, *, greedy: bool = True):
+    def decode_step(params, token, pos, cache):
+        logits, cache = model_mod.decode_step(params, token, pos, cache,
+                                              cfg, yoco, rt)
+        if cfg.input_kind == 'embeddings':
+            # VLM backbone serving: next-token ids are returned, the
+            # (stubbed) frontend owns the id->embedding map
+            next_tok = jnp.argmax(logits, axis=-1)
+        elif greedy:
+            next_tok = jnp.argmax(logits, axis=-1)
+        else:
+            next_tok = jnp.argmax(logits, axis=-1)   # sampling added by caller
+        return next_tok.astype(jnp.int32), logits, cache
+    return decode_step
+
+
+def abstract_serve_state(cfg, batch: int, max_seq: int,
+                         cache_dtype=jnp.bfloat16, prequant: bool = False):
+    def mk(k):
+        p = model_mod.init_params(k, cfg)
+        if prequant:
+            from repro.core import yoco_linear
+            p = yoco_linear.quantize_tree(p)   # int8 weights in situ
+        return p
+    params = jax.eval_shape(mk, jax.random.key(0))
+    cache = jax.eval_shape(
+        functools.partial(model_mod.init_cache_tree, cfg, batch, max_seq,
+                          cache_dtype))
+    return params, cache
+
+
+def serve_shardings(mesh, cfg, params_abs, cache_abs, batch: int,
+                    layout: str = 'tp'):
+    pspecs = sharding.param_specs(params_abs, mesh, layout)
+    dp = sharding.dp_axes_of(mesh)
+    cspecs = sharding.cache_specs(cache_abs, batch=batch, dp_axes=dp,
+                                  mesh=mesh)
+    return (sharding.to_shardings(mesh, pspecs),
+            sharding.to_shardings(mesh, cspecs))
+
+
+def jit_decode_step(mesh, cfg, batch: int, max_seq: int,
+                    yoco: YocoConfig = DEFAULT_YOCO,
+                    rt: Optional[ModelRuntime] = None, layout: str = 'tp',
+                    prequant: bool = False):
+    """jit'd single-token decode with sharded cache; the decode dry-run."""
+    if rt is None:
+        rt = ModelRuntime(mesh=mesh, dp_axes=sharding.dp_axes_of(mesh),
+                          use_ep=(cfg.moe is not None
+                                  and cfg.moe.impl == 'ep'),
+                          act_layout='2d' if layout == 'fsdp2d' else 'batch')
+    params_abs, cache_abs = abstract_serve_state(cfg, batch, max_seq,
+                                                 prequant=prequant)
+    psh, csh = serve_shardings(mesh, cfg, params_abs, cache_abs, batch,
+                               layout)
+    dp = sharding.dp_axes_of(mesh)
+    import numpy as np
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    bdim = dp if batch >= dp_size else None   # tiny-batch decode: replicate
+    if cfg.input_kind in ('embeddings', 'codebooks'):
+        tok_sh = sharding.to_shardings(
+            mesh, jax.sharding.PartitionSpec(bdim, None))
+    else:
+        tok_sh = sharding.to_shardings(
+            mesh, jax.sharding.PartitionSpec(bdim))
+    step = make_decode_step(cfg, yoco, rt)
+    return jax.jit(
+        step,
+        in_shardings=(psh, tok_sh, None, csh),
+        out_shardings=(tok_sh if cfg.input_kind == 'tokens' else None,
+                       None, csh),
+        donate_argnums=(3,),
+    ), (params_abs, cache_abs)
+
+
+def jit_prefill_step(mesh, cfg, batch: int, seq: int, max_seq: int,
+                     yoco: YocoConfig = DEFAULT_YOCO,
+                     rt: Optional[ModelRuntime] = None, layout: str = 'tp',
+                     prequant: bool = False):
+    if rt is None:
+        rt = ModelRuntime(mesh=mesh, dp_axes=sharding.dp_axes_of(mesh),
+                          use_ep=(cfg.moe is not None
+                                  and cfg.moe.impl == 'ep'),
+                          act_layout='2d' if layout == 'fsdp2d' else 'batch')
+    params_abs, cache_abs = abstract_serve_state(cfg, batch, max_seq,
+                                                 prequant=prequant)
+    psh, csh = serve_shardings(mesh, cfg, params_abs, cache_abs, batch,
+                               layout)
+    dp = sharding.dp_axes_of(mesh)
+    bspecs = sharding.batch_specs(cfg, dp)
+    bsh = sharding.to_shardings(mesh, dict(inputs=bspecs['inputs']))
+    step = make_prefill_step(cfg, yoco, rt)
+    return jax.jit(
+        step,
+        in_shardings=(psh, bsh, csh),
+        out_shardings=(None, csh),
+        donate_argnums=(2,),
+    ), (params_abs, cache_abs)

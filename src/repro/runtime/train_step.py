@@ -1,0 +1,149 @@
+"""pjit train-step builder: microbatched gradient accumulation, mixed
+precision, remat, YOCO execution modes, and sharding attachment.
+
+``make_train_step`` returns a pure function
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+suitable for ``jax.jit`` with donated params/opt_state. ``jit_train_step``
+attaches the mesh shardings (the multi-pod dry-run lowers exactly this)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.yoco_linear import YocoConfig, DEFAULT_YOCO
+from repro.distributed import sharding
+from repro.models import model as model_mod
+from repro.models.model import ModelRuntime, DEFAULT_RT
+from repro.optim import adamw
+
+
+def make_train_step(cfg, yoco: YocoConfig = DEFAULT_YOCO,
+                    rt: ModelRuntime = DEFAULT_RT,
+                    opt_cfg: adamw.OptConfig = adamw.OptConfig(),
+                    grad_specs=None):
+    """Gradient-accumulated AdamW train step.
+
+    With ``opt_cfg.grad_accum = A``, the (local) batch dim B is split into A
+    microbatches of B/A; grads accumulate in f32 across a ``lax.scan`` —
+    wall-clock-serial on real hardware but 1/A the activation memory, which
+    is what lets the 671B-class cells fit HBM (EXPERIMENTS.md §Dry-run).
+
+    §Perf iterations baked in:
+      * matrix params are cast to bf16 on-shard BEFORE the model consumes
+        them, so FSDP all-gathers move bf16, not f32 (2x wire);
+      * per-microbatch grads are sharding-constrained to the parameter
+        specs, turning the partitioner's full all-reduce into
+        reduce-scatter onto the sharded f32 accumulator."""
+
+    def cast_params(params):
+        return jax.tree.map(
+            lambda p: p.astype(jnp.bfloat16)
+            if (hasattr(p, 'dtype') and p.dtype == jnp.float32
+                and p.ndim >= 2) else p, params)
+
+    def loss_of(params, mb):
+        return model_mod.loss_fn(cast_params(params), mb, cfg, yoco, rt)
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def constrain_grads(g):
+        if grad_specs is None or rt.mesh is None:
+            return g
+        from jax.sharding import NamedSharding
+        return jax.tree.map(
+            lambda gg, sp: jax.lax.with_sharding_constraint(
+                gg, NamedSharding(rt.mesh, sp)), g, grad_specs)
+
+    def train_step(params, opt_state, batch):
+        accum = opt_cfg.grad_accum
+        if accum > 1:
+            mbs = jax.tree.map(
+                lambda a: a.reshape((accum, a.shape[0] // accum)
+                                    + a.shape[1:]), batch)
+            if rt.mesh is not None:
+                # keep the microbatch dim sharded over dp (the reshape would
+                # otherwise force an awkward split of the dp axis)
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                mbs = jax.tree.map(
+                    lambda a: jax.lax.with_sharding_constraint(
+                        a, NamedSharding(rt.mesh, P(
+                            None, rt.dp_axes, *([None] * (a.ndim - 2))))),
+                    mbs)
+
+            def body(carry, mb):
+                gacc, lacc = carry
+                (loss, metrics), g = grad_fn(params, mb)
+                g = constrain_grads(g)
+                gacc = jax.tree.map(
+                    lambda acc, gg: acc + gg.astype(jnp.float32), gacc, g)
+                return (gacc, lacc + loss), metrics
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), metrics = jax.lax.scan(
+                body, (zeros, jnp.float32(0.0)), mbs)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss_sum / accum
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = constrain_grads(grads)
+        new_params, new_opt, om = adamw.update(params, grads, opt_state,
+                                               opt_cfg)
+        metrics = dict(metrics, **om, loss=loss)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+# ----------------------------------------------------------------------------
+# abstract trees + shardings (used by launcher and dry-run)
+# ----------------------------------------------------------------------------
+def abstract_state(cfg, opt_cfg: adamw.OptConfig = adamw.OptConfig(),
+                   param_dtype=jnp.float32):
+    """ShapeDtypeStructs of (params, opt_state) without allocating."""
+    params = jax.eval_shape(
+        lambda k: model_mod.init_params(k, cfg),
+        jax.ShapeDtypeStruct((), jnp.uint32, sharding=None)
+        if False else jax.random.key(0))
+    opt = jax.eval_shape(functools.partial(adamw.init, cfg=opt_cfg), params)
+    return params, opt
+
+
+def state_shardings(mesh, cfg, params_abs, opt_abs, layout: str = 'tp'):
+    pspecs = sharding.param_specs(params_abs, mesh, layout)
+    ospecs = sharding.opt_specs(pspecs, opt_abs)
+    dp = sharding.dp_axes_of(mesh)
+    bspecs = sharding.batch_specs(cfg, dp)
+    return (sharding.to_shardings(mesh, pspecs),
+            sharding.to_shardings(mesh, ospecs),
+            sharding.to_shardings(mesh, bspecs))
+
+
+def jit_train_step(mesh, cfg, yoco: YocoConfig = DEFAULT_YOCO,
+                   rt: Optional[ModelRuntime] = None,
+                   opt_cfg: adamw.OptConfig = adamw.OptConfig(),
+                   donate: bool = True, layout: str = 'tp',
+                   remat: str = 'full'):
+    """jit the train step with full sharding annotations for ``mesh``."""
+    if rt is None:
+        rt = ModelRuntime(mesh=mesh, dp_axes=sharding.dp_axes_of(mesh),
+                          use_ep=(cfg.moe is not None
+                                  and cfg.moe.impl == 'ep'),
+                          remat=remat,
+                          act_layout='2d' if layout == 'fsdp2d' else 'batch')
+    params_abs, opt_abs = abstract_state(cfg, opt_cfg)
+    psh, osh, bsh = state_shardings(mesh, cfg, params_abs, opt_abs, layout)
+    pspecs = sharding.param_specs(params_abs, mesh, layout)
+    step = make_train_step(cfg, yoco, rt, opt_cfg, grad_specs=pspecs)
+    metrics_sh = None    # replicated by default
+    return jax.jit(
+        step,
+        in_shardings=(psh, osh, bsh),
+        out_shardings=(psh, osh, metrics_sh),
+        donate_argnums=(0, 1) if donate else (),
+    ), (params_abs, opt_abs)

@@ -1,0 +1,12 @@
+import os
+import sys
+
+# tests must see exactly ONE device (the dry-run sets its own 512-device
+# flag in its own process); keep any user XLA_FLAGS out of the way
+os.environ.setdefault('JAX_PLATFORMS', 'cpu')
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), '..', 'src'))
+
+import jax  # noqa: E402
+
+jax.config.update('jax_enable_x64', False)

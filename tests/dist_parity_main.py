@@ -1,0 +1,75 @@
+"""Subprocess body for tests/test_distributed_parity.py: runs under
+XLA_FLAGS=--xla_force_host_platform_device_count=4 and compares the
+distributed execution paths against the single-logical-device reference.
+
+Prints one line per check: ``PARITY <name> <max_rel_err>``."""
+
+import os
+import sys
+
+os.environ['XLA_FLAGS'] = (os.environ.get('XLA_FLAGS', '')
+                           + ' --xla_force_host_platform_device_count=4')
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), '..', 'src'))
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core.yoco_linear import YocoConfig
+from repro.data import synthetic
+from repro.distributed import sharding
+from repro.models import model as M
+from repro.models.model import ModelRuntime
+
+
+def rel_err(a, b):
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    return float(jnp.max(jnp.abs(a - b)) / (jnp.max(jnp.abs(b)) + 1e-9))
+
+
+def check(name, arch, *, ep=False, seq=32, batch=4):
+    cfg = configs.get(arch, smoke=True)
+    if ep and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, impl='ep',
+                                         capacity_factor=100.0))
+    params = M.init_params(jax.random.key(0), cfg)
+    batch_d = synthetic.make_batch(
+        synthetic.for_arch(cfg, global_batch=batch, seq_len=seq), 0)
+    # single-device reference (dense MoE oracle)
+    cfg_ref = cfg
+    if ep and cfg.moe is not None:
+        cfg_ref = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, impl='dense'))
+    ref, _ = M.loss_fn(params, batch_d, cfg_ref, YocoConfig(mode='bf16'))
+
+    mesh = jax.make_mesh((2, 2), ('data', 'model'))
+    for layout in ('tp', 'fsdp2d'):
+        rt = ModelRuntime(mesh=mesh, dp_axes=('data',), use_ep=ep,
+                          act_layout='2d' if layout == 'fsdp2d' else 'batch')
+        pspecs = sharding.param_specs(params, mesh, layout)
+        psh = sharding.to_shardings(mesh, pspecs)
+        params_d = jax.device_put(params, psh)
+        bsh = sharding.to_shardings(
+            mesh, sharding.batch_specs(cfg, ('data',)))
+        batch_dd = jax.device_put(batch_d, bsh)
+        with jax.set_mesh(mesh):
+            loss, _ = jax.jit(
+                lambda p, b: M.loss_fn(p, b, cfg, YocoConfig(mode='bf16'),
+                                       rt))(params_d, batch_dd)
+        err = rel_err(loss, ref)
+        print(f'PARITY {name}.{layout} {err:.6f}', flush=True)
+
+
+def main():
+    check('dense', 'stablelm-1.6b')
+    check('mla_moe', 'deepseek-v3-671b', ep=True)
+    check('gqa_moe', 'qwen2-moe-a2.7b', ep=True)
+    check('ssm', 'mamba2-780m')
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,110 @@
+"""Circuit-behavioral simulator calibration against the paper's Fig. 5 /
+§III-C / §IV-C numbers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import analog
+
+
+def test_lsb_constant_matches_paper():
+    # paper: 1 LSB = 3.52 mV at VDD = 0.9 V, 8 bits
+    assert abs(analog.LSB - 3.52e-3) < 0.02e-3
+
+
+def test_ideal_input_conversion_is_eq2():
+    codes = jnp.arange(256)
+    v = analog.input_conversion_ideal(codes)
+    np.testing.assert_allclose(np.asarray(v),
+                               np.arange(256) / 255.0 * analog.VDD,
+                               rtol=1e-6)
+
+
+def test_input_conversion_inl_dnl_under_2lsb():
+    """Fig. 5a/b: INL and DNL < 2 LSB over all 256 codes (chip mismatch,
+    no thermal noise: that's Fig. 5c)."""
+    codes = jnp.arange(256)
+    chip = analog.sample_chip(jax.random.key(7))
+    v = analog.input_conversion(codes[None, :].repeat(analog.MACRO_ROWS, 0).T,
+                                chip)  # (256, rows)
+    v = v[:, 0]
+    ideal = analog.input_conversion_ideal(codes)
+    inl = np.abs(np.asarray(v - ideal)) / analog.LSB
+    dnl = np.abs(np.diff(np.asarray(v)) - analog.LSB) / analog.LSB
+    assert inl.max() < 2.0, inl.max()
+    assert dnl.max() < 2.0, dnl.max()
+
+
+def test_input_conversion_3sigma_under_1lsb():
+    """Fig. 5c: 2K Monte-Carlo, 3-sigma error ~2.25 mV < 1 LSB (3.52 mV)."""
+    n = 2000
+    keys = jax.random.split(jax.random.key(0), n)
+    code = jnp.full((n, 1), 128)
+
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        chip = analog.sample_chip(k1, rows=1)
+        return analog.input_conversion(code[:1], chip, k2)
+
+    vs = jax.vmap(one)(keys)
+    ideal = analog.input_conversion_ideal(jnp.array([128]))
+    # remove the deterministic bow (it is INL, not random error — Fig. 5b)
+    bow = analog.INL_BOW_LSB * analog.LSB * np.sin(np.pi * 128 / 255)
+    err = np.asarray(vs).reshape(-1) - float(ideal[0]) - bow
+    sigma3 = 3 * err.std()
+    assert sigma3 < analog.LSB, (sigma3, analog.LSB)
+    assert sigma3 > 0.2 * analog.LSB          # non-trivial noise modeled
+
+
+def test_mac_error_under_paper_bound():
+    """Fig. 5d/e: 8-bit MAC with 128 channels, max error <= 0.68% FS."""
+    rows = analog.MACRO_ROWS
+    # weight-scan TC: input all-255, weights swept 0..255 (one CB output)
+    w_codes = jnp.arange(256)[None, :].repeat(rows, 0)      # (rows, 256)
+    x = jnp.full((rows,), 255)
+    chip = analog.sample_chip(jax.random.key(3), cbs=256)
+    v_in = analog.input_conversion(x, None)                 # noise-free input
+    v = analog.macro_mac(v_in, w_codes, chip)
+    ideal = analog.macro_mac_ideal(x, w_codes)
+    fs = float(jnp.max(jnp.abs(ideal)))
+    err = np.abs(np.asarray(v - ideal)) / fs
+    assert err.max() <= 0.0068 + 2e-3, err.max()            # paper 0.68%
+
+
+def test_time_accumulation_error_under_paper_bound():
+    """§III-C: VTC-chain accumulation error <= 0.11% of full scale."""
+    n_macros = 8
+    chip = analog.sample_chip(jax.random.key(5), n_macros_v=n_macros)
+    v_parts = jnp.full((n_macros, 32), analog.VDD / 2)
+    got = analog.time_accumulate(v_parts, chip, axis=0)
+    ideal = jnp.sum(v_parts, axis=0)
+    rel = np.abs(np.asarray(got - ideal)) / float(jnp.max(jnp.abs(ideal)))
+    assert rel.max() <= 0.0011 + 5e-4, rel.max()
+
+
+def test_full_vmm_error_under_total_bound():
+    """§IV-C: total VMM error < 0.79% of full scale (1024-channel VMM)."""
+    key = jax.random.key(11)
+    x = jax.random.randint(key, (4, 1024), 0, 256)
+    w = jax.random.randint(jax.random.fold_in(key, 1), (1024, 32), 0, 256)
+    codes = analog.analog_vmm(x, w, key=jax.random.fold_in(key, 2))
+    ideal = analog.analog_vmm_ideal_codes(x, w)
+    # error in codes relative to the 8-bit full scale
+    rel = np.abs(np.asarray(codes - ideal)) / 255.0
+    assert rel.max() <= 0.0079 + 0.004, rel.max()
+
+
+def test_analog_vmm_ideal_matches_int_matmul():
+    key = jax.random.key(13)
+    x = jax.random.randint(key, (2, 256), 0, 256)
+    w = jax.random.randint(jax.random.fold_in(key, 1), (256, 8), 0, 256)
+    codes = analog.analog_vmm(x, w, key=None)     # ideal circuits
+    ideal = analog.analog_vmm_ideal_codes(x, w)
+    assert int(jnp.max(jnp.abs(codes - ideal))) <= 1   # TDC rounding only
+
+
+def test_error_model_summary_fields():
+    em = analog.error_model_summary()
+    assert em['total_bound'] == 0.0079
+    assert em['tdc_bits'] == 8

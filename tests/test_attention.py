@@ -1,0 +1,131 @@
+"""Attention unit tests: GQA masks/windows, RoPE variants, MLA absorbed
+decode == naive attention."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.yoco_linear import DEFAULT_YOCO
+from repro.models import attention as A
+from repro.models import rope
+
+
+def test_causal_mask_basic():
+    m = A.causal_mask(4, 4)
+    assert float(m[0, 1]) < -1e30 and float(m[3, 0]) == 0.0
+
+
+def test_causal_mask_window():
+    m = A.causal_mask(6, 6, window=2)
+    assert float(m[5, 4]) == 0.0
+    assert float(m[5, 3]) < -1e30          # outside the window
+    assert float(m[5, 5]) == 0.0
+
+
+def test_sliding_window_equals_full_for_short_seq():
+    cfg = configs.get('stablelm-1.6b', smoke=True)
+    p = A.init_attention(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 8, cfg.d_model))
+    y_full, _ = A.attention(p, x, cfg, DEFAULT_YOCO)
+    y_win, _ = A.attention(p, x, cfg, DEFAULT_YOCO, window=1024)
+    np.testing.assert_allclose(np.asarray(y_full, np.float32),
+                               np.asarray(y_win, np.float32), atol=1e-5)
+
+
+def test_rope_preserves_norm():
+    x = jax.random.normal(jax.random.key(2), (2, 16, 4, 32))
+    pos = rope.default_positions(2, 16)
+    y = rope.apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+
+
+def test_rope_relative_shift_invariance():
+    """RoPE dot products depend only on relative positions."""
+    q = jax.random.normal(jax.random.key(3), (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.key(4), (1, 1, 1, 32))
+    def score(offset):
+        qp = rope.apply_rope(q, jnp.array([[5 + offset]]), 10000.0)
+        kp = rope.apply_rope(k, jnp.array([[3 + offset]]), 10000.0)
+        return float(jnp.sum(qp * kp))
+    assert abs(score(0) - score(100)) < 1e-4
+
+
+def test_partial_rope_leaves_tail_untouched():
+    x = jax.random.normal(jax.random.key(5), (1, 4, 2, 32))
+    pos = rope.default_positions(1, 4)
+    y = rope.apply_rope(x, pos, 10000.0, fraction=0.25)
+    np.testing.assert_array_equal(np.asarray(y[..., 8:]),
+                                  np.asarray(x[..., 8:]))
+
+
+def test_mrope_reduces_to_rope_for_text():
+    """Equal (t,h,w) position streams == plain RoPE (qwen2-vl text mode),
+    up to the frequency-slot permutation M-RoPE applies per section."""
+    x = jax.random.normal(jax.random.key(6), (2, 8, 2, 16))
+    pos = rope.default_positions(2, 8)
+    pos3 = jnp.stack([pos, pos, pos], axis=-1)
+    y3 = rope.apply_mrope(x, pos3, 10000.0)
+    # scores must still be relative-position-only
+    q = y3[:, 4:5]
+    k = y3[:, 2:3]
+    s1 = jnp.einsum('bqhd,bkhd->bhqk', q, k)
+    pos3b = pos3 + 7
+    y3b = rope.apply_mrope(x, pos3b, 10000.0)
+    s2 = jnp.einsum('bqhd,bkhd->bhqk', y3b[:, 4:5], y3b[:, 2:3])
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4)
+
+
+def test_gqa_head_broadcast_matches_mha():
+    """n_kv_heads=1 GQA == every query head attending the same K/V."""
+    cfg = configs.get('starcoder2-15b', smoke=True)
+    q = jax.random.normal(jax.random.key(7), (1, 6, 8, 16))
+    k = jax.random.normal(jax.random.key(8), (1, 6, 2, 16))
+    v = jax.random.normal(jax.random.key(9), (1, 6, 2, 16))
+    out = A._sdpa(q, k, v, A.causal_mask(6, 6), 0.25)
+    k_rep = jnp.repeat(k, 4, axis=2)
+    v_rep = jnp.repeat(v, 4, axis=2)
+    out_mha = A._sdpa(q, k_rep, v_rep, A.causal_mask(6, 6), 0.25)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(out_mha, np.float32), atol=1e-5)
+
+
+def test_gqa_decode_matches_full():
+    cfg = configs.get('stablelm-12b', smoke=True)
+    p = A.init_attention(jax.random.key(10), cfg)
+    x = jax.random.normal(jax.random.key(11), (2, 9, cfg.d_model))
+    y_full, _ = A.attention(p, x, cfg, DEFAULT_YOCO)
+    cache = A.init_cache(cfg, 2, 16)
+    _, cache = A.attention(p, x[:, :8], cfg, DEFAULT_YOCO, cache=cache)
+    y_t, _ = A.attention_decode(p, x[:, 8:9], cfg, DEFAULT_YOCO,
+                                cache=cache, pos=jnp.int32(8))
+    np.testing.assert_allclose(np.asarray(y_t, np.float32),
+                               np.asarray(y_full[:, 8:9], np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_mla_absorbed_decode_matches_naive():
+    cfg = configs.get('deepseek-v3-671b', smoke=True)
+    p = A.init_mla(jax.random.key(12), cfg)
+    x = jax.random.normal(jax.random.key(13), (2, 7, cfg.d_model))
+    y_full, _ = A.mla_attention(p, x, cfg, DEFAULT_YOCO)
+    cache = dict(ckv=jnp.zeros((2, 12, cfg.mla.kv_lora_rank), jnp.float32),
+                 krope=jnp.zeros((2, 12, cfg.mla.rope_head_dim), jnp.float32))
+    _, cache = A.mla_attention(p, x[:, :6], cfg, DEFAULT_YOCO, cache=cache)
+    y_t, _ = A.mla_attention_decode(p, x[:, 6:7], cfg, DEFAULT_YOCO,
+                                    cache=cache, pos=jnp.int32(6))
+    np.testing.assert_allclose(np.asarray(y_t, np.float32),
+                               np.asarray(y_full[:, 6:7], np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_mla_cache_is_compressed():
+    """The MLA decode cache stores r + d_rope floats/token, not 2*H*dh."""
+    cfg = configs.get('deepseek-v3-671b')
+    m = cfg.mla
+    latent = m.kv_lora_rank + m.rope_head_dim
+    naive = 2 * cfg.n_heads * (m.nope_head_dim + m.rope_head_dim)
+    assert latent * 20 < naive          # >20x compression for deepseek-v3

@@ -1,0 +1,106 @@
+"""Validate the multi-pod dry-run artifacts (deliverable e): every live
+(arch x shape x mesh) cell must have a compile record with sane contents.
+These tests read the JSON artifacts produced by ``repro.launch.dryrun``;
+they are skipped (not failed) if the sweep has not been run in this
+checkout, and the HLO parsing helpers are unit-tested directly."""
+
+import json
+import os
+
+import pytest
+
+from repro import configs
+from repro.launch import dryrun as DR
+
+ART = os.path.join(os.path.dirname(__file__), '..', 'experiments', 'dryrun')
+
+LIVE = [(a, s, m)
+        for m in ('single', 'multi')
+        for a in configs.names()
+        for s in configs.SHAPES
+        if configs.cell_is_live(configs.get(a), s)]
+
+
+def _load(arch, shape, mesh):
+    path = os.path.join(ART, mesh, f'{arch}__{shape}.json')
+    if not os.path.exists(path):
+        pytest.skip(f'dry-run artifact missing: run python -m '
+                    f'repro.launch.dryrun --all ({path})')
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_expected_cell_count():
+    # 10 archs x (train, prefill, decode) + 2 long_500k = 32 live per mesh
+    assert len(LIVE) == 64
+
+
+@pytest.mark.parametrize('arch,shape,mesh', LIVE)
+def test_cell_artifact_sane(arch, shape, mesh):
+    rec = _load(arch, shape, mesh)
+    assert rec['n_chips'] == (512 if mesh == 'multi' else 256)
+    assert rec['cost'].get('flops', 0) > 0
+    assert rec['memory']['peak_memory_in_bytes'] > 0
+    assert rec['compile_s'] > 0
+    if mesh == 'multi':
+        assert rec['mesh_shape'] == {'pod': 2, 'data': 16, 'model': 16}
+    else:
+        assert rec['mesh_shape'] == {'data': 16, 'model': 16}
+
+
+def test_train_cells_have_gradient_allreduce():
+    rec = _load('stablelm-1.6b', 'train_4k', 'single')
+    assert rec['collectives']['per_kind_bytes']['all-reduce'] > 0
+
+
+def test_moe_cells_have_all_to_all():
+    rec = _load('deepseek-v3-671b', 'train_4k', 'single')
+    assert rec['collectives']['per_kind_bytes']['all-to-all'] > 0
+
+
+def test_multi_pod_shards_the_pod_axis():
+    """Multi-pod peak bytes/device must not exceed single-pod (DP over pods
+    splits the batch; params are identical)."""
+    s = _load('gemma3-27b', 'train_4k', 'single')
+    m = _load('gemma3-27b', 'train_4k', 'multi')
+    assert m['memory']['peak_memory_in_bytes'] <= \
+        s['memory']['peak_memory_in_bytes'] * 1.1
+
+
+# ---------------------------------------------------------------------------
+# HLO parser unit tests (no artifacts needed)
+# ---------------------------------------------------------------------------
+HLO_SAMPLE = '''
+HloModule jit_f
+
+%region_0.1 (a: f32[8]) -> f32[8] {
+  %x = f32[8]{0} parameter(0)
+  %ar = f32[8]{0} all-reduce(%x), channel_id=1, replica_groups=[4,8]<=[32], to_apply=%add
+}
+
+ENTRY %main (p: f32[8]) -> f32[8] {
+  %p = f32[8]{0} parameter(0)
+  %w = (s32[], f32[8]{0}) while(%tup), condition=%cond, body=%region_0.1, backend_config={"known_trip_count":{"n":"12"}}
+  %ag = f32[64]{0} all-gather(%p), channel_id=2, replica_groups=[4,8]<=[32], dimensions={0}
+}
+'''
+
+
+def test_parser_weights_while_bodies():
+    out = DR.parse_collectives(HLO_SAMPLE)
+    # all-reduce: 32B payload, g=8 -> wire 2*(7/8)*32 = 56B, x12 trips = 672
+    assert abs(out['per_kind_bytes']['all-reduce'] - 672.0) < 1e-6
+    # all-gather: 256B result, g=8 -> wire 224, x1
+    assert abs(out['per_kind_bytes']['all-gather'] - 224.0) < 1e-6
+    assert out['while_trip_counts'] == [12]
+
+
+def test_shape_bytes_parses_layouts():
+    assert DR._shape_bytes('f32[2,3]{1,0}') == 24
+    assert DR._shape_bytes('(bf16[4]{0}, s8[8]{0})') == 16
+    assert DR._shape_bytes('f32[]') == 4
+
+
+def test_group_size_formats():
+    assert DR._group_size('replica_groups=[8,16]<=[128]') == 16
+    assert DR._group_size('replica_groups={{0,1,2,3},{4,5,6,7}}') == 4

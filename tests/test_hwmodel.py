@@ -1,0 +1,75 @@
+"""Table-I hardware model reproduces the paper's headline numbers."""
+
+import math
+
+from repro.core import hwmodel
+from repro import configs
+
+
+def test_core_energy_matches_table1():
+    e = hwmodel.core_vmm_energy()
+    assert abs(e['total'] - 4235e-12) / 4235e-12 < 1e-6
+
+
+def test_core_latency_under_20ns():
+    lat = hwmodel.core_vmm_latency()
+    assert lat['total'] < 20e-9
+    assert lat['total'] > 13e-9                      # macro phase dominates
+
+
+def test_energy_efficiency_123_8_tops_w():
+    got = hwmodel.energy_efficiency_tops_w()
+    assert abs(got - 123.8) < 0.2, got               # paper: 123.8 TOPS/W
+
+
+def test_throughput_26_2_tops():
+    got = hwmodel.throughput_tops()
+    assert abs(got - 26.2) < 0.1, got                # paper: 26.2 TOPS
+
+
+def test_vmm_dims_1024x256():
+    cfg = hwmodel.DEFAULT_CORE
+    assert cfg.vmm_k == 1024 and cfg.vmm_n == 256
+    assert cfg.n_macros == 64 and cfg.n_tdcs == 256
+
+
+def test_adc_overhead_reduction_87_5():
+    assert abs(hwmodel.adc_overhead_reduction() - 0.875) < 1e-9
+
+
+def test_sota_ranges_match_fig67():
+    rows = hwmodel.sota_comparison()
+    e_ratios = [r['energy_ratio'] for r in rows]
+    t_ratios = [r['throughput_ratio'] for r in rows]
+    # paper: 1.5-40x energy, 9-873x throughput
+    assert 1.2 < min(e_ratios) < 2.0 and 30 < max(e_ratios) < 45
+    assert 8 < min(t_ratios) < 16 and 800 < max(t_ratios) < 900
+
+
+def test_overhead_breakdown_sums_to_one():
+    br = hwmodel.overhead_breakdown()
+    assert abs(sum(br.values()) - 1.0) < 1e-6
+    assert br['compute'] > 0.1                       # MCCs are a real share
+
+
+def test_energy_scales_with_activity():
+    lo = hwmodel.core_vmm_energy(activity=0.1)['total']
+    hi = hwmodel.core_vmm_energy(activity=0.9)['total']
+    assert hi > lo
+
+
+def test_map_matmul_tiles_and_utilization():
+    r = hwmodel.map_matmul(1, 1024, 256)
+    assert r['shots'] == 1 and abs(r['utilization'] - 1.0) < 1e-9
+    r2 = hwmodel.map_matmul(1, 1500, 300)            # pads to 2x2 shots
+    assert r2['shots'] == 4
+    assert r2['utilization'] < 0.5
+
+
+def test_map_architecture_all_assigned():
+    for name in configs.names():
+        cfg = configs.get(name)
+        r = hwmodel.map_architecture(cfg)
+        assert r['energy_per_token'] > 0
+        assert 0 < r['utilization'] <= 1.0
+        assert r['effective_tops_w'] <= 123.9

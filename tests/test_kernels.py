@@ -1,0 +1,117 @@
+"""Pallas kernel tests: shape/dtype sweeps vs the pure-jnp oracles, run in
+interpret mode on CPU (the same kernel body that compiles for TPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels import quantize as qkern
+from repro.kernels import yoco_vmm as vkern
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYP = False
+
+
+@pytest.mark.parametrize('m,k', [(128, 256), (256, 512), (128, 1024)])
+def test_quantize_rows_kernel_vs_ref(m, k):
+    x = jax.random.normal(jax.random.key(m + k), (m, k), jnp.float32)
+    xq, s = qkern.quantize_rows(x, bm=128, interpret=True)
+    xq_r, s_r = ref.quantize_rows_ref(x)
+    np.testing.assert_array_equal(np.asarray(xq), np.asarray(xq_r))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_r), rtol=1e-6)
+
+
+@pytest.mark.parametrize('m,k,n,bm,bk,bn', [
+    (128, 256, 128, 128, 256, 128),
+    (256, 512, 256, 128, 256, 128),
+    (128, 256, 256, 64, 128, 128),
+])
+def test_int8_matmul_kernel_exact(m, k, n, bm, bk, bn):
+    key = jax.random.key(m * 7 + n)
+    xq = jax.random.randint(key, (m, k), -127, 128, jnp.int32).astype(jnp.int8)
+    wq = jax.random.randint(jax.random.fold_in(key, 1), (k, n), -127, 128,
+                            jnp.int32).astype(jnp.int8)
+    got = vkern.int8_matmul(xq, wq, bm=bm, bk=bk, bn=bn, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.int8_matmul_ref(xq, wq)))
+
+
+@pytest.mark.parametrize('m,k,n', [(128, 256, 128), (128, 512, 256)])
+def test_yoco_vmm_int8_kernel_vs_ref(m, k, n):
+    key = jax.random.key(m + k + n)
+    xq = jax.random.randint(key, (m, k), -127, 128, jnp.int32).astype(jnp.int8)
+    wq = jax.random.randint(jax.random.fold_in(key, 1), (k, n), -127, 128,
+                            jnp.int32).astype(jnp.int8)
+    sx = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (m, 1))) + 0.01
+    sw = jnp.abs(jax.random.normal(jax.random.fold_in(key, 3), (1, n))) + 0.01
+    got = vkern.yoco_vmm_int8(xq, wq, sx, sw, interpret=True)
+    want = ref.yoco_vmm_int8_ref(xq, wq, sx, sw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# wrapper-level sweeps (padding + arbitrary shapes + leading dims)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize('shape,k,n', [
+    ((4, 96), 96, 80),          # unaligned everything
+    ((2, 3, 130), 130, 60),     # leading dims + odd K
+    ((1, 256), 256, 256),       # aligned
+    ((7, 1000), 1000, 333),     # large odd
+])
+def test_yoco_vmm_wrapper_vs_oracle(shape, k, n):
+    key = jax.random.key(sum(shape) + n)
+    x = jax.random.normal(key, shape, jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n), jnp.float32)
+    got = ops.yoco_vmm(x, w)
+    want = ref.yoco_vmm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize('dtype', [jnp.float32, jnp.bfloat16])
+def test_yoco_vmm_wrapper_dtypes(dtype):
+    key = jax.random.key(9)
+    x = jax.random.normal(key, (8, 192), dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (192, 64), dtype)
+    got = ops.yoco_vmm(x, w)
+    want = ref.yoco_vmm_ref(x.astype(jnp.float32), w.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_quantize_rows_wrapper_leading_dims():
+    x = jax.random.normal(jax.random.key(2), (3, 5, 100))
+    xq, s = ops.quantize_rows(x)
+    xq_r, s_r = ref.quantize_rows_ref(x.reshape(-1, 100))
+    np.testing.assert_array_equal(np.asarray(xq).reshape(-1, 100),
+                                  np.asarray(xq_r))
+    assert s.shape == (3, 5, 1)
+
+
+def test_int8_matmul_wrapper_unaligned():
+    key = jax.random.key(5)
+    xq = jax.random.randint(key, (5, 70), -127, 128, jnp.int32).astype(jnp.int8)
+    wq = jax.random.randint(jax.random.fold_in(key, 1), (70, 33), -127, 128,
+                            jnp.int32).astype(jnp.int8)
+    got = ops.int8_matmul(xq, wq)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.int8_matmul_ref(xq, wq)))
+
+
+if HAVE_HYP:
+    @given(st.integers(1, 16), st.integers(8, 300), st.integers(1, 128),
+           st.integers(0, 10**6))
+    @settings(max_examples=20, deadline=None)
+    def test_prop_yoco_vmm_any_shape(m, k, n, seed):
+        key = jax.random.key(seed)
+        x = jax.random.normal(key, (m, k), jnp.float32)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (k, n), jnp.float32)
+        got = ops.yoco_vmm(x, w)
+        want = ref.yoco_vmm_ref(x, w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)

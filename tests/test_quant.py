@@ -1,0 +1,96 @@
+"""Unit + property tests for the int8 quantization contract (core.quant)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYP = False
+
+
+def test_absmax_scale_maps_max_to_top_code():
+    x = jnp.array([[0.5, -2.0, 1.0]])
+    s = quant.absmax_scale(x)
+    q = quant.quantize(x, s)
+    assert int(jnp.max(jnp.abs(q))) == 127
+
+
+def test_quantize_roundtrip_error_bound():
+    key = jax.random.key(0)
+    x = jax.random.normal(key, (64, 128))
+    s = quant.absmax_scale(x, axis=0)                 # per-row
+    err = jnp.abs(quant.dequantize(quant.quantize(x, s), s) - x)
+    assert float(jnp.max(err / s)) <= 0.5 + 1e-5      # half LSB
+
+def test_per_channel_vs_per_tensor_granularity():
+    key = jax.random.key(1)
+    x = jax.random.normal(key, (32, 64)) * jnp.logspace(-2, 2, 64)
+    st_ = quant.absmax_scale(x, axis=None)
+    sc = quant.absmax_scale(x, axis=1)
+    et = jnp.mean(jnp.abs(quant.dequantize(quant.quantize(x, st_), st_) - x))
+    ec = jnp.mean(jnp.abs(quant.dequantize(quant.quantize(x, sc), sc) - x))
+    assert float(ec) < float(et)                      # finer scales win
+
+
+def test_int8_dot_exact_int32():
+    key = jax.random.key(2)
+    a = jax.random.randint(key, (8, 256), -127, 128, jnp.int32)
+    b = jax.random.randint(jax.random.fold_in(key, 1), (256, 16),
+                           -127, 128, jnp.int32)
+    got = quant.int8_dot(a.astype(jnp.int8), b.astype(jnp.int8))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(a) @ np.asarray(b))
+
+
+@pytest.mark.parametrize('shape', [(4, 64), (2, 8, 32), (1, 128)])
+def test_w8a8_matmul_close_to_float(shape):
+    key = jax.random.key(3)
+    x = jax.random.normal(key, shape)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (shape[-1], 48))
+    y = quant.w8a8_matmul(x, w)
+    ref = x @ w
+    rel = float(jnp.max(jnp.abs(y - ref)) / (jnp.max(jnp.abs(ref)) + 1e-9))
+    assert rel < 0.03, rel                            # paper: <0.79% typical
+
+
+def test_fake_quant_ste_gradient_is_identity_inside():
+    x = jnp.linspace(-1.0, 1.0, 11)
+    g = jax.grad(lambda t: jnp.sum(quant.fake_quant(t, None, 8)))(x)
+    np.testing.assert_allclose(np.asarray(g), 1.0, atol=1e-6)
+
+
+def test_fake_quant_forward_matches_quant_dequant():
+    key = jax.random.key(4)
+    x = jax.random.normal(key, (16, 32))
+    s = quant.absmax_scale(x, axis=1)
+    ref = quant.dequantize(quant.quantize(x, s), s)
+    got = quant.fake_quant(x, 1, 8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-6)
+
+
+if HAVE_HYP:
+    @given(st.integers(2, 8), st.integers(1, 6), st.integers(1, 64))
+    @settings(max_examples=30, deadline=None)
+    def test_prop_quant_error_bound_any_bits(bits, rows, cols):
+        key = jax.random.key(bits * 1000 + rows * 64 + cols)
+        x = jax.random.normal(key, (rows, cols)) * 10.0
+        s = quant.absmax_scale(x, axis=0, bits=bits)
+        err = jnp.abs(quant.dequantize(quant.quantize(x, s, bits), s) - x)
+        assert float(jnp.max(err / s)) <= 0.5 + 1e-4
+
+    @given(st.integers(1, 100))
+    @settings(max_examples=25, deadline=None)
+    def test_prop_w8a8_relative_error(seed):
+        key = jax.random.key(seed)
+        x = jax.random.normal(key, (4, 96))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (96, 24))
+        y = quant.w8a8_matmul(x, w)
+        ref = x @ w
+        rel = float(jnp.max(jnp.abs(y - ref))
+                    / (jnp.max(jnp.abs(ref)) + 1e-9))
+        assert rel < 0.05

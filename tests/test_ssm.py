@@ -1,0 +1,110 @@
+"""Mamba2/SSD: chunked form vs sequential recurrence oracle; decode parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.yoco_linear import DEFAULT_YOCO
+from repro.models import ssm
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYP = False
+
+
+def _rand_ssd_inputs(key, b=2, s=64, h=4, p=8, g=1, n=16):
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)) - 1.0)
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bmat = jax.random.normal(ks[3], (b, s, g, n)) * 0.5
+    cmat = jax.random.normal(jax.random.fold_in(ks[3], 1), (b, s, g, n)) * 0.5
+    return x, dt, a, bmat, cmat
+
+
+@pytest.mark.parametrize('chunk', [8, 16, 64])
+def test_ssd_chunked_matches_sequential(chunk):
+    x, dt, a, b, c = _rand_ssd_inputs(jax.random.key(0))
+    y, fin = ssm.ssd_chunked(x, dt, a, b, c, chunk)
+    y_ref, fin_ref = ssm.ssd_reference(x, dt, a, b, c)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(fin_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunked_with_initial_state():
+    key = jax.random.key(1)
+    x, dt, a, b, c = _rand_ssd_inputs(key, s=32)
+    init = jax.random.normal(jax.random.fold_in(key, 9), (2, 4, 8, 16))
+    y, fin = ssm.ssd_chunked(x, dt, a, b, c, 16, init_state=init)
+    y_ref, fin_ref = ssm.ssd_reference(x, dt, a, b, c, init_state=init)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(fin_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_state_continuity_across_segments():
+    """Prefill in two halves == prefill in one go (chunked-prefill path)."""
+    key = jax.random.key(2)
+    x, dt, a, b, c = _rand_ssd_inputs(key, s=64)
+    y_full, fin_full = ssm.ssd_chunked(x, dt, a, b, c, 16)
+    y1, s1 = ssm.ssd_chunked(x[:, :32], dt[:, :32], a, b[:, :32], c[:, :32], 16)
+    y2, s2 = ssm.ssd_chunked(x[:, 32:], dt[:, 32:], a, b[:, 32:], c[:, 32:],
+                             16, init_state=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(fin_full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mamba2_block_decode_matches_forward():
+    cfg = configs.get('mamba2-780m', smoke=True)
+    p = ssm.init_mamba2(jax.random.key(3), cfg)
+    x = jax.random.normal(jax.random.key(4), (2, 24, cfg.d_model),
+                          jnp.float32)
+    y_full, _ = ssm.mamba2_forward(p, x, cfg, DEFAULT_YOCO)
+    state = ssm.init_ssm_state(cfg, 2)
+    ys = []
+    for t in range(24):
+        y_t, state = ssm.mamba2_decode(p, x[:, t:t+1], cfg, DEFAULT_YOCO,
+                                       state=state)
+        ys.append(y_t)
+    y_dec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_dec, np.float32),
+                               np.asarray(y_full, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_mamba2_prefill_then_decode_continuity():
+    cfg = configs.get('mamba2-780m', smoke=True)
+    p = ssm.init_mamba2(jax.random.key(5), cfg)
+    x = jax.random.normal(jax.random.key(6), (1, 33, cfg.d_model), jnp.float32)
+    y_full, _ = ssm.mamba2_forward(p, x, cfg, DEFAULT_YOCO)
+    state = ssm.init_ssm_state(cfg, 1)
+    _, state = ssm.mamba2_forward(p, x[:, :32], cfg, DEFAULT_YOCO, state=state)
+    y_t, _ = ssm.mamba2_decode(p, x[:, 32:33], cfg, DEFAULT_YOCO, state=state)
+    np.testing.assert_allclose(np.asarray(y_t, np.float32),
+                               np.asarray(y_full[:, 32:33], np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+if HAVE_HYP:
+    @given(st.integers(0, 10**6), st.sampled_from([8, 16, 32]),
+           st.integers(1, 3))
+    @settings(max_examples=15, deadline=None)
+    def test_prop_ssd_chunk_invariance(seed, chunk, b):
+        """Output must not depend on the chunk size (pure reassociation)."""
+        key = jax.random.key(seed)
+        x, dt, a, bm, cm = _rand_ssd_inputs(key, b=b, s=32)
+        y1, f1 = ssm.ssd_chunked(x, dt, a, bm, cm, chunk)
+        y2, f2 = ssm.ssd_chunked(x, dt, a, bm, cm, 32)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=3e-4, atol=3e-4)
+        np.testing.assert_allclose(np.asarray(f1), np.asarray(f2),
+                                   rtol=3e-4, atol=3e-4)

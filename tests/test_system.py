@@ -1,0 +1,135 @@
+"""End-to-end system behaviour: training convergence, YOCO-mode accuracy
+deltas (the paper's <0.5% claim at tiny scale), serving loop, data pipeline
+invariants, sharding-rule sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.yoco_linear import YocoConfig
+from repro.data import synthetic
+from repro.distributed import sharding
+from repro.launch import serve as serve_mod
+from repro.launch import train as train_mod
+from repro.models import model as M
+
+
+def test_training_decreases_loss(tmp_path):
+    out = train_mod.train('stablelm-1.6b', steps=40, global_batch=8,
+                          seq_len=64, lr=2e-3, ckpt_every=0,
+                          ckpt_dir=str(tmp_path), quiet=True)
+    first = np.mean(out['history'][:5])
+    last = np.mean(out['history'][-5:])
+    assert last < first - 0.05, (first, last)
+
+
+def test_qat_training_runs_and_learns(tmp_path):
+    out = train_mod.train('stablelm-1.6b', steps=30, global_batch=8,
+                          seq_len=64, lr=2e-3, ckpt_every=0, mode='qat',
+                          ckpt_dir=str(tmp_path), quiet=True)
+    assert np.mean(out['history'][-5:]) < np.mean(out['history'][:5])
+
+
+def test_w8a8_forward_close_to_bf16_lm():
+    """Deploying the same weights through the 8-bit path changes the loss
+    by a small margin (<0.5%-accuracy-loss analogue at loss level)."""
+    cfg = configs.get('stablelm-1.6b', smoke=True)
+    params = M.init_params(jax.random.key(0), cfg)
+    dc = synthetic.for_arch(cfg, global_batch=4, seq_len=64)
+    batch = synthetic.make_batch(dc, 0)
+    l_bf16, _ = M.loss_fn(params, batch, cfg, YocoConfig(mode='bf16'))
+    l_w8a8, _ = M.loss_fn(params, batch, cfg, YocoConfig(mode='w8a8'))
+    l_analog, _ = M.loss_fn(params, batch, cfg, YocoConfig(mode='analog_sim'))
+    assert abs(float(l_w8a8) - float(l_bf16)) / float(l_bf16) < 0.01
+    assert abs(float(l_analog) - float(l_bf16)) / float(l_bf16) < 0.02
+
+
+def test_serve_loop_all_input_kinds():
+    for arch in ('stablelm-1.6b', 'musicgen-large', 'qwen2-vl-72b'):
+        out = serve_mod.serve(arch, batch=2, prompt_len=8, gen_len=4,
+                              quiet=True)
+        assert out['generated_shape'][0] == 2
+
+
+def test_serve_prequantized_matches_dynamic():
+    out_dyn = serve_mod.serve('stablelm-1.6b', batch=2, prompt_len=8,
+                              gen_len=6, mode='w8a8', quiet=True)
+    out_pre = serve_mod.serve('stablelm-1.6b', batch=2, prompt_len=8,
+                              gen_len=6, mode='w8a8', prequantize=True,
+                              quiet=True)
+    assert out_dyn['generated_shape'] == out_pre['generated_shape']
+
+
+def test_data_pipeline_deterministic_and_shardable():
+    cfg = configs.get('stablelm-1.6b', smoke=True)
+    dc = synthetic.for_arch(cfg, global_batch=8, seq_len=32)
+    b1 = synthetic.make_batch(dc, 5)
+    b2 = synthetic.make_batch(dc, 5)
+    np.testing.assert_array_equal(np.asarray(b1['inputs']),
+                                  np.asarray(b2['inputs']))
+    b3 = synthetic.make_batch(dc, 6)
+    assert not np.array_equal(np.asarray(b1['inputs']),
+                              np.asarray(b3['inputs']))
+    # labels are next tokens
+    np.testing.assert_array_equal(np.asarray(b1['inputs'][:, 1:]),
+                                  np.asarray(b1['labels'][:, :-1]))
+
+
+def test_data_is_learnable_not_uniform():
+    cfg = configs.get('stablelm-1.6b', smoke=True)
+    dc = synthetic.for_arch(cfg, global_batch=4, seq_len=128)
+    b = synthetic.make_batch(dc, 0)
+    toks = np.asarray(b['inputs'])
+    # token process is an affine recurrence: the SECOND difference is the
+    # per-sequence constant ``a`` almost everywhere (modulo resets)
+    d2 = np.diff(toks, n=2, axis=1) % cfg.vocab_size
+    hit = max((d2 == a).mean() for a in range(1, 8))
+    assert hit > 0.3, hit
+
+
+@pytest.mark.parametrize('arch', configs.names())
+def test_param_specs_cover_every_leaf(arch):
+    """Sharding rules produce a valid PartitionSpec for every parameter of
+    every architecture (rank matches, axes are known)."""
+    cfg = configs.get(arch, smoke=True)
+    params = jax.eval_shape(lambda k: M.init_params(k, cfg),
+                            jax.random.key(0))
+    specs = sharding.param_specs(params)
+    flat_p = jax.tree_util.tree_leaves(params)
+    flat_s = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    assert len(flat_p) == len(flat_s)
+    for leaf, spec in zip(flat_p, flat_s):
+        assert len(spec) <= leaf.ndim, (spec, leaf.shape)
+
+
+def test_matrix_params_are_sharded_not_replicated():
+    """FSDP/TP: every big matrix must shard on at least one axis (full
+    configs against the production mesh sizes 16x16)."""
+    cfg = configs.get('stablelm-1.6b', smoke=False)
+    params = jax.eval_shape(lambda k: M.init_params(k, cfg),
+                            jax.random.key(0))
+    specs = sharding.param_specs(params)
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    sflat = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    for (path, leaf), spec in zip(flat, sflat):
+        if leaf.ndim >= 2 and leaf.size >= 1024 * 1024:
+            assert any(ax is not None for ax in spec), (path, spec)
+
+
+def test_cache_specs_long_context_switch_to_sequence_parallel():
+    cfg = configs.get('zamba2-1.2b', smoke=False)
+    mesh_stub = type('M', (), {'shape': {'data': 16, 'model': 16}})()
+    cache = jax.eval_shape(lambda: M.init_cache_tree(cfg, 1, 524288))
+    specs = sharding.cache_specs(cache, batch=1, dp_axes=('data',),
+                                 mesh=mesh_stub)
+    kspec = specs['attn']['k']
+    # batch=1 < dp=16: sequence axis (dim 2) carries 'data'
+    assert kspec[2] == ('data',) or kspec[2] == 'data'
+    big = jax.eval_shape(lambda: M.init_cache_tree(cfg, 128, 32768))
+    specs2 = sharding.cache_specs(big, batch=128, dp_axes=('data',),
+                                  mesh=mesh_stub)
+    assert specs2['attn']['k'][1] == ('data',) or specs2['attn']['k'][1] == 'data'

@@ -1,0 +1,109 @@
+"""The composable layer: execution modes, STE training, prequantized serving."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant, yoco_linear
+from repro.core.yoco_linear import YocoConfig
+
+
+KEY = jax.random.key(0)
+X = jax.random.normal(KEY, (4, 16, 128), jnp.float32)
+W = jax.random.normal(jax.random.fold_in(KEY, 1), (128, 64), jnp.float32)
+REF = np.asarray(X @ W)
+FS = np.abs(REF).max()
+
+
+def rel(a):
+    return np.abs(np.asarray(a, np.float32) - REF).max() / FS
+
+
+def test_bf16_mode_baseline():
+    y = yoco_linear.yoco_matmul(X, W, YocoConfig(mode='bf16'))
+    assert y.dtype == jnp.bfloat16
+    assert rel(y) < 0.02
+
+
+def test_w8a8_mode_tracks_paper_error():
+    y = yoco_linear.yoco_matmul(X, W, YocoConfig(mode='w8a8'))
+    assert rel(y) < 0.0079 * 2        # paper total < 0.79% FS; digital < that
+
+
+def test_analog_sim_mode_adds_bounded_noise():
+    y = yoco_linear.yoco_matmul(X, W, YocoConfig(mode='analog_sim'))
+    r = rel(y)
+    assert 0.0 < r < 0.03, r          # noisy but bounded (<0.79% + TDC grid)
+
+
+def test_qat_mode_differentiable():
+    cfg = YocoConfig(mode='qat')
+    def loss(w):
+        return jnp.sum(yoco_linear.yoco_matmul(X, w, cfg).astype(jnp.float32) ** 2)
+    g = jax.grad(loss)(W)
+    assert g.shape == W.shape
+    assert float(jnp.max(jnp.abs(g))) > 0
+
+
+def test_w8a8_ste_backward_matches_dense():
+    cfg = YocoConfig(mode='w8a8')
+    def loss_q(w):
+        return jnp.sum(yoco_linear.yoco_matmul(X, w, cfg).astype(jnp.float32))
+    def loss_f(w):
+        return jnp.sum((X @ w))
+    gq = jax.grad(loss_q)(W)
+    gf = jax.grad(loss_f)(W)
+    np.testing.assert_allclose(np.asarray(gq), np.asarray(gf),
+                               rtol=1e-2, atol=1e-2)
+
+
+def test_prequantized_weights_path():
+    qw = yoco_linear.prequantize_weight(W)
+    assert qw.wq.dtype == jnp.int8
+    y = yoco_linear.yoco_matmul(X, qw, YocoConfig(mode='w8a8'))
+    assert rel(y) < 0.02
+
+
+def test_quantize_tree_converts_weights_only():
+    params = dict(wq=W, bq=jnp.ones((128, 64)), scale=jnp.ones(64),
+                  small=jnp.ones((4, 4)), embed=W)
+    qt = yoco_linear.quantize_tree(params, min_size=1024)
+    assert isinstance(qt['wq'], yoco_linear.QuantizedWeight)
+    assert isinstance(qt['bq'], jnp.ndarray)       # biases stay float
+    assert isinstance(qt['scale'], jnp.ndarray)
+    assert isinstance(qt['small'], jnp.ndarray)
+    assert isinstance(qt['embed'], jnp.ndarray)    # lookup tables stay float
+
+
+def test_quantize_tree_stacked_layer_weights():
+    stacked = jax.random.normal(jax.random.key(7), (4, 64, 32))
+    qt = yoco_linear.quantize_tree(dict(wo=stacked), min_size=64)
+    assert isinstance(qt['wo'], yoco_linear.QuantizedWeight)
+    assert qt['wo'].wq.shape == (4, 64, 32)
+    assert qt['wo'].scale.shape == (4, 1, 32)
+    # per-layer slice works through the matmul path
+    one = yoco_linear.QuantizedWeight(qt['wo'].wq[0], qt['wo'].scale[0])
+    x = jax.random.normal(jax.random.key(8), (2, 64))
+    y = yoco_linear.yoco_matmul(x, one, yoco_linear.YocoConfig(mode='w8a8'))
+    ref = x @ stacked[0]
+    rel = float(jnp.max(jnp.abs(y.astype(jnp.float32) - ref))
+                / jnp.max(jnp.abs(ref)))
+    assert rel < 0.05
+
+
+def test_pallas_and_xla_paths_agree():
+    y_xla = yoco_linear.yoco_matmul(X, W, YocoConfig(mode='w8a8',
+                                                     use_pallas=False))
+    y_pl = yoco_linear.yoco_matmul(X, W, YocoConfig(mode='w8a8',
+                                                    use_pallas=True))
+    np.testing.assert_allclose(np.asarray(y_xla, np.float32),
+                               np.asarray(y_pl, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_analog_sim_deterministic_given_seed():
+    cfg = YocoConfig(mode='analog_sim', noise_seed=42)
+    y1 = yoco_linear.yoco_matmul(X, W, cfg)
+    y2 = yoco_linear.yoco_matmul(X, W, cfg)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
