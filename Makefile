@@ -1,0 +1,21 @@
+PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
+
+.PHONY: test test-fast test-slow bench serve-demo
+
+# tier-1: the full suite (what CI / the driver runs)
+test:
+	$(PY) -m pytest -q
+
+# fast tier: skip interpret-mode kernel sweeps and system tests — the
+# first-failure feedback loop during development
+test-fast:
+	$(PY) -m pytest -q -m "not slow"
+
+test-slow:
+	$(PY) -m pytest -q -m "slow"
+
+bench:
+	PYTHONPATH=src:. python -m benchmarks.run
+
+serve-demo:
+	$(PY) examples/serve_decode.py

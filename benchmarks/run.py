@@ -6,7 +6,7 @@ from __future__ import annotations
 import sys
 import traceback
 
-from benchmarks import (bench_accuracy, bench_fig5_precision,
+from benchmarks import (bench_accuracy, bench_decode, bench_fig5_precision,
                         bench_fig67_sota, bench_fig8_overhead,
                         bench_kernels, bench_table1, roofline)
 from benchmarks.common import header
@@ -20,6 +20,7 @@ def main() -> None:
         ('fig67', bench_fig67_sota.run),
         ('fig8', bench_fig8_overhead.run),
         ('kernels', bench_kernels.run),
+        ('decode', bench_decode.run),
         ('roofline', roofline.run),
         ('accuracy', bench_accuracy.run),
     ]

@@ -1,6 +1,8 @@
 """Serving example: batch-decode three different architecture families
 (dense LM, 4-codebook audio LM, SSM) with int8 weights resident in memory —
-the 'network loaded into the array' deployment mode.
+the 'network loaded into the array' deployment mode — then the batched
+heterogeneous-position path: ragged prompts decoded in one jit'd step
+through the fused Pallas flash-decode kernel.
 
 Usage:  PYTHONPATH=src python examples/serve_decode.py
 """
@@ -13,6 +15,11 @@ def main():
         ('stablelm-1.6b', dict(mode='w8a8', prequantize=True)),
         ('musicgen-large', dict(mode='w8a8')),
         ('mamba2-780m', dict(mode='w8a8', prequantize=True)),
+        # batched serving: per-request positions + flash-decode kernel
+        ('stablelm-1.6b', dict(mode='w8a8', prequantize=True,
+                               ragged=True, attn_impl='flash')),
+        ('gemma3-27b', dict(mode='bf16', ragged=True,
+                            attn_impl='flash')),   # sliding-window layers
     ]:
         print(f'=== {arch} ({kwargs}) ===')
         out = serve.serve(arch, smoke=True, batch=4, prompt_len=32,

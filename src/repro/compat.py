@@ -1,0 +1,48 @@
+"""JAX version-compat shims. The repo pins JAX 0.4.37; newer APIs the code
+was written against are resolved here by feature-detection so a future JAX
+bump is a one-file change (policy: every use of a version-sensitive JAX API
+routes through this module — see ROADMAP.md Open items).
+
+Shimmed surface:
+
+  * ``tpu_compiler_params(**kw)`` — ``pltpu.CompilerParams`` (>= 0.6) vs
+    ``pltpu.TPUCompilerParams`` (0.4.x); same fields, renamed class.
+  * ``shard_map(...)`` — ``jax.shard_map`` with ``check_vma=`` (>= 0.6) vs
+    ``jax.experimental.shard_map.shard_map`` with ``check_rep=`` (0.4.x).
+  * ``set_mesh(mesh)`` — ``jax.set_mesh`` context (>= 0.6) vs the Mesh
+    object's own context manager (0.4.x resource env).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+JAX_VERSION = jax.__version__
+
+
+def tpu_compiler_params(**kwargs):
+    """Build the Pallas TPU compiler-params struct for this JAX version."""
+    cls = getattr(pltpu, 'CompilerParams', None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` on new JAX; the ``jax.experimental`` fallback (with
+    the old ``check_rep`` spelling of ``check_vma``) on 0.4.x."""
+    if hasattr(jax, 'shard_map'):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def set_mesh(mesh):
+    """Context manager making ``mesh`` the ambient mesh: ``jax.set_mesh``
+    on new JAX; on 0.4.x a ``Mesh`` is itself the resource-env context."""
+    if hasattr(jax, 'set_mesh'):
+        return jax.set_mesh(mesh)
+    return mesh

@@ -19,7 +19,7 @@ Every matmul in every assigned architecture routes through here. Execution modes
 Weights can be given as plain float arrays (dynamic weight quantization — QAT /
 training-time) or pre-quantized ``QuantizedWeight`` pytrees (serving: int8
 weights resident in memory, the in-situ analogue; also halves HBM traffic on
-decode — see EXPERIMENTS.md §Perf).
+decode — see ROADMAP.md and PAPER.md).
 """
 
 from __future__ import annotations

@@ -1,0 +1,187 @@
+"""Fused Pallas flash-decode attention kernel for batched serving.
+
+One query token per request attends its whole KV cache in a single pass:
+the kernel streams the cache in ``(block, Hkv, dh)`` tiles and carries the
+online-softmax running max / running sum / unnormalized output in VMEM
+scratch across the S grid dimension — the kernel-level analogue of the
+paper's time-domain accumulation: partial results never leave the chip and
+are never renormalized mid-reduction; the single output conversion
+(``acc / l``) happens once, on the last tile. You Only Convert Once.
+
+Batched serving shape: every request sits at its own absolute position, so
+the kernel takes a per-request ``pos`` vector (and a per-request sliding
+``window``) as SMEM scalars; keys beyond ``pos`` — cache garbage, padding,
+or other requests' territory — are masked inside the tile, which is what
+lets one jit'd decode step serve heterogeneous-position requests.
+
+Grid: (B, Hkv, S/bs) with S innermost ("arbitrary"); each (b, h) cell
+keeps the GQA query group (G = H // Hkv queries) resident and reduces over
+the key tiles. B and Hkv are parallel. Fully-masked tiles are skipped with
+``pl.when`` (compute only; HBM->VMEM streaming of a dead tile still
+happens — scalar-prefetch block skipping is a later PR).
+
+CPU CI runs this same kernel body with ``interpret=True``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
+
+DEFAULT_BS = 512          # key-tile length along the cache S axis
+NEG_INF = float('-inf')
+
+
+def _flash_decode_kernel(pos_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, bs: int, s_steps: int,
+                         scale: float):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    pos = pos_ref[0, 0]
+    win = win_ref[0, 0]
+    # Tile-level skip: every key in this tile is causally dead for this
+    # request (start > pos) or behind its sliding window (end <= pos - win).
+    live = (s * bs <= pos) & (s * bs + bs > pos - win)
+
+    @pl.when(live)
+    def _tile():
+        q = q_ref[0, 0].astype(jnp.float32)                  # (G, dh)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bs, dh)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)            # (bs, dh)
+        kpos = s * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        valid = (kpos <= pos) & (kpos > pos - win)
+        logits = jax.lax.dot_general(
+            q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # (G, bs)
+        logits = jnp.where(valid, logits, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+        # all-masked guards: exp(-inf - -inf) must contribute 0, not 1
+        alpha = jnp.where(jnp.isfinite(m_prev),
+                          jnp.exp(m_prev - m_new), 0.0)
+        p = jnp.where(valid, jnp.exp(logits - m_new), 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(s == s_steps - 1)
+    def _epilogue():
+        # the one output conversion: normalize once, after the full reduction
+        o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=('scale', 'bs', 'interpret'))
+def flash_decode_gqa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     pos: jnp.ndarray, window: jnp.ndarray, *,
+                     scale: float, bs: int = DEFAULT_BS,
+                     interpret: bool = False) -> jnp.ndarray:
+    """Single-token GQA decode attention over a length-masked KV cache.
+
+    q:      (B, Hkv, G, dh) — query heads grouped by their KV head
+    k, v:   (B, S, Hkv, dh) — cache; S % bs == 0 (pad in the wrapper)
+    pos:    (B, 1) int32    — per-request absolute position; keys at
+                              kpos <= pos[b] are attended
+    window: (B, 1) int32    — per-request sliding window (>= S+1 disables)
+
+    Returns (B, Hkv, G, dh) f32.
+    """
+    b, hkv, g, dh = q.shape
+    s_max = k.shape[1]
+    assert k.shape == (b, s_max, hkv, dh) and v.shape == k.shape, \
+        (q.shape, k.shape, v.shape)
+    assert s_max % bs == 0, (s_max, bs)
+    assert pos.shape == (b, 1) and window.shape == (b, 1)
+    s_steps = s_max // bs
+    grid = (b, hkv, s_steps)
+    return pl.pallas_call(
+        functools.partial(_flash_decode_kernel, bs=bs, s_steps=s_steps,
+                          scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bb, h, s: (bb, 0),
+                         memory_space=pltpu.SMEM),           # pos
+            pl.BlockSpec((1, 1), lambda bb, h, s: (bb, 0),
+                         memory_space=pltpu.SMEM),           # window
+            pl.BlockSpec((1, 1, g, dh), lambda bb, h, s: (bb, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, dh), lambda bb, h, s: (bb, s, h, 0)),
+            pl.BlockSpec((1, bs, 1, dh), lambda bb, h, s: (bb, s, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh), lambda bb, h, s: (bb, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((g, dh), jnp.float32),    # unnormalized output
+            pltpu.VMEM((g, 1), jnp.float32),     # running max
+            pltpu.VMEM((g, 1), jnp.float32),     # running sum
+        ],
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=('parallel', 'parallel', 'arbitrary'),
+        ),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), window.astype(jnp.int32), q, k, v)
+
+
+def _pick_bs(s_max: int, bs: int) -> int:
+    """Largest tile <= bs that keeps padding overhead small; S is padded to
+    a multiple of the result."""
+    bs = min(bs, max(128, 1 << (s_max - 1).bit_length()))
+    return bs
+
+
+def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 pos: jnp.ndarray, *, scale: float,
+                 window=None, bs: int = DEFAULT_BS,
+                 interpret=None) -> jnp.ndarray:
+    """Shape-flexible wrapper around :func:`flash_decode_gqa`.
+
+    q:   (B, 1, H, dh) or (B, H, dh) — the single decode-step query
+    k,v: (B, S_max, Hkv, dh) KV cache, any dtype (bf16 serving layout)
+    pos: scalar or (B,) int — per-request absolute positions
+    window: None | int | traced scalar | (B,) — sliding-window width
+
+    Returns attention output shaped like q, in v.dtype (the one conversion
+    back to the serving dtype happens here, after the fused normalize).
+    """
+    squeeze = q.ndim == 4
+    if squeeze:
+        assert q.shape[1] == 1, q.shape
+        q = q[:, 0]
+    b, h, dh = q.shape
+    s_max, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, dh)      # same (hkv, g) grouping as _sdpa
+    pos = jnp.asarray(pos, jnp.int32)
+    pos = jnp.broadcast_to(pos.reshape(-1, 1) if pos.ndim else pos,
+                           (b, 1)).astype(jnp.int32)
+    if window is None:
+        win = jnp.full((b, 1), s_max + 1, jnp.int32)
+    else:
+        win = jnp.asarray(window, jnp.int32)
+        win = jnp.broadcast_to(win.reshape(-1, 1) if win.ndim else win,
+                               (b, 1)).astype(jnp.int32)
+    bs_eff = _pick_bs(s_max, bs)
+    pad = (-s_max) % bs_eff
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if interpret is None:
+        from repro.kernels import ops
+        interpret = ops._interpret()
+    out = flash_decode_gqa(qg, k, v, pos, win, scale=scale, bs=bs_eff,
+                           interpret=interpret)
+    out = out.reshape(b, h, dh).astype(v.dtype)
+    return out[:, None] if squeeze else out

@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 DEFAULT_BM = 128
 DEFAULT_BN = 128
 DEFAULT_BK = 256
@@ -85,7 +87,7 @@ def yoco_vmm_int8(xq: jnp.ndarray, wq: jnp.ndarray, sx: jnp.ndarray,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],       # the "time domain"
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=('parallel', 'parallel', 'arbitrary'),
         ),
         interpret=interpret,
@@ -130,7 +132,7 @@ def int8_matmul(xq: jnp.ndarray, wq: jnp.ndarray, *, bm: int = DEFAULT_BM,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=('parallel', 'parallel', 'arbitrary'),
         ),
         interpret=interpret,

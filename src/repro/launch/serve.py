@@ -2,9 +2,21 @@
 decode step-by-step with a persistent KV cache, all through the jitted
 serve steps (same code path the decode dry-run cells lower).
 
+Two serving shapes:
+
+  * lock-step (default): every request at the same position, scalar ``pos``;
+  * ragged (``--ragged``): per-request prompt lengths, a (B,) ``pos``
+    vector, per-request last-logit gather at prefill — one jit'd decode
+    step serving requests at heterogeneous positions. Attention families
+    only (an SSM state has no position to mask behind).
+
+``--attn-impl flash`` routes the decode cache read through the fused
+Pallas flash-decode kernel (``kernels/flash_decode.py``) instead of the
+einsum oracle.
+
 Usage:
   python -m repro.launch.serve --arch stablelm-1.6b --batch 4 \
-      --prompt-len 32 --gen-len 32 --mode w8a8
+      --prompt-len 32 --gen-len 32 --mode w8a8 --ragged --attn-impl flash
 """
 
 from __future__ import annotations
@@ -21,15 +33,32 @@ from repro.core.yoco_linear import YocoConfig
 from repro.core import yoco_linear
 from repro.data import synthetic
 from repro.models import model as model_mod
+from repro.models.model import ModelRuntime
 from repro.runtime import serve_step as SS
+
+
+def _ragged_lens(batch: int, prompt_len: int) -> jnp.ndarray:
+    """Deterministic per-request prompt lengths in [~half, prompt_len]."""
+    lo = max(4, prompt_len // 2)
+    lens = [prompt_len - (i * 3) % max(1, prompt_len - lo) for i in range(batch)]
+    return jnp.array([max(lo, min(prompt_len, L)) for L in lens], jnp.int32)
 
 
 def serve(arch: str, *, smoke: bool = True, batch: int = 4,
           prompt_len: int = 32, gen_len: int = 32, mode: str = 'bf16',
           prequantize: bool = False, seed: int = 0,
+          attn_impl: str = 'einsum', ragged: bool = False,
           quiet: bool = False) -> dict:
     cfg = configs.get(arch, smoke=smoke)
+    if ragged and cfg.family in ('ssm', 'hybrid'):
+        raise ValueError(f'--ragged needs an attention KV cache; '
+                         f'{arch} is family={cfg.family}')
+    if attn_impl == 'flash' and (cfg.mla is not None or cfg.family == 'ssm'):
+        kind = 'MLA' if cfg.mla is not None else 'SSM'
+        raise ValueError(f'--attn-impl flash covers GQA decode only; '
+                         f'{arch} uses {kind} layers (see ROADMAP.md)')
     yoco = YocoConfig(mode=mode)
+    rt = ModelRuntime(attn_impl=attn_impl)
     max_seq = prompt_len + gen_len
 
     params = model_mod.init_params(jax.random.key(seed), cfg)
@@ -39,12 +68,20 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
     dc = synthetic.for_arch(cfg, global_batch=batch, seq_len=prompt_len)
     prompts = synthetic.make_batch(dc, 0)['inputs']
 
-    prefill_fn = jax.jit(SS.make_prefill_step(cfg, yoco))
-    decode_fn = jax.jit(SS.make_decode_step(cfg, yoco), donate_argnums=(3,))
+    prefill_fn = jax.jit(SS.make_prefill_step(cfg, yoco, rt))
+    decode_fn = jax.jit(SS.make_decode_step(cfg, yoco, rt),
+                        donate_argnums=(3,))
 
     cache = model_mod.init_cache_tree(cfg, batch, max_seq)
+    lens = _ragged_lens(batch, prompt_len) if ragged else None
     t0 = time.time()
-    logits, cache = prefill_fn(params, dict(inputs=prompts), cache)
+    if ragged:
+        # padded prompts; K/V beyond each request's length stay masked
+        # (kpos > pos) and are overwritten as that request advances
+        logits, cache = prefill_fn(params, dict(inputs=prompts), cache,
+                                   last_pos=lens - 1)
+    else:
+        logits, cache = prefill_fn(params, dict(inputs=prompts), cache)
     jax.block_until_ready(logits)
     t_prefill = time.time() - t0
 
@@ -52,9 +89,10 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
     if cfg.input_kind == 'codebooks':
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, CB)
     generated = [tok]
+    pos_vec = lens if ragged else None
     t0 = time.time()
     for i in range(gen_len - 1):
-        pos = jnp.int32(prompt_len + i)
+        pos = (pos_vec + i) if ragged else jnp.int32(prompt_len + i)
         step_in = tok
         if cfg.input_kind == 'embeddings':
             # stub frontend: feed the token id as a (deterministic) embedding
@@ -71,7 +109,11 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
         tokens_per_s=round(batch * (gen_len - 1) / max(t_decode, 1e-9), 1),
         generated_shape=list(toks.shape),
         sample=[int(x) for x in jnp.ravel(toks)[:8]],
+        attn_impl=attn_impl,
+        ragged=bool(ragged),
     )
+    if ragged:
+        out['prompt_lens'] = [int(x) for x in lens]
     if not quiet:
         print(json.dumps(out))
     return out
@@ -87,10 +129,14 @@ def main(argv=None):
     ap.add_argument('--mode', default='bf16',
                     choices=['bf16', 'qat', 'w8a8', 'analog_sim'])
     ap.add_argument('--prequantize', action='store_true')
+    ap.add_argument('--attn-impl', default='einsum',
+                    choices=['einsum', 'flash'])
+    ap.add_argument('--ragged', action='store_true')
     args = ap.parse_args(argv)
     serve(args.arch, smoke=args.smoke, batch=args.batch,
           prompt_len=args.prompt_len, gen_len=args.gen_len, mode=args.mode,
-          prequantize=args.prequantize)
+          prequantize=args.prequantize, attn_impl=args.attn_impl,
+          ragged=args.ragged)
 
 
 if __name__ == '__main__':

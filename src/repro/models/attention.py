@@ -5,7 +5,13 @@ All projections route through ``core.yoco_linear`` so the paper's 8-bit
 execution modes apply. The softmax/AV contraction itself stays bf16/f32 —
 the paper quantizes VMMs against *stored* weights; dynamic QK^T products
 carry >8b dynamic range and are exactly the "no mid-reduction rounding"
-boundary (DESIGN.md §7).
+boundary (PAPER.md, Eq. 3/4 discussion).
+
+Decode runs either through the einsum ``_sdpa`` oracle (default) or the
+fused Pallas flash-decode kernel (``rt.attn_impl == 'flash'``, see
+``kernels/flash_decode.py``), which never materializes the (B, S_max)
+logits. Both accept a per-request ``pos`` vector so one jit'd step serves
+requests at heterogeneous positions.
 
 Cache layouts
 -------------
@@ -22,6 +28,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core import yoco_linear
 from repro.core.yoco_linear import YocoConfig
 from repro.models import rope as rope_mod
@@ -103,6 +110,43 @@ def causal_mask(sq: int, skv: int, offset: int = 0,
     return jnp.where(ok, 0.0, NEG_INF)
 
 
+def decode_mask(pos: jnp.ndarray, smax: int,
+                window=None) -> jnp.ndarray:
+    """Length mask for single-token decode against a (.., S_max, ..) cache.
+
+    ``pos`` scalar -> (1, smax) (broadcasts over every batch/head dim);
+    ``pos`` (B,)   -> (B, smax) — callers insert their own head/query dims
+    (the GQA and MLA logit layouts differ in rank)."""
+    kpos = jnp.arange(smax)
+    if jnp.ndim(pos) == 0:
+        ok = kpos <= pos
+        if window is not None:
+            ok &= kpos > pos - window
+        return jnp.where(ok, 0.0, NEG_INF)[None, :]
+    p = pos[:, None]
+    ok = kpos[None, :] <= p
+    if window is not None:
+        w = jnp.asarray(window)
+        w = w[:, None] if w.ndim else w
+        ok &= kpos[None, :] > p - w
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _cache_update(c: jnp.ndarray, t: jnp.ndarray, pos) -> jnp.ndarray:
+    """Write the step's K/V slab ``t`` (B, 1, ...) into cache ``c``
+    (B, S_max, ...) at absolute position ``pos`` (scalar, or (B,) for
+    heterogeneous-position batches)."""
+    t = t.astype(c.dtype)
+    if jnp.ndim(pos) == 0:
+        return jax.lax.dynamic_update_slice(
+            c, t, (0, pos) + (0,) * (c.ndim - 2))
+
+    def one(cb, tb, pb):
+        return jax.lax.dynamic_update_slice(
+            cb, tb, (pb,) + (0,) * (cb.ndim - 1))
+    return jax.vmap(one)(c, t, jnp.asarray(pos, jnp.int32))
+
+
 # ----------------------------------------------------------------------------
 # core attention math (pure, shared by all paths)
 # ----------------------------------------------------------------------------
@@ -112,8 +156,9 @@ def _sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
     Operands stay bf16 with f32 MXU accumulation (preferred_element_type);
     only the softmax runs in f32. Keeping q/k/v bf16 halves every
-    sequence-parallel K/V gather on the wire (EXPERIMENTS §Perf iter 4) at
-    identical accumulation precision."""
+    sequence-parallel K/V gather on the wire (see ROADMAP.md) at identical
+    accumulation precision. ``mask`` broadcasts against the (b, hkv, g, q, s)
+    logits: (q, s)/(1, s) for shared masks, (b, 1, 1, 1, s) per-request."""
     b, sq, h, dh = q.shape
     hkv = k.shape[2]
     g = h // hkv
@@ -126,6 +171,19 @@ def _sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     out = jnp.einsum('bkgqs,bskd->bqkgd', probs.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
     return out.reshape(b, sq, h, dh).astype(v.dtype)
+
+
+def sdpa_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, pos,
+                scale: float, window=None) -> jnp.ndarray:
+    """Single-token decode attention via the einsum path: the reference
+    oracle the flash-decode kernel is validated against (tests and
+    benchmarks call this exact function, not a re-assembled copy).
+
+    q: (B, 1, H, dh); k/v: (B, S_max, Hkv, dh); pos scalar or (B,)."""
+    mask = decode_mask(pos, k.shape[1], window)
+    if jnp.ndim(pos) != 0:
+        mask = mask[:, None, None, None, :]
+    return _sdpa(q, k, v, mask, scale)
 
 
 # ----------------------------------------------------------------------------
@@ -188,25 +246,31 @@ def attention_decode(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
                      cache: dict, pos: jnp.ndarray,
                      window: Optional[int] = None,
                      theta: Optional[float] = None,
+                     rt=None,
                      ) -> Tuple[jnp.ndarray, dict]:
-    """One-token decode. x: (B, 1, d); ``pos``: scalar int — the absolute
-    position being generated; cache holds [0, pos) valid entries."""
+    """One-token decode. x: (B, 1, d); ``pos``: scalar int or (B,) vector of
+    per-request absolute positions being generated; cache holds [0, pos)
+    valid entries per request.
+
+    ``rt.attn_impl == 'flash'`` routes the cache read through the fused
+    Pallas flash-decode kernel (online softmax, no (B, S_max) logits in
+    HBM); the default einsum ``_sdpa`` is the reference oracle."""
     b = x.shape[0]
     dh = cfg.resolved_head_dim
     theta = theta if theta is not None else cfg.rope_theta
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    if jnp.ndim(pos) == 0:
+        positions = jnp.full((b, 1), pos, jnp.int32)
+    else:
+        positions = jnp.asarray(pos, jnp.int32).reshape(b, 1)
     q, k, v = _project_qkv(p, x, cfg, yoco, positions, theta)
-    ck = jax.lax.dynamic_update_slice(
-        cache['k'], k.astype(cache['k'].dtype), (0, pos, 0, 0))
-    cv = jax.lax.dynamic_update_slice(
-        cache['v'], v.astype(cache['v'].dtype), (0, pos, 0, 0))
-    smax = ck.shape[1]
-    kpos = jnp.arange(smax)
-    ok = kpos <= pos
-    if window is not None:
-        ok &= kpos > pos - window
-    mask = jnp.where(ok, 0.0, NEG_INF)[None, :]     # (1, smax)
-    out = _sdpa(q, ck, cv, mask, 1.0 / jnp.sqrt(dh).astype(jnp.float32))
+    ck = _cache_update(cache['k'], k, pos)
+    cv = _cache_update(cache['v'], v, pos)
+    scale = 1.0 / float(dh) ** 0.5
+    if rt is not None and getattr(rt, 'attn_impl', 'einsum') == 'flash':
+        from repro.kernels import flash_decode as fd
+        out = fd.flash_decode(q, ck, cv, pos, scale=scale, window=window)
+    else:
+        out = sdpa_decode(q, ck, cv, pos, scale, window)
     out = yoco_linear.linear(out.reshape(b, 1, -1), p['wo'], cfg=yoco)
     return out, dict(k=ck, v=cv)
 
@@ -247,9 +311,9 @@ def mla_attention(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
     Sequence-parallel layouts gather the LATENT (r + d_rope = 576/token)
     across ranks and expand k/v locally, instead of letting the partitioner
     gather the expanded per-head K/V (2*H*dh = 32768/token) — 56x less
-    wire for DeepSeek-V3, at the cost of TP-redundant kv_up compute
-    (EXPERIMENTS §Perf deepseek iter 3: the paper's keep-it-compressed-
-    on-the-wire principle applied to training)."""
+    wire for DeepSeek-V3, at the cost of TP-redundant kv_up compute (the
+    paper's keep-it-compressed-on-the-wire principle applied to training;
+    see ROADMAP.md)."""
     m = cfg.mla
     b, s, _ = x.shape
     if positions is None:
@@ -304,7 +368,7 @@ def _mla_sdpa_latent_2d(q_nope, q_rope, ckv, krope, w_ukv, cfg, rt, s):
     all_gathers the (r + d_rope)-wide LATENT, expands K/V locally, and
     attends its own query shard. Autodiff transposes the all_gather into a
     psum_scatter ON THE LATENT — the dK/dV reduction never materializes at
-    2*H*dh width (EXPERIMENTS §Perf deepseek iter 4)."""
+    2*H*dh width (see ROADMAP.md)."""
     m = cfg.mla
     h = cfg.n_heads
     tp = rt.tp_axis
@@ -332,7 +396,7 @@ def _mla_sdpa_latent_2d(q_nope, q_rope, ckv, krope, w_ukv, cfg, rt, s):
         return out.astype(qn.dtype)
 
     dp = rt.dp_axes
-    return jax.shard_map(
+    return compat.shard_map(
         core, mesh=rt.mesh,
         in_specs=(P(dp, tp, None, None), P(dp, tp, None, None),
                   P(dp, tp, None), P(dp, tp, None), P()),
@@ -351,11 +415,16 @@ def mla_attention_decode(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
 
     The KV cache stores only (ckv, krope) — r + d_rope = 576 values/token for
     DeepSeek-V3 vs 2·128·128 = 32768 for naive GQA: the paper's 'keep it
-    compressed until the last moment' on the memory side."""
+    compressed until the last moment' on the memory side.
+
+    ``pos``: scalar int or (B,) vector of per-request absolute positions."""
     m = cfg.mla
     b = x.shape[0]
     h = cfg.n_heads
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    if jnp.ndim(pos) == 0:
+        positions = jnp.full((b, 1), pos, jnp.int32)
+    else:
+        positions = jnp.asarray(pos, jnp.int32).reshape(b, 1)
     cq = rmsnorm(yoco_linear.linear(x, p['w_dq'], cfg=yoco), p['q_ln'])
     q = yoco_linear.linear(cq, p['w_uq'], cfg=yoco)
     q = q.reshape(b, 1, h, m.nope_head_dim + m.rope_head_dim)
@@ -367,10 +436,8 @@ def mla_attention_decode(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
     krope_t = dkv[..., m.kv_lora_rank:]
     krope_t = rope_mod.apply_rope(krope_t[:, :, None, :], positions,
                                   cfg.rope_theta)[:, :, 0, :]
-    ckv = jax.lax.dynamic_update_slice(
-        cache['ckv'], ckv_t.astype(cache['ckv'].dtype), (0, pos, 0))
-    krope = jax.lax.dynamic_update_slice(
-        cache['krope'], krope_t.astype(cache['krope'].dtype), (0, pos, 0))
+    ckv = _cache_update(cache['ckv'], ckv_t, pos)
+    krope = _cache_update(cache['krope'], krope_t, pos)
 
     # absorb W_uk into q: (b,1,h,dn) @ (r, h, dn) -> (b,1,h,r)
     w_ukv = p['w_ukv'].reshape(m.kv_lora_rank, h, m.nope_head_dim + m.v_head_dim)
@@ -383,7 +450,9 @@ def mla_attention_decode(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
                      krope.astype(jnp.float32))
     scale = 1.0 / jnp.sqrt(float(m.nope_head_dim + m.rope_head_dim))
     smax = ckv.shape[1]
-    mask = jnp.where(jnp.arange(smax) <= pos, 0.0, NEG_INF)[None, :]
+    mask = decode_mask(pos, smax)
+    if jnp.ndim(pos) != 0:
+        mask = mask[:, None, None, :]               # lo is (b, h, q, s)
     probs = jax.nn.softmax(lo * scale + mask, axis=-1)
     o_lat = jnp.einsum('bhqs,bsr->bqhr', probs, ckv.astype(jnp.float32))
     out = jnp.einsum('bqhr,rhd->bqhd', o_lat, w_uv.astype(jnp.float32))

@@ -48,7 +48,7 @@ def _mix_attn(p, x, cfg, yoco, *, window, theta, cache, cache_pos,
     if decode_pos is not None:
         return attn_mod.attention_decode(p['attn'], x, cfg, yoco, cache=cache,
                                          pos=decode_pos, window=window,
-                                         theta=theta)
+                                         theta=theta, rt=rt)
     return attn_mod.attention(p['attn'], x, cfg, yoco, window=window,
                               theta=theta, cache=cache, cache_pos=cache_pos)
 
@@ -115,10 +115,11 @@ def init_shared_block(key: jax.Array, cfg, n_sites: int) -> dict:
 
 def shared_block(p: dict, x: jnp.ndarray, x0: jnp.ndarray, site: int,
                  cfg, yoco: YocoConfig, *, cache=None, decode_pos=None,
-                 ) -> Tuple[jnp.ndarray, Optional[dict]]:
+                 rt=None) -> Tuple[jnp.ndarray, Optional[dict]]:
     """x0: the original embedding stream (concat-conditioning)."""
     h = jnp.concatenate([x, x0], axis=-1)
     h = jnp.einsum('bsd,df->bsf', h, p['in_proj'][site].astype(h.dtype))
     y, new_cache, _ = transformer_block(p['block'], h, cfg, yoco,
-                                        cache=cache, decode_pos=decode_pos)
+                                        cache=cache, decode_pos=decode_pos,
+                                        rt=rt)
     return x + (y - h), new_cache     # residual on the block's own delta

@@ -42,6 +42,7 @@ class ModelRuntime:
     use_ep: bool = False           # expert-parallel MoE (needs mesh)
     remat: str = 'none'            # none | full | dots
     act_layout: str = 'batch'      # batch (TP baseline) | 2d (batch x seq)
+    attn_impl: str = 'einsum'      # einsum (oracle) | flash (Pallas decode)
     compute_dtype: Any = jnp.bfloat16
 
     @property
@@ -59,8 +60,8 @@ def _constrain(x: jnp.ndarray, rt: ModelRuntime, *,
     """Anchor activation sharding: batch over dp axes, optional last-dim
     axis (vocab over tp for logits). Without these anchors auto-SPMD happily
     chooses batch-replicated/feature-sharded activations, which turns every
-    row-parallel matmul into a full-microbatch all-reduce (EXPERIMENTS §Perf,
-    iteration 1)."""
+    row-parallel matmul into a full-microbatch all-reduce (see
+    ROADMAP.md)."""
     if rt.mesh is None:
         return x
     import numpy as np
@@ -286,7 +287,8 @@ def _backbone(params: dict, x: jnp.ndarray, cfg, yoco, rt, *,
             site_cache = (jax.tree.map(lambda a: a[g], atc)
                           if atc is not None else None)
             x, nc = blk.shared_block(params['shared'], x, x0, g, cfg, yoco,
-                                     cache=site_cache, decode_pos=decode_pos)
+                                     cache=site_cache, decode_pos=decode_pos,
+                                     rt=rt)
             if nc is not None and cache is not None:
                 new_at.append(nc)
         tail = _n_mamba(cfg) - n_sites * per
@@ -391,12 +393,22 @@ def loss_fn(params: dict, batch: dict, cfg,
 
 def prefill(params: dict, batch: dict, cache: dict, cfg,
             yoco: YocoConfig = DEFAULT_YOCO,
-            rt: ModelRuntime = DEFAULT_RT) -> Tuple[jnp.ndarray, dict]:
-    """Process the prompt, fill the cache, return last-position logits."""
+            rt: ModelRuntime = DEFAULT_RT,
+            last_pos=None) -> Tuple[jnp.ndarray, dict]:
+    """Process the prompt, fill the cache, return last-position logits.
+
+    ``last_pos``: optional (B,) int vector of per-request last prompt
+    positions (ragged batch padded to a common length) — logits are
+    gathered there instead of at the padded end."""
     x = _embed(params, batch, cfg, rt)
     x, new_cache, _ = _backbone(params, x, cfg, yoco, rt, cache=cache,
                                 decode_pos=None)
-    x = apply_norm(params['final_norm'], x[:, -1:], cfg)
+    if last_pos is None:
+        x = x[:, -1:]
+    else:
+        idx = jnp.asarray(last_pos, jnp.int32).reshape(-1, 1, 1)
+        x = jnp.take_along_axis(x, idx, axis=1)
+    x = apply_norm(params['final_norm'], x, cfg)
     logits = _head(params, x, cfg, yoco)
     return logits[:, 0], new_cache
 
@@ -405,7 +417,8 @@ def decode_step(params: dict, token, pos, cache: dict, cfg,
                 yoco: YocoConfig = DEFAULT_YOCO,
                 rt: ModelRuntime = DEFAULT_RT) -> Tuple[jnp.ndarray, dict]:
     """One decode step. ``token``: (B,) int (or (B, CB) codebooks, or (B, d)
-    embeddings); ``pos``: scalar int32 — current absolute position."""
+    embeddings); ``pos``: scalar int32 — current absolute position — or a
+    (B,) vector of per-request positions (heterogeneous batched decode)."""
     if cfg.input_kind == 'embeddings':
         batch = dict(inputs=token[:, None, :])
     elif cfg.input_kind == 'codebooks':

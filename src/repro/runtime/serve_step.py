@@ -1,6 +1,12 @@
 """Serving-step builders: batched prefill and single-token decode with
 sharded KV caches. The decode step is what the ``decode_32k`` / ``long_500k``
-dry-run cells lower."""
+dry-run cells lower.
+
+Batched serving: the decode step's ``pos`` argument is a scalar for
+lock-step batches or a (B,) vector for heterogeneous-position batches
+(each request at its own point in its stream — the shape continuous
+batching needs). ``rt.attn_impl='flash'`` routes the cache read through
+the fused Pallas flash-decode kernel."""
 
 from __future__ import annotations
 
@@ -18,14 +24,16 @@ from repro.models.model import ModelRuntime, DEFAULT_RT
 
 def make_prefill_step(cfg, yoco: YocoConfig = DEFAULT_YOCO,
                       rt: ModelRuntime = DEFAULT_RT):
-    def prefill_step(params, batch, cache):
-        return model_mod.prefill(params, batch, cache, cfg, yoco, rt)
+    def prefill_step(params, batch, cache, last_pos=None):
+        return model_mod.prefill(params, batch, cache, cfg, yoco, rt,
+                                 last_pos=last_pos)
     return prefill_step
 
 
 def make_decode_step(cfg, yoco: YocoConfig = DEFAULT_YOCO,
                      rt: ModelRuntime = DEFAULT_RT, *, greedy: bool = True):
     def decode_step(params, token, pos, cache):
+        # ``pos``: scalar, or (B,) for heterogeneous-position batches
         logits, cache = model_mod.decode_step(params, token, pos, cache,
                                               cfg, yoco, rt)
         if cfg.input_kind == 'embeddings':

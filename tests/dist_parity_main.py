@@ -16,7 +16,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro import configs
+from repro import compat, configs
 from repro.core.yoco_linear import YocoConfig
 from repro.data import synthetic
 from repro.distributed import sharding
@@ -56,7 +56,7 @@ def check(name, arch, *, ep=False, seq=32, batch=4):
         bsh = sharding.to_shardings(
             mesh, sharding.batch_specs(cfg, ('data',)))
         batch_dd = jax.device_put(batch_d, bsh)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             loss, _ = jax.jit(
                 lambda p, b: M.loss_fn(p, b, cfg, YocoConfig(mode='bf16'),
                                        rt))(params_d, batch_dd)

@@ -7,12 +7,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+
 from repro import configs
 from repro.core.yoco_linear import YocoConfig
 from repro.data import synthetic
 from repro.models import model as M
 from repro.optim import adamw
 from repro.runtime import train_step as TS
+
+pytestmark = pytest.mark.slow
 
 ARCHS = configs.names()
 

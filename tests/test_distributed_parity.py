@@ -11,6 +11,9 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow
+
+
 REPO = os.path.join(os.path.dirname(__file__), '..')
 
 

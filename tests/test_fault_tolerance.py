@@ -11,11 +11,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+
 from repro import configs
 from repro.checkpoint.ckpt import CheckpointManager
 from repro.data import synthetic
 from repro.models import model as M
 from repro.optim import adamw
+
+pytestmark = pytest.mark.slow
 
 REPO = os.path.join(os.path.dirname(__file__), '..')
 ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, 'src'),

@@ -1,0 +1,172 @@
+"""Fused flash-decode kernel vs the einsum ``_sdpa`` oracle (interpret mode
+on CPU — same kernel body that compiles for TPU), plus the batched
+heterogeneous-position decode path it enables."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.yoco_linear import DEFAULT_YOCO
+from repro.kernels import flash_decode as fd
+from repro.models import attention as A
+from repro.models.model import ModelRuntime
+
+RT_FLASH = ModelRuntime(attn_impl='flash')
+
+
+_oracle = A.sdpa_decode    # the production einsum decode path, verbatim
+
+
+def _rand_qkv(key, b, s_max, h, hkv, dh, cache_dtype=jnp.bfloat16):
+    q = jax.random.normal(key, (b, 1, h, dh), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s_max, hkv, dh),
+                          jnp.float32).astype(cache_dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s_max, hkv, dh),
+                          jnp.float32).astype(cache_dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize('h,hkv', [(8, 2), (4, 4), (8, 1)])
+def test_flash_matches_oracle_gqa_bf16(h, hkv):
+    """GQA/MHA/MQA head layouts, bf16 cache, heterogeneous positions."""
+    b, s_max, dh = 3, 160, 32
+    q, k, v = _rand_qkv(jax.random.key(h * 10 + hkv), b, s_max, h, hkv, dh)
+    pos = jnp.array([s_max - 1, 57, 3], jnp.int32)
+    scale = 1.0 / dh ** 0.5
+    got = fd.flash_decode(q, k, v, pos, scale=scale, interpret=True)
+    want = _oracle(q, k, v, pos, scale)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=2e-2)
+
+
+@pytest.mark.parametrize('window', [1, 7, 64, 1000])
+def test_flash_matches_oracle_windowed(window):
+    b, s_max, h, hkv, dh = 2, 192, 4, 2, 32
+    q, k, v = _rand_qkv(jax.random.key(window), b, s_max, h, hkv, dh)
+    pos = jnp.array([s_max - 1, 100], jnp.int32)
+    scale = 1.0 / dh ** 0.5
+    got = fd.flash_decode(q, k, v, pos, scale=scale, window=window,
+                          interpret=True)
+    want = _oracle(q, k, v, pos, scale, window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=2e-2)
+
+
+def test_flash_scalar_pos_and_unaligned_smax():
+    """Scalar pos broadcast + S_max not a multiple of the key tile."""
+    b, s_max, h, hkv, dh = 2, 130, 4, 2, 16
+    q, k, v = _rand_qkv(jax.random.key(0), b, s_max, h, hkv, dh)
+    scale = 1.0 / dh ** 0.5
+    got = fd.flash_decode(q, k, v, jnp.int32(s_max - 1), scale=scale,
+                          interpret=True)
+    want = _oracle(q, k, v, jnp.int32(s_max - 1), scale)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=2e-2)
+
+
+def test_flash_f32_cache_tight_tolerance():
+    """f32 cache isolates the online-softmax rewrite from cast noise."""
+    b, s_max, h, hkv, dh = 2, 128, 4, 2, 32
+    q, k, v = _rand_qkv(jax.random.key(3), b, s_max, h, hkv, dh,
+                        cache_dtype=jnp.float32)
+    pos = jnp.array([127, 31], jnp.int32)
+    scale = 1.0 / dh ** 0.5
+    got = fd.flash_decode(q, k, v, pos, scale=scale, interpret=True)
+    want = _oracle(q, k, v, pos, scale)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_attention_decode_flash_flag_matches_einsum():
+    """The rt.attn_impl='flash' wiring inside the full attention layer."""
+    cfg = configs.get('stablelm-12b', smoke=True)
+    p = A.init_attention(jax.random.key(10), cfg)
+    x = jax.random.normal(jax.random.key(11), (3, 9, cfg.d_model))
+    cache = A.init_cache(cfg, 3, 24)
+    _, cache = A.attention(p, x[:, :8], cfg, DEFAULT_YOCO, cache=cache)
+    pos = jnp.array([8, 5, 3], jnp.int32)
+    y_e, ce = A.attention_decode(p, x[:, 8:9], cfg, DEFAULT_YOCO,
+                                 cache=cache, pos=pos)
+    y_f, cf = A.attention_decode(p, x[:, 8:9], cfg, DEFAULT_YOCO,
+                                 cache=cache, pos=pos, rt=RT_FLASH)
+    np.testing.assert_allclose(np.asarray(y_f, np.float32),
+                               np.asarray(y_e, np.float32), atol=2e-2)
+    # both impls must write the same cache entries
+    np.testing.assert_array_equal(np.asarray(ce['k'], np.float32),
+                                  np.asarray(cf['k'], np.float32))
+
+
+def test_batched_decode_matches_per_request_scalar():
+    """(B,) pos vector == running each request alone at its scalar pos."""
+    cfg = configs.get('stablelm-12b', smoke=True)
+    p = A.init_attention(jax.random.key(20), cfg)
+    x = jax.random.normal(jax.random.key(21), (3, 9, cfg.d_model))
+    cache = A.init_cache(cfg, 3, 16, dtype=jnp.float32)
+    _, cache = A.attention(p, x[:, :8], cfg, DEFAULT_YOCO, cache=cache)
+    pos = jnp.array([8, 6, 2], jnp.int32)
+    y_vec, _ = A.attention_decode(p, x[:, 8:9], cfg, DEFAULT_YOCO,
+                                  cache=cache, pos=pos)
+    for b in range(3):
+        sub = dict(k=cache['k'][b:b + 1], v=cache['v'][b:b + 1])
+        y_b, _ = A.attention_decode(p, x[b:b + 1, 8:9], cfg, DEFAULT_YOCO,
+                                    cache=sub, pos=jnp.int32(int(pos[b])))
+        np.testing.assert_allclose(np.asarray(y_vec[b:b + 1], np.float32),
+                                   np.asarray(y_b, np.float32),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_mla_decode_vector_pos_matches_scalar():
+    cfg = configs.get('deepseek-v3-671b', smoke=True)
+    m = cfg.mla
+    p = A.init_mla(jax.random.key(30), cfg)
+    x = jax.random.normal(jax.random.key(31), (2, 7, cfg.d_model))
+    cache = dict(ckv=jnp.zeros((2, 12, m.kv_lora_rank), jnp.float32),
+                 krope=jnp.zeros((2, 12, m.rope_head_dim), jnp.float32))
+    _, cache = A.mla_attention(p, x[:, :6], cfg, DEFAULT_YOCO, cache=cache)
+    pos = jnp.array([6, 4], jnp.int32)
+    y_vec, _ = A.mla_attention_decode(p, x[:, 6:7], cfg, DEFAULT_YOCO,
+                                      cache=cache, pos=pos)
+    for b in range(2):
+        sub = dict(ckv=cache['ckv'][b:b + 1], krope=cache['krope'][b:b + 1])
+        y_b, _ = A.mla_attention_decode(p, x[b:b + 1, 6:7], cfg,
+                                        DEFAULT_YOCO, cache=sub,
+                                        pos=jnp.int32(int(pos[b])))
+        np.testing.assert_allclose(np.asarray(y_vec[b:b + 1], np.float32),
+                                   np.asarray(y_b, np.float32),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_cache_update_vector_vs_scalar():
+    c = jnp.zeros((3, 8, 2, 4))
+    t = jnp.ones((3, 1, 2, 4))
+    pos = jnp.array([0, 3, 7], jnp.int32)
+    got = A._cache_update(c, t, pos)
+    for b in range(3):
+        want_b = jax.lax.dynamic_update_slice(
+            c[b:b + 1], t[b:b + 1], (0, int(pos[b]), 0, 0))
+        np.testing.assert_array_equal(np.asarray(got[b:b + 1]),
+                                      np.asarray(want_b))
+
+
+@pytest.mark.slow
+def test_model_decode_step_vector_pos_full_stack():
+    """End-to-end model.decode_step with a (B,) pos vector, flash vs
+    einsum, through the gemma local/global (sliding-window) stack."""
+    from repro.models import model as M
+    cfg = configs.get('gemma3-27b', smoke=True)
+    params = M.init_params(jax.random.key(0), cfg)
+    b, prompt = 2, 8
+    toks = jax.random.randint(jax.random.key(1), (b, prompt), 0,
+                              cfg.vocab_size)
+    cache = M.init_cache_tree(cfg, b, 16)
+    _, cache = M.prefill(params, dict(inputs=toks), cache, cfg)
+    tok = jnp.array([3, 5], jnp.int32)
+    pos = jnp.array([prompt, prompt - 2], jnp.int32)
+    le, _ = M.decode_step(params, tok, pos, cache, cfg)
+    lf, _ = M.decode_step(params, tok, pos, cache, cfg,
+                          rt=ModelRuntime(attn_impl='flash'))
+    np.testing.assert_allclose(np.asarray(le, np.float32),
+                               np.asarray(lf, np.float32), atol=5e-2)

@@ -104,6 +104,7 @@ def test_int8_matmul_wrapper_unaligned():
 
 
 if HAVE_HYP:
+    @pytest.mark.slow
     @given(st.integers(1, 16), st.integers(8, 300), st.integers(1, 128),
            st.integers(0, 10**6))
     @settings(max_examples=20, deadline=None)

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+
 from repro import configs
 from repro.core.yoco_linear import YocoConfig
 from repro.data import synthetic
@@ -14,6 +15,8 @@ from repro.distributed import sharding
 from repro.launch import serve as serve_mod
 from repro.launch import train as train_mod
 from repro.models import model as M
+
+pytestmark = pytest.mark.slow
 
 
 def test_training_decreases_loss(tmp_path):
