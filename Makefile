@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test test-fast test-slow bench serve-demo
+.PHONY: test test-fast test-slow bench bench-smoke serve-demo
 
 # tier-1: the full suite (what CI / the driver runs)
 test:
@@ -16,6 +16,13 @@ test-slow:
 
 bench:
 	PYTHONPATH=src:. python -m benchmarks.run
+
+# toy-size decode benchmark in interpret mode: asserts flash matches the
+# einsum oracle and emits BENCH_decode.smoke.json (gitignored — the
+# tracked BENCH_decode.json comes from the full-size `make bench` run;
+# also run by the fast test tier via tests/test_bench_smoke.py)
+bench-smoke:
+	PYTHONPATH=src:. python -m benchmarks.bench_decode --smoke
 
 serve-demo:
 	$(PY) examples/serve_decode.py

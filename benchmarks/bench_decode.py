@@ -1,61 +1,167 @@
-"""Batched heterogeneous-position decode attention: fused Pallas
-flash-decode kernel vs the einsum ``_sdpa`` oracle across cache lengths
-S ∈ {1k, 8k, 32k}.
+"""Batched heterogeneous-position decode attention: the three-way
+comparison the paged-KV PR is judged on —
+
+  * ``flash_prefetch``: scalar-prefetch flash decode (dead KV tiles are
+    neither computed nor fetched),
+  * ``flash_streamed``: the pre-prefetch kernel (dead tiles skip compute
+    but still stream HBM->VMEM),
+  * ``einsum_oracle``: the `_sdpa` reference that materializes (B, H, S)
+    logits,
+
+plus ``flash_paged`` (the prefetch kernel over a fragmented page pool —
+the layout continuous batching serves from). Run at S_max ∈ {8k, 32k}
+with ragged live lengths (mean ~2k): exactly the regime where the
+streamed kernel pays ~S_max of bandwidth for ~live of useful work.
 
 Reports tokens/sec per decode-attention call (B requests, each at its own
-position, one attention layer) plus the flash-vs-oracle max abs delta. On
-CPU the flash kernel runs in interpret mode — the timing is context, the
-delta is the deliverable; on TPU the same calls compile the real kernel
-and the einsum path materializes the (B, H, S) logits the kernel avoids.
+position, one attention layer) plus each impl's max abs delta vs the
+oracle, and writes the whole table to ``BENCH_decode.json`` at the repo
+root so the perf trajectory has a tracked first point. On CPU the flash
+kernels run in interpret mode — the timing is context, the parity deltas
+and the harness are the deliverable; on TPU the same calls compile the
+real kernels and the prefetch/streamed gap becomes the dead-tile DMA gap.
+
+``--smoke`` (what ``make bench-smoke`` and the fast test tier run) shrinks
+to toy sizes, asserts flash-vs-oracle parity, and still emits the JSON.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit, time_call
 from repro.kernels import flash_decode as fd
 from repro.models import attention as A
+from repro.runtime import kv_cache as kvc
 
 B, HKV, G, DH = 4, 2, 4, 64
-SEQ_LENS = [1024, 8192, 32768]
+SEQ_LENS = [8192, 32768]
+SMOKE_SEQ_LENS = [256, 512]
+PAGE_SIZE = 128
+PARITY_ATOL = 2e-2
+
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), '..')
+DEFAULT_OUT = os.path.join(_ROOT, 'BENCH_decode.json')
+# smoke runs must not clobber the tracked full-size artifact
+SMOKE_OUT = os.path.join(_ROOT, 'BENCH_decode.smoke.json')
 
 
-def _einsum_decode(q, k, v, pos, scale):
-    return A.sdpa_decode(q, k, v, pos, scale)
+def _ragged_pos(s_max: int) -> jnp.ndarray:
+    """Per-request live lengths: one long-context straggler, the rest
+    short — mean ~2k at S_max=32k (the ISSUE's serving mix)."""
+    target_mean = max(s_max // 16, 8)
+    pos = [min(s_max - 1, 4 * target_mean - 3 * target_mean // 2),
+           target_mean, target_mean // 2, target_mean // 2]
+    return jnp.array(pos[:B], jnp.int32)
 
 
-def run():
+def _paged_from_contiguous(k: jnp.ndarray, page_size: int, seed: int = 0):
+    """Scatter a (B, S, Hkv, dh) cache into a shuffled page pool + block
+    tables — non-contiguous on purpose, to price the real serving layout."""
+    b, s = k.shape[:2]
+    w = s // page_size
+    perm = np.random.RandomState(seed).permutation(np.arange(1, b * w + 1))
+    bt = jnp.asarray(perm.reshape(b, w).astype(np.int32))
+    pool = jnp.zeros((b * w + 1, page_size) + k.shape[2:], k.dtype)
+    return kvc.scatter_pages(pool, k, bt), bt
+
+
+def _bench_one(s_max: int, rows: list, interpret: bool) -> None:
     scale = 1.0 / DH ** 0.5
-    for s_max in SEQ_LENS:
-        key = jax.random.key(s_max)
-        q = jax.random.normal(key, (B, 1, HKV * G, DH), jnp.float32)
-        k = jax.random.normal(jax.random.fold_in(key, 1),
-                              (B, s_max, HKV, DH), jnp.float32)
-        v = jax.random.normal(jax.random.fold_in(key, 2),
-                              (B, s_max, HKV, DH), jnp.float32)
-        kc = k.astype(jnp.bfloat16)
-        vc = v.astype(jnp.bfloat16)
-        # heterogeneous positions spread over the cache
-        pos = jnp.array([s_max - 1, s_max // 2, s_max // 3, s_max // 7],
-                        jnp.int32)[:B]
+    key = jax.random.key(s_max)
+    q = jax.random.normal(key, (B, 1, HKV * G, DH), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1),
+                          (B, s_max, HKV, DH), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2),
+                          (B, s_max, HKV, DH), jnp.float32)
+    kc = k.astype(jnp.bfloat16)
+    vc = v.astype(jnp.bfloat16)
+    pos = _ragged_pos(s_max)
+    kp, bt = _paged_from_contiguous(kc, PAGE_SIZE)
+    vp, _ = _paged_from_contiguous(vc, PAGE_SIZE)
 
-        oracle = jax.jit(lambda q, k, v, p: _einsum_decode(q, k, v, p, scale))
-        flash = jax.jit(lambda q, k, v, p: fd.flash_decode(
-            q, k, v, p, scale=scale))
-
-        t_oracle = time_call(oracle, q, kc, vc, pos, n_iter=3)
-        t_flash = time_call(flash, q, kc, vc, pos, n_iter=3)
-        want = oracle(q, kc, vc, pos)
-        got = flash(q, kc, vc, pos)
+    # caches are runtime operands, not jit closure constants: baking a
+    # 33 MB cache into the executable would let XLA fold/relayout exactly
+    # the HBM traffic the prefetch-vs-streamed comparison measures
+    impls = {
+        'einsum_oracle': (jax.jit(
+            lambda q, k, v, p: A.sdpa_decode(q, k, v, p, scale)),
+            (q, kc, vc, pos)),
+        'flash_streamed': (jax.jit(
+            lambda q, k, v, p: fd.flash_decode(q, k, v, p, scale=scale,
+                                               impl='streamed',
+                                               interpret=interpret)),
+            (q, kc, vc, pos)),
+        'flash_prefetch': (jax.jit(
+            lambda q, k, v, p: fd.flash_decode(q, k, v, p, scale=scale,
+                                               impl='prefetch',
+                                               interpret=interpret)),
+            (q, kc, vc, pos)),
+        'flash_paged': (jax.jit(
+            lambda q, k, v, p, t: fd.flash_decode_paged(
+                q, k, v, p, t, scale=scale, interpret=interpret)),
+            (q, kp, vp, pos, bt)),
+    }
+    want = impls['einsum_oracle'][0](*impls['einsum_oracle'][1])
+    for name, (fn, args) in impls.items():
+        t_us = time_call(fn, *args, n_iter=3)
+        got = fn(*args)
         err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
                                     - want.astype(jnp.float32))))
-        emit(f'decode.einsum_oracle.S{s_max}', t_oracle,
-             f'tok_per_s={B / (t_oracle * 1e-6):.1f}')
-        emit(f'decode.flash.S{s_max}', t_flash,
-             f'tok_per_s={B / (t_flash * 1e-6):.1f},max_abs_err={err:.2e}')
+        row = dict(name=name, s_max=s_max,
+                   mean_live=float(jnp.mean(pos + 1)),
+                   us_per_call=round(t_us, 2),
+                   tok_per_s=round(B / (t_us * 1e-6), 1),
+                   max_abs_err_vs_oracle=err)
+        rows.append(row)
+        emit(f'decode.{name}.S{s_max}', t_us,
+             f'tok_per_s={row["tok_per_s"]},max_abs_err={err:.2e}')
+
+
+def run(smoke: bool = False, out_path: Optional[str] = None) -> dict:
+    if out_path is None:
+        out_path = SMOKE_OUT if smoke else DEFAULT_OUT
+    interpret = jax.default_backend() != 'tpu'
+    rows: list = []
+    for s_max in (SMOKE_SEQ_LENS if smoke else SEQ_LENS):
+        _bench_one(s_max, rows, interpret)
+    result = dict(
+        bench='decode',
+        backend=jax.default_backend(),
+        interpret=interpret,
+        smoke=smoke,
+        batch=B, n_heads=HKV * G, n_kv_heads=HKV, head_dim=DH,
+        page_size=PAGE_SIZE,
+        rows=rows,
+    )
+    # parity gates the write: a broken kernel must not overwrite the
+    # tracked perf artifact with its own numbers
+    for row in rows:
+        if row['name'] != 'einsum_oracle':
+            assert row['max_abs_err_vs_oracle'] < PARITY_ATOL, row
+    out_path = os.path.abspath(out_path)
+    with open(out_path, 'w') as f:
+        json.dump(result, f, indent=2)
+    print(f'# wrote {out_path}')
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--smoke', action='store_true',
+                    help='toy sizes, parity-asserted (the CI tier); writes '
+                         'BENCH_decode.smoke.json, not the tracked artifact')
+    ap.add_argument('--out', default=None)
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke, out_path=args.out)
 
 
 if __name__ == '__main__':
-    run()
+    main()

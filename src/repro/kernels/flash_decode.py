@@ -1,4 +1,4 @@
-"""Fused Pallas flash-decode attention kernel for batched serving.
+"""Fused Pallas flash-decode attention kernels for batched serving.
 
 One query token per request attends its whole KV cache in a single pass:
 the kernel streams the cache in ``(block, Hkv, dh)`` tiles and carries the
@@ -10,17 +10,39 @@ are never renormalized mid-reduction; the single output conversion
 
 Batched serving shape: every request sits at its own absolute position, so
 the kernel takes a per-request ``pos`` vector (and a per-request sliding
-``window``) as SMEM scalars; keys beyond ``pos`` — cache garbage, padding,
-or other requests' territory — are masked inside the tile, which is what
-lets one jit'd decode step serve heterogeneous-position requests.
+``window``). Keys beyond ``pos`` — cache garbage, padding, or other
+requests' territory — are masked inside the tile, which is what lets one
+jit'd decode step serve heterogeneous-position requests.
+
+Two memory paths share the same online-softmax body:
+
+* **prefetch** (default): ``pos``/``window`` ride in scalar-prefetch
+  operands (``pltpu.PrefetchScalarGridSpec``) and the K/V ``index_map``s
+  are data-dependent. Grid steps whose tile is fully masked for the
+  request clamp their block index into the live range
+  ``[first_live, last_live]``, so consecutive dead steps re-fetch the
+  previous live block's index — Pallas' pipeline emitter skips the DMA
+  when the block index repeats, and dead tiles generate no new HBM
+  traffic. A request at pos=1k in a 32k cache now moves ~1k positions of
+  K/V instead of 32k.
+* **streamed** (legacy, kept as the benchmark baseline): ``pl.when``
+  skips the compute of masked tiles but every tile is still DMA'd
+  HBM->VMEM.
+
+``flash_decode_paged`` runs the same prefetch kernel over a paged KV pool
+``(num_pages, page_size, Hkv, dh)`` shared by all requests: the per-request
+block table (a third scalar-prefetch operand) maps logical key blocks to
+physical pages, so live keys stay dense no matter how fragmented the pool
+is. The block-table width bounds the grid's S dimension — the scheduler
+sizes it to ``ceil(max_live / page_size)``, which is the per-request early
+exit: steps past a request's last live block repeat the previous index (no
+DMA) and skip compute.
 
 Grid: (B, Hkv, S/bs) with S innermost ("arbitrary"); each (b, h) cell
 keeps the GQA query group (G = H // Hkv queries) resident and reduces over
-the key tiles. B and Hkv are parallel. Fully-masked tiles are skipped with
-``pl.when`` (compute only; HBM->VMEM streaming of a dead tile still
-happens — scalar-prefetch block skipping is a later PR).
+the key tiles. B and Hkv are parallel.
 
-CPU CI runs this same kernel body with ``interpret=True``.
+CPU CI runs these same kernel bodies with ``interpret=True``.
 """
 
 from __future__ import annotations
@@ -38,22 +60,32 @@ DEFAULT_BS = 512          # key-tile length along the cache S axis
 NEG_INF = float('-inf')
 
 
-def _flash_decode_kernel(pos_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
-                         acc_ref, m_ref, l_ref, *, bs: int, s_steps: int,
-                         scale: float):
-    s = pl.program_id(2)
+# ----------------------------------------------------------------------------
+# shared online-softmax tile body
+# ----------------------------------------------------------------------------
+def _live_block_range(pos, win, bs: int):
+    """[first, last] inclusive range of key blocks with any valid key for a
+    request at ``pos`` with sliding window ``win``. The index maps and the
+    kernel's compute guard must agree on this range: a tile is fetched iff
+    it is computed."""
+    first = jnp.maximum(pos - win + 1, 0) // bs
+    last = jnp.maximum(pos, 0) // bs
+    return first, last
 
+
+def _softmax_tile(pos, win, s, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, bs: int, s_steps: int,
+                  scale: float):
+    """One online-softmax step over key tile ``s`` (shared by the streamed,
+    prefetch, and paged kernels; only the scalar plumbing differs)."""
     @pl.when(s == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    pos = pos_ref[0, 0]
-    win = win_ref[0, 0]
-    # Tile-level skip: every key in this tile is causally dead for this
-    # request (start > pos) or behind its sliding window (end <= pos - win).
-    live = (s * bs <= pos) & (s * bs + bs > pos - win)
+    first, last = _live_block_range(pos, win, bs)
+    live = (s >= first) & (s <= last)
 
     @pl.when(live)
     def _tile():
@@ -84,13 +116,26 @@ def _flash_decode_kernel(pos_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
 
 
+# ----------------------------------------------------------------------------
+# streamed kernel (legacy: every tile is DMA'd, masked tiles skip compute)
+# ----------------------------------------------------------------------------
+def _flash_decode_kernel(pos_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, bs: int, s_steps: int,
+                         scale: float):
+    s = pl.program_id(2)
+    _softmax_tile(pos_ref[0, 0], win_ref[0, 0], s, q_ref, k_ref, v_ref,
+                  o_ref, acc_ref, m_ref, l_ref, bs=bs, s_steps=s_steps,
+                  scale=scale)
+
+
 @functools.partial(jax.jit,
                    static_argnames=('scale', 'bs', 'interpret'))
 def flash_decode_gqa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                      pos: jnp.ndarray, window: jnp.ndarray, *,
                      scale: float, bs: int = DEFAULT_BS,
                      interpret: bool = False) -> jnp.ndarray:
-    """Single-token GQA decode attention over a length-masked KV cache.
+    """Single-token GQA decode attention over a length-masked KV cache,
+    streaming every key tile (the pre-prefetch baseline).
 
     q:      (B, Hkv, G, dh) — query heads grouped by their KV head
     k, v:   (B, S, Hkv, dh) — cache; S % bs == 0 (pad in the wrapper)
@@ -135,27 +180,206 @@ def flash_decode_gqa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     )(pos.astype(jnp.int32), window.astype(jnp.int32), q, k, v)
 
 
+# ----------------------------------------------------------------------------
+# scalar-prefetch kernel: dead tiles generate no HBM traffic
+# ----------------------------------------------------------------------------
+def _flash_prefetch_kernel(pos_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
+                           acc_ref, m_ref, l_ref, *, bs: int, s_steps: int,
+                           scale: float):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    _softmax_tile(pos_ref[b], win_ref[b], s, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, bs=bs, s_steps=s_steps, scale=scale)
+
+
+def _flash_paged_kernel(pos_ref, win_ref, bt_ref, q_ref, k_ref, v_ref,
+                        o_ref, acc_ref, m_ref, l_ref, *, bs: int,
+                        s_steps: int, scale: float):
+    del bt_ref                       # consumed by the index maps only
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    _softmax_tile(pos_ref[b], win_ref[b], s, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, bs=bs, s_steps=s_steps, scale=scale)
+
+
+def _clamped_block(s, pos_ref, win_ref, b, bs: int):
+    """Block index actually fetched at grid step ``s``: dead steps revisit
+    the nearest live block so their DMA is elided by the pipeline."""
+    first, last = _live_block_range(pos_ref[b], win_ref[b], bs)
+    return jnp.clip(s, first, last)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=('scale', 'bs', 'interpret'))
+def flash_decode_gqa_prefetch(q: jnp.ndarray, k: jnp.ndarray,
+                              v: jnp.ndarray, pos: jnp.ndarray,
+                              window: jnp.ndarray, *, scale: float,
+                              bs: int = DEFAULT_BS,
+                              interpret: bool = False) -> jnp.ndarray:
+    """:func:`flash_decode_gqa` with scalar-prefetch block skipping: K/V
+    index maps read ``pos``/``window`` and clamp dead grid steps onto the
+    previous live block, so fully-masked tiles are never fetched.
+
+    Same contract as :func:`flash_decode_gqa` except pos/window are (B,).
+    """
+    b, hkv, g, dh = q.shape
+    s_max = k.shape[1]
+    assert k.shape == (b, s_max, hkv, dh) and v.shape == k.shape, \
+        (q.shape, k.shape, v.shape)
+    assert s_max % bs == 0, (s_max, bs)
+    assert pos.shape == (b,) and window.shape == (b,)
+    s_steps = s_max // bs
+    grid = (b, hkv, s_steps)
+
+    def qo_map(bb, h, s, pos_ref, win_ref):
+        del s, pos_ref, win_ref
+        return (bb, h, 0, 0)
+
+    def kv_map(bb, h, s, pos_ref, win_ref):
+        return (bb, _clamped_block(s, pos_ref, win_ref, bb, bs), h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh), qo_map),
+            pl.BlockSpec((1, bs, 1, dh), kv_map),
+            pl.BlockSpec((1, bs, 1, dh), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh), qo_map),
+        scratch_shapes=[
+            pltpu.VMEM((g, dh), jnp.float32),    # unnormalized output
+            pltpu.VMEM((g, 1), jnp.float32),     # running max
+            pltpu.VMEM((g, 1), jnp.float32),     # running sum
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_flash_prefetch_kernel, bs=bs, s_steps=s_steps,
+                          scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), jnp.float32),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=('parallel', 'parallel', 'arbitrary'),
+        ),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), window.astype(jnp.int32), q, k, v)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=('scale', 'interpret'))
+def flash_decode_gqa_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
+                           v_pages: jnp.ndarray, pos: jnp.ndarray,
+                           window: jnp.ndarray, block_tables: jnp.ndarray,
+                           *, scale: float,
+                           interpret: bool = False) -> jnp.ndarray:
+    """Single-token GQA decode attention over a *paged* KV pool.
+
+    q:            (B, Hkv, G, dh)
+    k/v_pages:    (P, page_size, Hkv, dh) — pool shared by all requests
+    pos:          (B,) int32 per-request absolute position
+    window:       (B,) int32 per-request sliding window
+    block_tables: (B, W) int32 — logical key block i of request b lives in
+                  physical page block_tables[b, i]; W bounds the grid's S
+                  dimension (size it to ceil(max_live / page_size))
+
+    Returns (B, Hkv, G, dh) f32.
+    """
+    b, hkv, g, dh = q.shape
+    _, page_size, hkv_k, dh_k = k_pages.shape
+    assert (hkv_k, dh_k) == (hkv, dh), (q.shape, k_pages.shape)
+    assert v_pages.shape == k_pages.shape
+    assert pos.shape == (b,) and window.shape == (b,)
+    assert block_tables.ndim == 2 and block_tables.shape[0] == b
+    s_steps = block_tables.shape[1]
+    grid = (b, hkv, s_steps)
+
+    def qo_map(bb, h, s, pos_ref, win_ref, bt_ref):
+        del s, pos_ref, win_ref, bt_ref
+        return (bb, h, 0, 0)
+
+    def kv_map(bb, h, s, pos_ref, win_ref, bt_ref):
+        blk = _clamped_block(s, pos_ref, win_ref, bb, page_size)
+        return (bt_ref[bb, blk], 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh), qo_map),
+            pl.BlockSpec((1, page_size, 1, dh), kv_map),
+            pl.BlockSpec((1, page_size, 1, dh), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh), qo_map),
+        scratch_shapes=[
+            pltpu.VMEM((g, dh), jnp.float32),    # unnormalized output
+            pltpu.VMEM((g, 1), jnp.float32),     # running max
+            pltpu.VMEM((g, 1), jnp.float32),     # running sum
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_flash_paged_kernel, bs=page_size,
+                          s_steps=s_steps, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), jnp.float32),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=('parallel', 'parallel', 'arbitrary'),
+        ),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), window.astype(jnp.int32),
+      block_tables.astype(jnp.int32), q, k_pages, v_pages)
+
+
+# ----------------------------------------------------------------------------
+# shape-flexible wrappers
+# ----------------------------------------------------------------------------
 def _pick_bs(s_max: int, bs: int) -> int:
-    """Largest tile <= bs that keeps padding overhead small; S is padded to
-    a multiple of the result."""
-    bs = min(bs, max(128, 1 << (s_max - 1).bit_length()))
-    return bs
+    """Key-tile length: the largest tile <= ``bs`` (halving down to 128)
+    whose padding stays under max(128, s_max/8).
+
+    The old rule rounded ``s_max`` UP to the next power of two before
+    clamping, so a non-power-of-two cache could nearly double: S=520 picked
+    bs=512 and padded to 1024 (+504 dead positions). The cap bounds that
+    blowup at ~12.5% while still preferring big tiles (fewer grid steps);
+    chasing the absolute minimum pad instead would collapse barely-
+    unaligned caches to 128-wide tiles and 4x the grid — a bad trade, since
+    pad tiles are causally dead and the prefetch path never fetches them."""
+    if bs <= 128:
+        return bs                   # caller-tightened VMEM cap wins
+    limit = max(128, s_max // 8)
+    tile = bs
+    while tile > 128:
+        if -(-s_max // tile) * tile - s_max <= limit:
+            return tile
+        tile //= 2
+    return 128                      # pad < 128 <= limit always holds here
+
+
+def _norm_scalar_vec(x, b: int, fill=None) -> jnp.ndarray:
+    """None | int | traced scalar | (B,)/(B,1) array -> (B,) int32."""
+    if x is None:
+        return jnp.full((b,), fill, jnp.int32)
+    x = jnp.asarray(x, jnp.int32)
+    return jnp.broadcast_to(x.reshape(-1) if x.ndim else x, (b,))
 
 
 def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                  pos: jnp.ndarray, *, scale: float,
                  window=None, bs: int = DEFAULT_BS,
-                 interpret=None) -> jnp.ndarray:
-    """Shape-flexible wrapper around :func:`flash_decode_gqa`.
+                 interpret=None, impl: str = 'prefetch') -> jnp.ndarray:
+    """Shape-flexible wrapper around the flash-decode kernels.
 
     q:   (B, 1, H, dh) or (B, H, dh) — the single decode-step query
     k,v: (B, S_max, Hkv, dh) KV cache, any dtype (bf16 serving layout)
     pos: scalar or (B,) int — per-request absolute positions
     window: None | int | traced scalar | (B,) — sliding-window width
+    impl: 'prefetch' (scalar-prefetch block skipping, default) or
+          'streamed' (legacy: every tile DMA'd; kept as the benchmark
+          baseline for the dead-tile bandwidth comparison)
 
     Returns attention output shaped like q, in v.dtype (the one conversion
     back to the serving dtype happens here, after the fused normalize).
     """
+    assert impl in ('prefetch', 'streamed'), impl
     squeeze = q.ndim == 4
     if squeeze:
         assert q.shape[1] == 1, q.shape
@@ -164,15 +388,8 @@ def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     s_max, hkv = k.shape[1], k.shape[2]
     g = h // hkv
     qg = q.reshape(b, hkv, g, dh)      # same (hkv, g) grouping as _sdpa
-    pos = jnp.asarray(pos, jnp.int32)
-    pos = jnp.broadcast_to(pos.reshape(-1, 1) if pos.ndim else pos,
-                           (b, 1)).astype(jnp.int32)
-    if window is None:
-        win = jnp.full((b, 1), s_max + 1, jnp.int32)
-    else:
-        win = jnp.asarray(window, jnp.int32)
-        win = jnp.broadcast_to(win.reshape(-1, 1) if win.ndim else win,
-                               (b, 1)).astype(jnp.int32)
+    pos = _norm_scalar_vec(pos, b)
+    win = _norm_scalar_vec(window, b, fill=s_max + 1)
     bs_eff = _pick_bs(s_max, bs)
     pad = (-s_max) % bs_eff
     if pad:
@@ -181,7 +398,43 @@ def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     if interpret is None:
         from repro.kernels import ops
         interpret = ops._interpret()
-    out = flash_decode_gqa(qg, k, v, pos, win, scale=scale, bs=bs_eff,
-                           interpret=interpret)
+    if impl == 'prefetch':
+        out = flash_decode_gqa_prefetch(qg, k, v, pos, win, scale=scale,
+                                        bs=bs_eff, interpret=interpret)
+    else:
+        out = flash_decode_gqa(qg, k, v, pos[:, None], win[:, None],
+                               scale=scale, bs=bs_eff, interpret=interpret)
     out = out.reshape(b, h, dh).astype(v.dtype)
+    return out[:, None] if squeeze else out
+
+
+def flash_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
+                       v_pages: jnp.ndarray, pos: jnp.ndarray,
+                       block_tables: jnp.ndarray, *, scale: float,
+                       window=None, interpret=None) -> jnp.ndarray:
+    """Shape-flexible wrapper around :func:`flash_decode_gqa_paged`.
+
+    q: (B, 1, H, dh) or (B, H, dh); k/v_pages: (P, page_size, Hkv, dh);
+    pos: scalar or (B,); block_tables: (B, W) int32.
+
+    Returns attention output shaped like q, in v_pages.dtype.
+    """
+    squeeze = q.ndim == 4
+    if squeeze:
+        assert q.shape[1] == 1, q.shape
+        q = q[:, 0]
+    b, h, dh = q.shape
+    hkv = k_pages.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, dh)
+    s_logical = block_tables.shape[1] * k_pages.shape[1]
+    pos = _norm_scalar_vec(pos, b)
+    win = _norm_scalar_vec(window, b, fill=s_logical + 1)
+    if interpret is None:
+        from repro.kernels import ops
+        interpret = ops._interpret()
+    out = flash_decode_gqa_paged(qg, k_pages, v_pages, pos, win,
+                                 block_tables, scale=scale,
+                                 interpret=interpret)
+    out = out.reshape(b, h, dh).astype(v_pages.dtype)
     return out[:, None] if squeeze else out

@@ -2,31 +2,47 @@
 decode step-by-step with a persistent KV cache, all through the jitted
 serve steps (same code path the decode dry-run cells lower).
 
-Two serving shapes:
+Three serving shapes:
 
   * lock-step (default): every request at the same position, scalar ``pos``;
   * ragged (``--ragged``): per-request prompt lengths, a (B,) ``pos``
     vector, per-request last-logit gather at prefill — one jit'd decode
     step serving requests at heterogeneous positions. Attention families
-    only (an SSM state has no position to mask behind).
+    only (an SSM state has no position to mask behind);
+  * continuous (``--continuous``): a stream of heterogeneous-length
+    requests over a fixed number of decode *slots* backed by a paged KV
+    cache (``runtime/kv_cache.py``) — admit-on-release, per-slot pos,
+    page-granular cache growth, eviction on EOS/length, preempt-and-requeue
+    when the pool runs dry. One jit'd prefill (admission) and one jit'd
+    decode step serve the whole stream with no recompilation across steps.
 
 ``--attn-impl flash`` routes the decode cache read through the fused
 Pallas flash-decode kernel (``kernels/flash_decode.py``) instead of the
-einsum oracle.
+einsum oracle; under ``--continuous`` this is the scalar-prefetch paged
+kernel, so dead cache tiles are neither computed nor fetched.
+
+``--sample`` (with ``--temperature`` / ``--top-k``) replaces greedy argmax
+with temperature/top-k sampling.
 
 Usage:
   python -m repro.launch.serve --arch stablelm-1.6b --batch 4 \
       --prompt-len 32 --gen-len 32 --mode w8a8 --ragged --attn-impl flash
+  python -m repro.launch.serve --arch stablelm-1.6b --continuous \
+      --slots 4 --requests 12 --page-size 8 --attn-impl flash
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
+from collections import deque
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import configs
 from repro.core.yoco_linear import YocoConfig
@@ -34,6 +50,7 @@ from repro.core import yoco_linear
 from repro.data import synthetic
 from repro.models import model as model_mod
 from repro.models.model import ModelRuntime
+from repro.runtime import kv_cache as kvc
 from repro.runtime import serve_step as SS
 
 
@@ -48,6 +65,7 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
           prompt_len: int = 32, gen_len: int = 32, mode: str = 'bf16',
           prequantize: bool = False, seed: int = 0,
           attn_impl: str = 'einsum', ragged: bool = False,
+          greedy: bool = True, temperature: float = 1.0, top_k: int = 0,
           quiet: bool = False) -> dict:
     cfg = configs.get(arch, smoke=smoke)
     if ragged and cfg.family in ('ssm', 'hybrid'):
@@ -69,8 +87,11 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
     prompts = synthetic.make_batch(dc, 0)['inputs']
 
     prefill_fn = jax.jit(SS.make_prefill_step(cfg, yoco, rt))
-    decode_fn = jax.jit(SS.make_decode_step(cfg, yoco, rt),
+    decode_fn = jax.jit(SS.make_decode_step(cfg, yoco, rt, greedy=greedy,
+                                            temperature=temperature,
+                                            top_k=top_k),
                         donate_argnums=(3,))
+    sample_key = jax.random.key(seed + 1)
 
     cache = model_mod.init_cache_tree(cfg, batch, max_seq)
     lens = _ragged_lens(batch, prompt_len) if ragged else None
@@ -85,9 +106,12 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
     jax.block_until_ready(logits)
     t_prefill = time.time() - t0
 
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    if cfg.input_kind == 'codebooks':
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, CB)
+    if greedy:
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    else:
+        sample_key, sub = jax.random.split(sample_key)
+        tok = SS.sample_tokens(logits, sub, temperature=temperature,
+                               top_k=top_k)
     generated = [tok]
     pos_vec = lens if ragged else None
     t0 = time.time()
@@ -98,7 +122,11 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
             # stub frontend: feed the token id as a (deterministic) embedding
             step_in = jax.nn.one_hot(tok % cfg.d_model, cfg.d_model,
                                      dtype=jnp.bfloat16)
-        tok, logits, cache = decode_fn(params, step_in, pos, cache)
+        if greedy:
+            tok, logits, cache = decode_fn(params, step_in, pos, cache)
+        else:
+            sample_key, sub = jax.random.split(sample_key)
+            tok, logits, cache = decode_fn(params, step_in, pos, cache, sub)
         generated.append(tok)
     jax.block_until_ready(tok)
     t_decode = time.time() - t0
@@ -119,6 +147,296 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
     return out
 
 
+# ----------------------------------------------------------------------------
+# continuous batching over a paged KV cache
+# ----------------------------------------------------------------------------
+@dataclasses.dataclass
+class Request:
+    """One serving request: a prompt and a generation budget."""
+    rid: int
+    prompt: np.ndarray          # (plen,) int32, unpadded
+    target_gen: int             # generation budget ("EOS" for synthetic runs)
+
+
+@dataclasses.dataclass
+class _SlotState:
+    req: Request
+    pos: int                    # absolute position the next decode writes at
+    tokens: List[int]
+    admit_seq: int              # admission order (preemption picks youngest)
+
+
+class ContinuousScheduler:
+    """Admit-on-release continuous batching over ``slots`` decode lanes.
+
+    Contract (mirrored in ROADMAP.md for the MLA follow-up):
+
+    * **admit**: a pending request takes a free slot iff the pool can cover
+      its padded prompt (``blocks_for(prompt_pad)`` pages, all-or-nothing).
+      Admission runs the jit'd paged prefill (batch=1, fixed padded length,
+      block-table row as the write map) and seeds the slot with the first
+      sampled/greedy token at ``pos = plen``.
+    * **grow**: before every decode step each active slot is ``ensure``d a
+      page for the position it is about to write. If the pool is dry, the
+      *youngest* active request is preempted — pages released, request
+      requeued at the front of the pending queue (recompute-style
+      preemption, no state checkpoint).
+    * **evict**: a slot is released (pages back to the free list, table row
+      reset to the garbage page) when its request emits ``eos_id`` or
+      exhausts its generation budget; the freed slot admits on the next
+      loop turn.
+    * idle slots decode at ``pos=0`` against the garbage page and their
+      outputs are discarded — the decode step's shapes never change, so
+      nothing recompiles across steps.
+    """
+
+    def __init__(self, kv: kvc.PagedKVCache, *, prompt_pad: int,
+                 eos_id: Optional[int] = None):
+        self.kv = kv
+        self.prompt_pad = prompt_pad
+        self.eos_id = eos_id
+        self.pending: deque = deque()
+        self.active: dict = {}                 # slot -> _SlotState
+        self.free_slots = list(range(kv.slots - 1, -1, -1))
+        self._admit_seq = 0
+        self.completed: List[_SlotState] = []
+        self.n_preempted = 0
+
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    @property
+    def done(self) -> bool:
+        return not self.pending and not self.active
+
+    def try_admit(self):
+        """Pop (request, slot) pairs that fit the pool right now; the caller
+        runs the prefill and then calls :meth:`seed`."""
+        admitted = []
+        while self.pending and self.free_slots:
+            blocks = self.kv.blocks_for(self.prompt_pad)
+            slot = self.free_slots[-1]
+            if not self.kv.alloc_blocks(slot, blocks):
+                break                           # pool dry: wait for release
+            self.free_slots.pop()
+            admitted.append((self.pending.popleft(), slot))
+        return admitted
+
+    def seed(self, req: Request, slot: int, first_token: int) -> None:
+        self._admit_seq += 1
+        st = _SlotState(req=req, pos=len(req.prompt),
+                        tokens=[int(first_token)],
+                        admit_seq=self._admit_seq)
+        self.active[slot] = st
+        self._maybe_finish(slot, int(first_token))
+
+    def grow_for_decode(self) -> None:
+        """Back every active slot's next write position with a page,
+        preempting youngest-first when the pool runs dry."""
+        for slot in sorted(self.active,
+                           key=lambda s: self.active[s].admit_seq):
+            st = self.active.get(slot)
+            if st is None:
+                continue            # preempted by an earlier iteration
+            if st.pos // self.kv.page_size >= self.kv.max_blocks:
+                # table-width exhaustion, not pool pressure: preemption
+                # frees pages but can never widen the table — reject loudly
+                raise ValueError(
+                    f'request {st.req.rid} at pos {st.pos} exceeds the '
+                    f'block-table width ({self.kv.max_blocks} blocks * '
+                    f'{self.kv.page_size} positions); size max_blocks to '
+                    f'the longest admissible sequence')
+            while slot in self.active and not self.kv.ensure(slot, st.pos):
+                self._preempt_youngest()
+
+    def _preempt_youngest(self) -> None:
+        victim = max(self.active, key=lambda s: self.active[s].admit_seq)
+        st = self.active.pop(victim)
+        self.kv.release(victim)
+        self.free_slots.append(victim)
+        # recompute preemption: generated tokens are discarded, the request
+        # re-enters at the queue front and re-prefills when pages free up
+        self.pending.appendleft(st.req)
+        self.n_preempted += 1
+
+    def step_vectors(self):
+        """(token, pos) vectors for the jit'd decode step; idle slots get
+        (0, 0) against the garbage page."""
+        toks = np.zeros((self.kv.slots,), np.int32)
+        pos = np.zeros((self.kv.slots,), np.int32)
+        for slot, st in self.active.items():
+            toks[slot] = st.tokens[-1]
+            pos[slot] = st.pos
+        return toks, pos
+
+    def absorb(self, tok_np: np.ndarray) -> None:
+        """Fold one decode step's tokens back into the slot states."""
+        for slot in list(self.active):
+            st = self.active[slot]
+            tok = int(tok_np[slot])
+            st.tokens.append(tok)
+            st.pos += 1
+            self._maybe_finish(slot, tok)
+
+    def _maybe_finish(self, slot: int, tok: int) -> None:
+        st = self.active.get(slot)
+        if st is None:
+            return
+        hit_eos = self.eos_id is not None and tok == self.eos_id
+        if hit_eos or len(st.tokens) >= st.req.target_gen:
+            self.active.pop(slot)
+            self.kv.release(slot)
+            self.free_slots.append(slot)
+            self.completed.append(st)
+
+
+def _ragged_stream(n_requests: int, prompt_len: int, gen_len: int,
+                   prompts: np.ndarray) -> List[Request]:
+    """Deterministic heterogeneous request stream: prompt lengths in
+    [~half, prompt_len], generation budgets in [~half, gen_len]."""
+    lo_p = max(4, prompt_len // 2)
+    lo_g = max(2, gen_len // 2)
+    reqs = []
+    for i in range(n_requests):
+        plen = lo_p + (i * 5) % max(1, prompt_len - lo_p + 1)
+        glen = lo_g + (i * 3) % max(1, gen_len - lo_g + 1)
+        reqs.append(Request(rid=i, prompt=np.asarray(prompts[i, :plen]),
+                            target_gen=glen))
+    return reqs
+
+
+def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
+                     n_requests: int = 8, prompt_len: int = 32,
+                     gen_len: int = 32, page_size: int = 8,
+                     num_pages: Optional[int] = None, mode: str = 'bf16',
+                     prequantize: bool = False, seed: int = 0,
+                     attn_impl: str = 'flash', greedy: bool = True,
+                     temperature: float = 1.0, top_k: int = 0,
+                     eos_id: Optional[int] = None,
+                     max_steps: Optional[int] = None,
+                     quiet: bool = False) -> dict:
+    """Serve a stream of heterogeneous-length requests end-to-end (admit,
+    decode, evict, re-admit) under one jit'd decode step."""
+    cfg = configs.get(arch, smoke=smoke)
+    if cfg.family in ('ssm', 'hybrid') or cfg.mla is not None \
+            or cfg.input_kind != 'tokens':
+        raise ValueError(f'--continuous needs a token-input GQA KV cache; '
+                         f'{arch} is family={cfg.family} '
+                         f'input_kind={cfg.input_kind}')
+    yoco = YocoConfig(mode=mode)
+    rt = ModelRuntime(attn_impl=attn_impl)
+    max_seq = prompt_len + gen_len
+    max_blocks = -(-max_seq // page_size)
+    if num_pages is None:
+        num_pages = 1 + slots * max_blocks      # garbage page + full lanes
+    if max_blocks > num_pages - 1:
+        # one lane must always be able to run to completion — a pool that
+        # can't hold a full sequence livelocks in preempt/re-prefill cycles
+        raise ValueError(f'pool too small: a full {max_seq}-token sequence '
+                         f'needs {max_blocks} pages, pool has '
+                         f'{num_pages - 1} allocatable')
+    kv = kvc.PagedKVCache(num_pages, page_size, max_blocks, slots)
+    sched = ContinuousScheduler(kv, prompt_pad=prompt_len, eos_id=eos_id)
+
+    params = model_mod.init_params(jax.random.key(seed), cfg)
+    if prequantize:
+        params = yoco_linear.quantize_tree(params)
+    dc = synthetic.for_arch(cfg, global_batch=max(n_requests, 1),
+                            seq_len=prompt_len)
+    prompts = np.asarray(synthetic.make_batch(dc, 0)['inputs'])
+    for req in _ragged_stream(n_requests, prompt_len, gen_len, prompts):
+        sched.submit(req)
+
+    cache = model_mod.init_paged_cache_tree(
+        cfg, slots, num_pages=num_pages, page_size=page_size,
+        max_blocks=max_blocks)
+    prefill_fn = jax.jit(SS.make_prefill_step(cfg, yoco, rt),
+                         donate_argnums=(2,))
+    decode_fn = jax.jit(SS.make_decode_step(cfg, yoco, rt, greedy=greedy,
+                                            temperature=temperature,
+                                            top_k=top_k),
+                        donate_argnums=(3,))
+    sample_key = jax.random.key(seed + 1)
+
+    def first_token(logits):
+        nonlocal sample_key
+        if greedy:
+            return int(jnp.argmax(logits, axis=-1)[0])
+        sample_key, sub = jax.random.split(sample_key)
+        return int(SS.sample_tokens(logits, sub, temperature=temperature,
+                                    top_k=top_k)[0])
+
+    steps = busy_slot_steps = 0
+    peak_pages = 0
+    t_prefill = 0.0
+    t0 = time.time()
+    limit = max_steps if max_steps is not None else \
+        n_requests * (prompt_len + gen_len) * 4 + 64
+    while not sched.done and steps < limit:
+        # --- admit on release -------------------------------------------
+        for req, slot in sched.try_admit():
+            pad = np.zeros((prompt_len,), np.int32)
+            pad[:len(req.prompt)] = req.prompt
+            tp = time.time()
+            pc = kvc.with_block_tables(cache, kv.tables[slot:slot + 1])
+            logits, pc = prefill_fn(params, dict(inputs=jnp.asarray(pad[None])),
+                                    pc, jnp.asarray([len(req.prompt) - 1]))
+            cache = pc                          # pools updated in place
+            t_prefill += time.time() - tp
+            sched.seed(req, slot, first_token(logits))
+        if sched.done:
+            break
+        # --- grow + decode one step over every lane ----------------------
+        sched.grow_for_decode()
+        peak_pages = max(peak_pages, kv.used_pages)
+        toks, pos = sched.step_vectors()
+        cache = kvc.with_block_tables(cache, kv.table_array())
+        if greedy:
+            tok, _, cache = decode_fn(params, jnp.asarray(toks),
+                                      jnp.asarray(pos), cache)
+        else:
+            sample_key, sub = jax.random.split(sample_key)
+            tok, _, cache = decode_fn(params, jnp.asarray(toks),
+                                      jnp.asarray(pos), cache, sub)
+        busy_slot_steps += len(sched.active)
+        steps += 1
+        sched.absorb(np.asarray(tok))
+    jax.block_until_ready(jax.tree.leaves(cache)[0])
+    wall = time.time() - t0
+    if not sched.done:
+        raise RuntimeError(f'continuous serve stalled after {steps} steps: '
+                           f'{len(sched.pending)} pending, '
+                           f'{len(sched.active)} active')
+
+    outputs = {st.req.rid: st.tokens
+               for st in sorted(sched.completed, key=lambda s: s.req.rid)}
+    out = dict(
+        requests=n_requests,
+        completed=len(sched.completed),
+        steps=steps,
+        decode_tokens=busy_slot_steps,
+        wall_s=round(wall, 4),
+        prefill_s=round(t_prefill, 4),
+        tokens_per_s=round(busy_slot_steps / max(wall - t_prefill, 1e-9), 1),
+        slot_utilization=round(busy_slot_steps / max(steps * slots, 1), 3),
+        peak_pages=peak_pages,
+        total_pages=num_pages - 1,
+        page_size=page_size,
+        preempted=sched.n_preempted,
+        attn_impl=attn_impl,
+        # admit/evict churn must never retrace: idle slots keep the step
+        # shapes constant, so exactly one decode compilation serves the run
+        decode_compilations=(decode_fn._cache_size()
+                             if hasattr(decode_fn, '_cache_size') else None),
+        out_lens={r: len(t) for r, t in outputs.items()},
+        sample={r: t[:4] for r, t in list(outputs.items())[:4]},
+    )
+    if not quiet:
+        print(json.dumps(out))
+    out['outputs'] = outputs
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument('--arch', default='stablelm-1.6b')
@@ -129,14 +447,44 @@ def main(argv=None):
     ap.add_argument('--mode', default='bf16',
                     choices=['bf16', 'qat', 'w8a8', 'analog_sim'])
     ap.add_argument('--prequantize', action='store_true')
-    ap.add_argument('--attn-impl', default='einsum',
-                    choices=['einsum', 'flash'])
+    ap.add_argument('--attn-impl', default=None,
+                    choices=['einsum', 'flash'],
+                    help='default: flash under --continuous (the paged '
+                         'prefetch kernel), einsum otherwise')
     ap.add_argument('--ragged', action='store_true')
+    ap.add_argument('--sample', action='store_true',
+                    help='temperature/top-k sampling instead of greedy')
+    ap.add_argument('--temperature', type=float, default=1.0)
+    ap.add_argument('--top-k', type=int, default=0)
+    ap.add_argument('--continuous', action='store_true',
+                    help='continuous batching over a paged KV cache')
+    ap.add_argument('--slots', type=int, default=4,
+                    help='decode lanes (continuous mode)')
+    ap.add_argument('--requests', type=int, default=8,
+                    help='synthetic request-stream length (continuous mode)')
+    ap.add_argument('--page-size', type=int, default=8)
+    ap.add_argument('--num-pages', type=int, default=None,
+                    help='pool size incl. garbage page; shrink to exercise '
+                         'queueing/preemption')
+    ap.add_argument('--eos-id', type=int, default=None)
     args = ap.parse_args(argv)
-    serve(args.arch, smoke=args.smoke, batch=args.batch,
-          prompt_len=args.prompt_len, gen_len=args.gen_len, mode=args.mode,
-          prequantize=args.prequantize, attn_impl=args.attn_impl,
-          ragged=args.ragged)
+    if args.continuous:
+        serve_continuous(args.arch, smoke=args.smoke, slots=args.slots,
+                         n_requests=args.requests,
+                         prompt_len=args.prompt_len, gen_len=args.gen_len,
+                         page_size=args.page_size, num_pages=args.num_pages,
+                         mode=args.mode, prequantize=args.prequantize,
+                         attn_impl=args.attn_impl or 'flash',
+                         greedy=not args.sample,
+                         temperature=args.temperature, top_k=args.top_k,
+                         eos_id=args.eos_id)
+    else:
+        serve(args.arch, smoke=args.smoke, batch=args.batch,
+              prompt_len=args.prompt_len, gen_len=args.gen_len,
+              mode=args.mode, prequantize=args.prequantize,
+              attn_impl=args.attn_impl or 'einsum', ragged=args.ragged,
+              greedy=not args.sample, temperature=args.temperature,
+              top_k=args.top_k)
 
 
 if __name__ == '__main__':

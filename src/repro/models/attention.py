@@ -19,6 +19,11 @@ GQA:  dict(k=(B, S_max, Hkv, dh), v=(B, S_max, Hkv, dh), pos=())
 MLA:  dict(ckv=(B, S_max, r), krope=(B, S_max, d_rope), pos=())
       — the latent cache; decode absorbs W_uk/W_uv so attention runs in
       latent space (r + d_rope per token instead of 2*H*dh).
+Paged GQA: dict(k=(P, page_size, Hkv, dh), v=(P, page_size, Hkv, dh),
+      bt=(B, W) int32) — pool + block tables (``runtime.kv_cache``). The
+      ``bt`` key is the layout discriminator: caches carrying it route
+      writes through the paged scatter and decode reads through
+      ``flash_decode_paged`` (or the densified einsum oracle).
 """
 
 from __future__ import annotations
@@ -91,6 +96,23 @@ def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16,
     return dict(
         k=jnp.zeros(lead + (batch, max_seq, hkv, dh), dtype),
         v=jnp.zeros(lead + (batch, max_seq, hkv, dh), dtype),
+    )
+
+
+def init_paged_cache(cfg, batch: int, *, num_pages: int, page_size: int,
+                     max_blocks: int, dtype=jnp.bfloat16) -> dict:
+    """Empty paged KV cache: one physical pool (page 0 = garbage page) plus
+    all-garbage block tables. ``runtime.kv_cache.PagedKVCache`` owns the
+    allocation state; this is just the device arrays."""
+    if cfg.mla is not None:
+        raise NotImplementedError(
+            'paged cache covers GQA; MLA absorbed decode is ROADMAP open '
+            'item #3 (same block-table plumbing, latent pool)')
+    hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    return dict(
+        k=jnp.zeros((num_pages, page_size, hkv, dh), dtype),
+        v=jnp.zeros((num_pages, page_size, hkv, dh), dtype),
+        bt=jnp.zeros((batch, max_blocks), jnp.int32),
     )
 
 
@@ -229,7 +251,14 @@ def attention(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
         positions = rope_mod.default_positions(b, s)
     q, k, v = _project_qkv(p, x, cfg, yoco, positions, theta)
     new_cache = None
-    if cache is not None:
+    if cache is not None and 'bt' in cache:
+        from repro.runtime import kv_cache as kvc
+        new_cache = dict(
+            k=kvc.paged_prefill_update(cache['k'], k, cache['bt']),
+            v=kvc.paged_prefill_update(cache['v'], v, cache['bt']),
+            bt=cache['bt'],
+        )
+    elif cache is not None:
         new_cache = dict(
             k=jax.lax.dynamic_update_slice(
                 cache['k'], k.astype(cache['k'].dtype), (0, 0, 0, 0)),
@@ -263,10 +292,28 @@ def attention_decode(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
     else:
         positions = jnp.asarray(pos, jnp.int32).reshape(b, 1)
     q, k, v = _project_qkv(p, x, cfg, yoco, positions, theta)
+    scale = 1.0 / float(dh) ** 0.5
+    use_flash = (rt is not None
+                 and getattr(rt, 'attn_impl', 'einsum') == 'flash')
+    if 'bt' in cache:
+        from repro.kernels import flash_decode as fd
+        from repro.runtime import kv_cache as kvc
+        posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+        ck = kvc.paged_token_update(cache['k'], k, posv, cache['bt'])
+        cv = kvc.paged_token_update(cache['v'], v, posv, cache['bt'])
+        if use_flash:
+            out = fd.flash_decode_paged(q, ck, cv, posv, cache['bt'],
+                                        scale=scale, window=window)
+        else:
+            # einsum oracle on the paged layout: densify, then sdpa
+            out = sdpa_decode(q, kvc.gather_pages(ck, cache['bt']),
+                              kvc.gather_pages(cv, cache['bt']),
+                              posv, scale, window)
+        out = yoco_linear.linear(out.reshape(b, 1, -1), p['wo'], cfg=yoco)
+        return out, dict(k=ck, v=cv, bt=cache['bt'])
     ck = _cache_update(cache['k'], k, pos)
     cv = _cache_update(cache['v'], v, pos)
-    scale = 1.0 / float(dh) ** 0.5
-    if rt is not None and getattr(rt, 'attn_impl', 'einsum') == 'flash':
+    if use_flash:
         from repro.kernels import flash_decode as fd
         out = fd.flash_decode(q, ck, cv, pos, scale=scale, window=window)
     else:

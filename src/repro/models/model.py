@@ -355,6 +355,36 @@ def init_cache_tree(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16) -> dict:
     return dict(layers=attn_caches(cfg.n_layers))
 
 
+def init_paged_cache_tree(cfg, batch: int, *, num_pages: int,
+                          page_size: int, max_blocks: int,
+                          dtype=jnp.bfloat16) -> dict:
+    """Paged-cache analogue of :func:`init_cache_tree`: each attention
+    layer gets its own physical pool (stacked over L), every layer shares
+    the same logical block tables (the ``bt`` leaf is broadcast per layer so
+    the layer scan slices it for free; ``runtime.kv_cache.with_block_tables``
+    refreshes every copy when the scheduler reassigns pages).
+
+    Attention-cache families only: an SSM/hybrid decode state has no
+    position to page behind (ROADMAP open item), and MLA's latent pool is
+    open item #3."""
+    if cfg.family in ('ssm', 'hybrid') or cfg.hybrid_group:
+        raise NotImplementedError(
+            f'paged KV cache needs an attention cache; family={cfg.family}')
+
+    def paged_caches(n):
+        one = attn_mod.init_paged_cache(cfg, batch, num_pages=num_pages,
+                                        page_size=page_size,
+                                        max_blocks=max_blocks, dtype=dtype)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a[None],
+                                                       (n,) + a.shape).copy(),
+                            one)
+
+    if cfg.moe is not None and cfg.moe.first_k_dense:
+        return dict(prefix=paged_caches(cfg.moe.first_k_dense),
+                    moe=paged_caches(cfg.n_layers - cfg.moe.first_k_dense))
+    return dict(layers=paged_caches(cfg.n_layers))
+
+
 # ----------------------------------------------------------------------------
 # public entry points
 # ----------------------------------------------------------------------------

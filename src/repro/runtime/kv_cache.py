@@ -1,0 +1,198 @@
+"""Paged KV cache: fixed-size pages, per-request block tables, free-list
+allocation — the memory layout under continuous-batching decode.
+
+Layout
+------
+Each attention layer owns a physical pool ``(num_pages, page_size, Hkv, dh)``
+shared by every request. A request's logical key positions
+``[i*page_size, (i+1)*page_size)`` live in physical page
+``block_tables[slot, i]``; the block table rows are exactly the
+scalar-prefetch operands ``kernels.flash_decode.flash_decode_paged``
+consumes, so live keys stay dense no matter how fragmented the pool is.
+
+Page 0 is the reserved *garbage page*: it is never allocated, idle slots'
+block tables point at it (all-zero rows), and clamped out-of-range writes
+land there. Reads from it are always masked (idle slots decode at pos=0
+and their outputs are discarded).
+
+Split of responsibilities:
+
+* :class:`PagedKVCache` — the host-side allocator (plain numpy, no jax):
+  free list, per-slot block tables, alloc/ensure/release. The scheduler in
+  ``launch/serve.py`` drives it; the device never sees the free list.
+* pure jittable array ops (``paged_token_update`` / ``paged_prefill_update``
+  / ``gather_pages`` / ``with_block_tables``) — everything that runs inside
+  the jit'd serve steps. ``models.attention`` calls these; this module
+  deliberately imports nothing from ``models`` so the dependency stays
+  one-way.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+GARBAGE_PAGE = 0
+
+
+# ----------------------------------------------------------------------------
+# host-side allocator
+# ----------------------------------------------------------------------------
+class PagedKVCache:
+    """Free-list page allocator with per-slot block tables.
+
+    ``num_pages`` counts the whole pool including the reserved garbage
+    page 0, matching the physical pool's leading dim. ``max_blocks`` is the
+    block-table width W — it bounds both the longest admissible sequence
+    (W * page_size positions) and the paged kernel's S grid dimension.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, max_blocks: int,
+                 slots: int):
+        assert num_pages >= 2, 'need at least one allocatable page'
+        assert page_size >= 1 and max_blocks >= 1 and slots >= 1
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.max_blocks = max_blocks
+        self.slots = slots
+        # LIFO free list: hot pages get reused first
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self.tables = np.zeros((slots, max_blocks), np.int32)
+        self.counts = np.zeros((slots,), np.int32)   # blocks held per slot
+
+    # -- capacity ------------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def max_positions(self) -> int:
+        return self.max_blocks * self.page_size
+
+    def blocks_for(self, n_positions: int) -> int:
+        return -(-n_positions // self.page_size)
+
+    # -- alloc / release -----------------------------------------------------
+    def alloc_blocks(self, slot: int, n: int) -> bool:
+        """Append ``n`` pages to ``slot``'s table. All-or-nothing: returns
+        False (no state change) if the free list or the table can't cover
+        it — the scheduler's signal to stop admitting or to preempt."""
+        have = int(self.counts[slot])
+        if n <= 0:
+            return True
+        if n > len(self._free) or have + n > self.max_blocks:
+            return False
+        for i in range(n):
+            self.tables[slot, have + i] = self._free.pop()
+        self.counts[slot] = have + n
+        return True
+
+    def ensure(self, slot: int, pos: int) -> bool:
+        """Grow ``slot`` so position ``pos`` is backed by a page (the
+        decode-step contract: call before the step that writes at pos)."""
+        need = pos // self.page_size + 1 - int(self.counts[slot])
+        return self.alloc_blocks(slot, need)
+
+    def release(self, slot: int) -> None:
+        """Return every page of ``slot`` to the free list (eviction /
+        completion). The table row resets to the garbage page."""
+        held = int(self.counts[slot])
+        for i in range(held):
+            self._free.append(int(self.tables[slot, i]))
+        self.tables[slot, :] = GARBAGE_PAGE
+        self.counts[slot] = 0
+
+    def table_array(self) -> jnp.ndarray:
+        """Snapshot of the block tables as a device array (B_slots, W)."""
+        return jnp.asarray(self.tables)
+
+
+# ----------------------------------------------------------------------------
+# pure device-side ops (jittable; live inside the serve steps)
+# ----------------------------------------------------------------------------
+def paged_token_update(pool: jnp.ndarray, t: jnp.ndarray, pos: jnp.ndarray,
+                       block_tables: jnp.ndarray) -> jnp.ndarray:
+    """Write one decode-step K/V slab into the paged pool.
+
+    pool: (P, page_size, Hkv, dh); t: (B, 1, Hkv, dh); pos: (B,) int32;
+    block_tables: (B, W). Returns the updated pool. Slots whose table rows
+    are all GARBAGE_PAGE write into page 0 (masked on read)."""
+    ps = pool.shape[1]
+    pos = jnp.asarray(pos, jnp.int32).reshape(-1)
+    blk = pos // ps
+    page = jnp.take_along_axis(block_tables, blk[:, None], axis=1)[:, 0]
+    return pool.at[page, pos % ps].set(t[:, 0].astype(pool.dtype))
+
+
+def paged_prefill_update(pool: jnp.ndarray, t: jnp.ndarray,
+                         block_tables: jnp.ndarray) -> jnp.ndarray:
+    """Write a whole prompt's K/V rows into the paged pool.
+
+    pool: (P, page_size, Hkv, dh); t: (B, Sp, Hkv, dh);
+    block_tables: (B, W) with W * page_size >= Sp. Row l of request b goes
+    to page block_tables[b, l // page_size] — allocate ceil(Sp/page_size)
+    blocks before prefilling (padded tail rows land in owned pages and are
+    overwritten as the request advances, same as the contiguous layout)."""
+    b, sp = t.shape[:2]
+    ps = pool.shape[1]
+    assert sp <= block_tables.shape[1] * ps, \
+        (sp, block_tables.shape, ps)
+    l = jnp.arange(sp, dtype=jnp.int32)
+    page = block_tables[:, l // ps]                        # (B, Sp)
+    row = jnp.broadcast_to(l % ps, (b, sp))
+    return pool.at[page.reshape(-1), row.reshape(-1)].set(
+        t.reshape(b * sp, *t.shape[2:]).astype(pool.dtype))
+
+
+def gather_pages(pool: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
+    """Densify a paged pool into the contiguous cache view.
+
+    pool: (P, page_size, ...) -> (B, W * page_size, ...) where logical key
+    position l of request b sits at [b, l]. This is the einsum-oracle path
+    for paged layouts (and the debugging lens on pool state)."""
+    g = pool[block_tables]                     # (B, W, page_size, ...)
+    return g.reshape(block_tables.shape[0], -1, *pool.shape[2:])
+
+
+def scatter_pages(pool: jnp.ndarray, dense: jnp.ndarray,
+                  block_tables: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`gather_pages`: write a contiguous (B, S, ...) view
+    into the pool at the tables' pages. S must be a multiple of page_size
+    and cover at most W blocks (benchmarks and tests build fragmented pools
+    from dense caches through this, so the layout invariants live here)."""
+    b, s = dense.shape[:2]
+    ps = pool.shape[1]
+    assert s % ps == 0 and s // ps <= block_tables.shape[1], \
+        (dense.shape, pool.shape, block_tables.shape)
+    nb = s // ps
+    blocks = dense.reshape(b * nb, ps, *dense.shape[2:])
+    return pool.at[block_tables[:, :nb].reshape(-1)].set(
+        blocks.astype(pool.dtype))
+
+
+def with_block_tables(cache_tree, tables: jnp.ndarray):
+    """Replace every ``bt`` leaf in a (possibly layer-stacked) cache tree
+    with ``tables`` broadcast over the leaf's leading layer dim. The
+    scheduler calls this each time admissions/evictions change the tables;
+    pools pass through by reference (no copy)."""
+    tables = jnp.asarray(tables, jnp.int32)
+
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for key, val in node.items():
+                if key == 'bt':
+                    out[key] = jnp.broadcast_to(
+                        tables[None], (val.shape[0],) + tables.shape)
+                else:
+                    out[key] = walk(val)
+            return out
+        return node
+
+    return walk(cache_tree)

@@ -30,22 +30,48 @@ def make_prefill_step(cfg, yoco: YocoConfig = DEFAULT_YOCO,
     return prefill_step
 
 
+def sample_tokens(logits: jnp.ndarray, key: jax.Array, *,
+                  temperature: float = 1.0, top_k: int = 0) -> jnp.ndarray:
+    """Temperature / top-k sampling over (..., V) logits -> int32 ids.
+
+    ``top_k`` <= 0 disables the top-k filter; ``temperature`` <= 0 is
+    argmax (the greedy limit)."""
+    lf = logits.astype(jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(lf, axis=-1).astype(jnp.int32)
+    if top_k and top_k > 0 and top_k < lf.shape[-1]:
+        kth = jax.lax.top_k(lf, top_k)[0][..., -1:]
+        lf = jnp.where(lf < kth, -jnp.inf, lf)
+    return jax.random.categorical(key, lf / temperature,
+                                  axis=-1).astype(jnp.int32)
+
+
 def make_decode_step(cfg, yoco: YocoConfig = DEFAULT_YOCO,
-                     rt: ModelRuntime = DEFAULT_RT, *, greedy: bool = True):
-    def decode_step(params, token, pos, cache):
+                     rt: ModelRuntime = DEFAULT_RT, *, greedy: bool = True,
+                     temperature: float = 1.0, top_k: int = 0):
+    """Greedy steps keep the 4-arg signature; sampling steps take a PRNG
+    key as a 5th argument (``decode_step(params, token, pos, cache, key)``)
+    and draw from temperature/top-k-filtered logits."""
+    def decode_logits(params, token, pos, cache):
         # ``pos``: scalar, or (B,) for heterogeneous-position batches
-        logits, cache = model_mod.decode_step(params, token, pos, cache,
-                                              cfg, yoco, rt)
-        if cfg.input_kind == 'embeddings':
-            # VLM backbone serving: next-token ids are returned, the
-            # (stubbed) frontend owns the id->embedding map
+        return model_mod.decode_step(params, token, pos, cache,
+                                     cfg, yoco, rt)
+
+    if greedy:
+        def decode_step(params, token, pos, cache):
+            logits, cache = decode_logits(params, token, pos, cache)
+            # covers cfg.input_kind == 'embeddings' too: next-token ids are
+            # returned, the (stubbed) frontend owns the id->embedding map
             next_tok = jnp.argmax(logits, axis=-1)
-        elif greedy:
-            next_tok = jnp.argmax(logits, axis=-1)
-        else:
-            next_tok = jnp.argmax(logits, axis=-1)   # sampling added by caller
-        return next_tok.astype(jnp.int32), logits, cache
-    return decode_step
+            return next_tok.astype(jnp.int32), logits, cache
+        return decode_step
+
+    def decode_step_sampled(params, token, pos, cache, key):
+        logits, cache = decode_logits(params, token, pos, cache)
+        next_tok = sample_tokens(logits, key, temperature=temperature,
+                                 top_k=top_k)
+        return next_tok, logits, cache
+    return decode_step_sampled
 
 
 def abstract_serve_state(cfg, batch: int, max_seq: int,

@@ -6,6 +6,8 @@ import sys
 os.environ.setdefault('JAX_PLATFORMS', 'cpu')
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), '..', 'src'))
+# benchmarks/ is imported by the fast-tier bench-smoke test
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), '..'))
 
 import jax  # noqa: E402
 

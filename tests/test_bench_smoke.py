@@ -1,0 +1,28 @@
+"""Fast-tier wiring for `make bench-smoke`: the decode benchmark at toy
+sizes in interpret mode must run, assert flash-vs-oracle parity, and emit
+the decode-bench JSON (smoke runs write BENCH_decode.smoke.json so the
+tracked full-size BENCH_decode.json is never clobbered) with the full
+three-way (plus paged) comparison."""
+
+import json
+
+from benchmarks import bench_decode
+
+
+def test_bench_decode_smoke_writes_parity_checked_json(tmp_path):
+    out = tmp_path / 'BENCH_decode.json'
+    result = bench_decode.run(smoke=True, out_path=str(out))
+    assert out.exists()
+    on_disk = json.loads(out.read_text())
+    assert on_disk['smoke'] is True
+    names = {r['name'] for r in on_disk['rows']}
+    assert {'einsum_oracle', 'flash_streamed', 'flash_prefetch',
+            'flash_paged'} <= names
+    # every flash flavour parity-checked against the oracle (run() already
+    # asserts; re-check the artifact so a silent tolerance edit fails here)
+    for row in result['rows']:
+        if row['name'] != 'einsum_oracle':
+            assert row['max_abs_err_vs_oracle'] < bench_decode.PARITY_ATOL
+    # both requested cache lengths present
+    assert {r['s_max'] for r in on_disk['rows']} == set(
+        bench_decode.SMOKE_SEQ_LENS)

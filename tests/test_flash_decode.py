@@ -28,6 +28,106 @@ def _rand_qkv(key, b, s_max, h, hkv, dh, cache_dtype=jnp.bfloat16):
     return q, k, v
 
 
+IMPLS = ['prefetch', 'streamed']
+
+
+@pytest.mark.parametrize('impl', IMPLS)
+@pytest.mark.parametrize(
+    'name,s_max,pos,window',
+    [
+        # bs is pinned to 128 -> a 3-tile grid at S_max=384: every case
+        # below is multi-tile, so the index-map/compute-guard agreement is
+        # load-bearing (a clamp off by one block would drop boundary keys)
+        # pos=0: only the first key is live; both later tiles are dead
+        ('pos0', 384, [0, 0], None),
+        # pos exactly on an internal key-tile boundary (kpos=128 is the
+        # first element of tile 1; kpos=127 the last of tile 0)
+        ('tile_boundary', 384, [128, 127], None),
+        ('tile_boundary_hi', 384, [256, 255], None),
+        # sliding window smaller than one tile, straddling a tile edge
+        ('window_lt_tile', 384, [383, 130], 5),
+        # S_max not a multiple of the tile: exercises the pad path
+        ('unaligned_smax', 200, [199, 63], None),
+        ('unaligned_windowed', 328, [327, 40], 33),
+    ])
+def test_flash_edge_cases_vs_oracle(impl, name, s_max, pos, window):
+    """Ragged-pos/window edge grid, both memory paths vs the einsum
+    oracle (the scalar-prefetch index maps must agree with the compute
+    guard tile-for-tile at every boundary)."""
+    b, h, hkv, dh = 2, 4, 2, 32
+    q, k, v = _rand_qkv(jax.random.key(len(name)), b, s_max, h, hkv, dh)
+    pos = jnp.array(pos, jnp.int32)
+    scale = 1.0 / dh ** 0.5
+    got = fd.flash_decode(q, k, v, pos, scale=scale, window=window, bs=128,
+                          interpret=True, impl=impl)
+    want = _oracle(q, k, v, pos, scale, window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=2e-2)
+
+
+def test_prefetch_matches_streamed_bitwise():
+    """Same tiles, same accumulation order -> the two memory paths must
+    agree bitwise; only the DMA schedule differs."""
+    b, s_max, h, hkv, dh = 3, 384, 8, 2, 32
+    q, k, v = _rand_qkv(jax.random.key(42), b, s_max, h, hkv, dh)
+    pos = jnp.array([383, 100, 0], jnp.int32)
+    scale = 1.0 / dh ** 0.5
+    a = fd.flash_decode(q, k, v, pos, scale=scale, bs=128, interpret=True,
+                        impl='prefetch')
+    b_ = fd.flash_decode(q, k, v, pos, scale=scale, bs=128, interpret=True,
+                         impl='streamed')
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+def test_pick_bs_pad_overhead_regression():
+    """Non-power-of-two caches must not pad by ~2x: overhead is capped at
+    max(128, s_max/8) instead of the old next-pow2 rounding."""
+    for s_max in [520, 130, 200, 1000, 4097, 333, 128, 512, 8192, 8200]:
+        bs = fd._pick_bs(s_max, fd.DEFAULT_BS)
+        padded = -(-s_max // bs) * bs
+        assert padded - s_max <= max(128, s_max // 8), (s_max, bs, padded)
+    # the ISSUE's example: S=520 used to pick bs=512 and pad to 1024
+    bs = fd._pick_bs(520, 512)
+    assert -(-520 // bs) * bs == 640, bs
+    # power-of-two caches keep the full-size tile
+    assert fd._pick_bs(8192, 512) == 512
+    assert fd._pick_bs(512, 512) == 512
+    # barely-unaligned big caches must NOT collapse to tiny tiles: the pad
+    # tiles are dead (never fetched by the prefetch path), grid steps are
+    # the real cost
+    assert fd._pick_bs(8200, 512) == 512
+    # a caller-tightened VMEM cap below 128 is honored, not rounded up
+    assert fd._pick_bs(4096, 64) == 64
+
+
+def test_flash_paged_matches_oracle_shuffled_tables():
+    """Paged kernel over a deliberately fragmented pool (shuffled,
+    non-contiguous block tables) vs the oracle on the dense view."""
+    ps, w, b, h, hkv, dh = 16, 8, 3, 4, 2, 32
+    s_logical = w * ps
+    key = jax.random.key(7)
+    q = jax.random.normal(key, (b, 1, h, dh), jnp.float32)
+    kc = jax.random.normal(jax.random.fold_in(key, 1),
+                           (b, s_logical, hkv, dh), jnp.float32)
+    vc = jax.random.normal(jax.random.fold_in(key, 2),
+                           (b, s_logical, hkv, dh), jnp.float32)
+    from repro.runtime import kv_cache as kvc
+    n_pages = b * w + 1
+    perm = np.random.RandomState(0).permutation(np.arange(1, n_pages))
+    bt = jnp.asarray(perm.reshape(b, w).astype(np.int32))
+    kp = kvc.scatter_pages(jnp.zeros((n_pages, ps, hkv, dh)), kc, bt)
+    vp = kvc.scatter_pages(jnp.zeros((n_pages, ps, hkv, dh)), vc, bt)
+    pos = jnp.array([s_logical - 1, 37, 0], jnp.int32)
+    scale = 1.0 / dh ** 0.5
+    for window in (None, 9):
+        got = fd.flash_decode_paged(q, kp, vp, pos, bt, scale=scale,
+                                    window=window, interpret=True)
+        want = _oracle(q, kc, vc, pos, scale, window)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=1e-5, atol=1e-5)
+
+
 @pytest.mark.parametrize('h,hkv', [(8, 2), (4, 4), (8, 1)])
 def test_flash_matches_oracle_gqa_bf16(h, hkv):
     """GQA/MHA/MQA head layouts, bf16 cache, heterogeneous positions."""

@@ -1,0 +1,214 @@
+"""Paged KV cache: host-side allocator semantics, the pure pool-update /
+gather ops, and paged-vs-contiguous parity through the attention layer and
+the full model decode step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.yoco_linear import DEFAULT_YOCO
+from repro.models import attention as A
+from repro.models import model as M
+from repro.models.model import ModelRuntime
+from repro.runtime import kv_cache as kvc
+
+
+# ----------------------------------------------------------------------------
+# allocator
+# ----------------------------------------------------------------------------
+def test_alloc_release_free_list_roundtrip():
+    kv = kvc.PagedKVCache(num_pages=9, page_size=4, max_blocks=4, slots=2)
+    assert kv.free_pages == 8
+    assert kv.alloc_blocks(0, 3)
+    assert kv.counts[0] == 3 and kv.free_pages == 5
+    pages = set(kv.tables[0, :3].tolist())
+    assert len(pages) == 3 and kvc.GARBAGE_PAGE not in pages
+    assert kv.alloc_blocks(1, 4)
+    assert kv.free_pages == 1
+    kv.release(0)
+    assert kv.free_pages == 4
+    assert (kv.tables[0] == kvc.GARBAGE_PAGE).all() and kv.counts[0] == 0
+    # released pages are reallocatable
+    assert kv.alloc_blocks(0, 4)
+    assert kv.free_pages == 0
+
+
+def test_alloc_all_or_nothing_on_exhaustion():
+    kv = kvc.PagedKVCache(num_pages=5, page_size=4, max_blocks=8, slots=2)
+    assert kv.alloc_blocks(0, 3)
+    before = kv.tables.copy()
+    assert not kv.alloc_blocks(1, 2)          # only 1 page left
+    assert kv.free_pages == 1
+    np.testing.assert_array_equal(kv.tables, before)
+
+
+def test_alloc_respects_table_width():
+    kv = kvc.PagedKVCache(num_pages=64, page_size=4, max_blocks=3, slots=1)
+    assert kv.alloc_blocks(0, 3)
+    assert not kv.alloc_blocks(0, 1)          # table row full
+
+
+def test_ensure_grows_by_position():
+    kv = kvc.PagedKVCache(num_pages=16, page_size=4, max_blocks=8, slots=1)
+    assert kv.ensure(0, 0) and kv.counts[0] == 1
+    assert kv.ensure(0, 3) and kv.counts[0] == 1     # same page
+    assert kv.ensure(0, 4) and kv.counts[0] == 2     # page boundary
+    assert kv.ensure(0, 14) and kv.counts[0] == 4    # jump several pages
+
+
+# ----------------------------------------------------------------------------
+# pure pool ops
+# ----------------------------------------------------------------------------
+def test_token_update_and_gather_match_contiguous():
+    ps, w, b, hkv, dh = 4, 3, 2, 2, 8
+    kv = kvc.PagedKVCache(num_pages=b * w + 1, page_size=ps, max_blocks=w,
+                          slots=b)
+    for s in range(b):
+        assert kv.alloc_blocks(s, w)
+    pool = jnp.zeros((b * w + 1, ps, hkv, dh))
+    dense = np.zeros((b, w * ps, hkv, dh), np.float32)
+    bt = kv.table_array()
+    rng = np.random.RandomState(0)
+    for pos in [0, 3, 4, 7, 11]:
+        t = jnp.asarray(rng.randn(b, 1, hkv, dh).astype(np.float32))
+        pool = kvc.paged_token_update(
+            pool, t, jnp.full((b,), pos, jnp.int32), bt)
+        dense[:, pos] = np.asarray(t[:, 0])
+    np.testing.assert_array_equal(
+        np.asarray(kvc.gather_pages(pool, bt)), dense)
+
+
+def test_scatter_gather_roundtrip():
+    ps, w, b, hkv, dh = 4, 3, 2, 2, 8
+    kv = kvc.PagedKVCache(num_pages=b * w + 1, page_size=ps, max_blocks=w,
+                          slots=b)
+    for s in range(b):
+        assert kv.alloc_blocks(s, w)
+    dense = jax.random.normal(jax.random.key(5), (b, w * ps, hkv, dh))
+    pool = kvc.scatter_pages(jnp.zeros((b * w + 1, ps, hkv, dh)), dense,
+                             kv.table_array())
+    np.testing.assert_array_equal(
+        np.asarray(kvc.gather_pages(pool, kv.table_array())),
+        np.asarray(dense))
+
+
+def test_prefill_update_matches_contiguous():
+    ps, w, b, hkv, dh, sp = 4, 4, 3, 2, 8, 10
+    kv = kvc.PagedKVCache(num_pages=b * w + 1, page_size=ps, max_blocks=w,
+                          slots=b)
+    for s in range(b):
+        assert kv.alloc_blocks(s, -(-sp // ps))
+    pool = jnp.zeros((b * w + 1, ps, hkv, dh))
+    t = jax.random.normal(jax.random.key(0), (b, sp, hkv, dh))
+    pool = kvc.paged_prefill_update(pool, t, kv.table_array())
+    got = np.asarray(kvc.gather_pages(pool, kv.table_array()))[:, :sp]
+    np.testing.assert_array_equal(got, np.asarray(t))
+
+
+def test_with_block_tables_rewrites_every_layer_copy():
+    cfg = configs.get('stablelm-12b', smoke=True)
+    cache = M.init_paged_cache_tree(cfg, 2, num_pages=9, page_size=4,
+                                    max_blocks=4)
+    new_bt = jnp.arange(8, dtype=jnp.int32).reshape(2, 4)
+    out = kvc.with_block_tables(cache, new_bt)
+    bt = out['layers']['bt']
+    assert bt.shape[0] == cfg.n_layers
+    for l in range(bt.shape[0]):
+        np.testing.assert_array_equal(np.asarray(bt[l]), np.asarray(new_bt))
+    # pools pass through untouched (by reference, no copy)
+    assert out['layers']['k'] is cache['layers']['k']
+
+
+# ----------------------------------------------------------------------------
+# attention-layer and model-level parity, paged vs contiguous
+# ----------------------------------------------------------------------------
+def _paged_cache_from(cache, kv):
+    """Scatter a contiguous (B, S, Hkv, dh) layer cache into a paged pool
+    using the allocator's tables."""
+    s = cache['k'].shape[1]
+    ps = kv.page_size
+    bt = kv.table_array()
+    out = {}
+    for name in ('k', 'v'):
+        src = cache[name]
+        pad = (-s) % ps
+        if pad:
+            src = jnp.pad(src, ((0, 0), (0, pad)) + ((0, 0),) * (src.ndim - 2))
+        pool = jnp.zeros((kv.num_pages, ps) + src.shape[2:], src.dtype)
+        out[name] = kvc.scatter_pages(pool, src, bt)
+    out['bt'] = bt
+    return out
+
+
+@pytest.mark.parametrize('impl', ['einsum', 'flash'])
+def test_attention_decode_paged_matches_contiguous(impl):
+    cfg = configs.get('stablelm-12b', smoke=True)
+    p = A.init_attention(jax.random.key(10), cfg)
+    x = jax.random.normal(jax.random.key(11), (3, 9, cfg.d_model))
+    cache = A.init_cache(cfg, 3, 16, dtype=jnp.float32)
+    _, cache = A.attention(p, x[:, :8], cfg, DEFAULT_YOCO, cache=cache)
+    kv = kvc.PagedKVCache(num_pages=3 * 4 + 1, page_size=4, max_blocks=4,
+                          slots=3)
+    for s in range(3):
+        assert kv.alloc_blocks(s, 4)
+    paged = _paged_cache_from(cache, kv)
+    pos = jnp.array([8, 5, 3], jnp.int32)
+    rt = ModelRuntime(attn_impl=impl)
+    y_ref, cc = A.attention_decode(p, x[:, 8:9], cfg, DEFAULT_YOCO,
+                                   cache=cache, pos=pos)
+    y_paged, cp = A.attention_decode(p, x[:, 8:9], cfg, DEFAULT_YOCO,
+                                     cache=paged, pos=pos, rt=rt)
+    atol = 1e-4 if impl == 'einsum' else 2e-2
+    np.testing.assert_allclose(np.asarray(y_paged, np.float32),
+                               np.asarray(y_ref, np.float32), atol=atol)
+    # the decode write landed in the right page rows
+    dense = kvc.gather_pages(cp['k'], cp['bt'])[:, :16]
+    np.testing.assert_allclose(np.asarray(dense, np.float32),
+                               np.asarray(cc['k'], np.float32))
+
+
+def test_model_decode_step_paged_matches_contiguous():
+    """Full decode_step through the scanned layer stack: paged cache tree
+    (per-layer pools, shared block tables) vs the contiguous tree."""
+    cfg = configs.get('stablelm-12b', smoke=True)
+    params = M.init_params(jax.random.key(0), cfg)
+    b, prompt, max_seq, ps = 2, 8, 16, 4
+    toks = jax.random.randint(jax.random.key(1), (b, prompt), 0,
+                              cfg.vocab_size)
+    kv = kvc.PagedKVCache(num_pages=b * 4 + 1, page_size=ps, max_blocks=4,
+                          slots=b)
+    for s in range(b):
+        assert kv.alloc_blocks(s, 4)
+    ref_cache = M.init_cache_tree(cfg, b, max_seq)
+    paged_cache = M.init_paged_cache_tree(cfg, b, num_pages=b * 4 + 1,
+                                          page_size=ps, max_blocks=4)
+    paged_cache = kvc.with_block_tables(paged_cache, kv.table_array())
+    lens = jnp.array([prompt, prompt - 3], jnp.int32)
+    l_ref, ref_cache = M.prefill(params, dict(inputs=toks), ref_cache, cfg,
+                                 last_pos=lens - 1)
+    l_paged, paged_cache = M.prefill(params, dict(inputs=toks), paged_cache,
+                                     cfg, last_pos=lens - 1)
+    np.testing.assert_allclose(np.asarray(l_paged, np.float32),
+                               np.asarray(l_ref, np.float32),
+                               rtol=2e-2, atol=2e-2)
+    tok = jnp.array([3, 5], jnp.int32)
+    for step in range(2):
+        pos = lens + step
+        l_ref, ref_cache = M.decode_step(params, tok, pos, ref_cache, cfg)
+        l_paged, paged_cache = M.decode_step(params, tok, pos, paged_cache,
+                                             cfg)
+        np.testing.assert_allclose(np.asarray(l_paged, np.float32),
+                                   np.asarray(l_ref, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+        tok = jnp.argmax(l_ref, -1).astype(jnp.int32)
+        ref_tok = jnp.argmax(l_paged, -1).astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(tok), np.asarray(ref_tok))
+
+
+def test_paged_cache_tree_rejects_ssm():
+    cfg = configs.get('mamba2-780m', smoke=True)
+    with pytest.raises(NotImplementedError):
+        M.init_paged_cache_tree(cfg, 2, num_pages=9, page_size=4,
+                                max_blocks=4)
