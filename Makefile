@@ -1,6 +1,6 @@
-PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
+PY := PYTHONPATH=src:.$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test test-fast test-slow bench bench-smoke serve-demo
+.PHONY: test test-fast test-slow bench bench-smoke serve-demo check
 
 # tier-1: the full suite (what CI / the driver runs)
 test:
@@ -15,14 +15,19 @@ test-slow:
 	$(PY) -m pytest -q -m "slow"
 
 bench:
-	PYTHONPATH=src:. python -m benchmarks.run
+	$(PY) -m benchmarks.run
 
-# toy-size decode benchmark in interpret mode: asserts flash matches the
-# einsum oracle and emits BENCH_decode.smoke.json (gitignored — the
-# tracked BENCH_decode.json comes from the full-size `make bench` run;
-# also run by the fast test tier via tests/test_bench_smoke.py)
+# toy-size decode + kv-tier benchmarks in interpret mode: assert the flash
+# kernels (incl. the quantized tier) match the einsum oracles and emit the
+# *.smoke.json artifacts (gitignored — the tracked BENCH_*.json come from
+# the full-size `make bench` runs; also run by the fast test tier via
+# tests/test_bench_smoke.py)
 bench-smoke:
-	PYTHONPATH=src:. python -m benchmarks.bench_decode --smoke
+	$(PY) -m benchmarks.bench_decode --smoke
+	$(PY) -m benchmarks.bench_kv_quant --smoke
+
+# the pre-push gate: fast tests + parity-asserted smoke benchmarks
+check: test-fast bench-smoke
 
 serve-demo:
 	$(PY) examples/serve_decode.py

@@ -1,0 +1,216 @@
+"""Hybrid-precision KV tier benchmark: the numbers the kv_quant subsystem
+is judged on —
+
+  * **accuracy**: decode-attention output of the int8-tier paged kernel
+    (``flash_decode_paged_q8``) and its tier-mixing einsum twin
+    (``dequant_gather`` + ``sdpa_decode``) vs the f32 einsum oracle, plus
+    the fp paged kernel for reference. The tier split follows the serving
+    hotness rule (last ``HOT_WINDOW`` pages fp, everything older int8 with
+    per-page/per-head scales).
+  * **traffic/energy**: ``core.hwmodel.decode_kv_traffic`` prices the
+    bytes each tier moves per generated token and the modeled pJ/token +
+    TOPS/W of the hybrid memory system vs the untiered baseline — the
+    serving-side reproduction of the paper's ReRAM–SRAM trade.
+
+Writes ``BENCH_kv_quant.json`` at the repo root. The headline gate (also
+asserted here so a regression can't silently overwrite the artifact): at
+S=32k the tiered mix must move >= 3x fewer KV HBM bytes/token than the f32
+oracle it is accuracy-checked against (the bf16 serving-pool ratio ~2x is
+reported alongside — int8 halves the bulk tier, the fp32 oracle ratio adds
+the oracle's own width).
+
+``--smoke`` (fast tier / ``make bench-smoke``) shrinks to toy sizes,
+asserts the same parity + traffic gates, and writes
+``BENCH_kv_quant.smoke.json`` so the tracked artifact is never clobbered.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import hwmodel
+from repro.kernels import flash_decode as fd
+from repro.models import attention as A
+from repro.runtime import kv_cache as kvc
+from repro.runtime import kv_quant as kvq
+
+B, HKV, G, DH = 4, 2, 4, 64
+SEQ_LENS = [32768]
+SMOKE_SEQ_LENS = [256, 512]
+PAGE_SIZE = 128
+SMOKE_PAGE_SIZE = 32
+HOT_WINDOW = 4
+# int8 absmax KV on N(0,1) data lands ~5e-3..2e-2 max abs error at the
+# attention output (the tier-mixing einsum twin tracks the kernel to f32
+# roundoff); documented tolerance for the quantized tier:
+Q8_PARITY_ATOL = 8e-2
+FP_PARITY_ATOL = 2e-2
+BYTES_REDUCTION_MIN = 3.0          # vs the f32 oracle, at the longest S
+
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), '..')
+DEFAULT_OUT = os.path.join(_ROOT, 'BENCH_kv_quant.json')
+SMOKE_OUT = os.path.join(_ROOT, 'BENCH_kv_quant.smoke.json')
+
+
+def _ragged_pos(s_max: int) -> jnp.ndarray:
+    """One near-full-context straggler plus shorter requests (the serving
+    mix): the straggler is where the tier split pays off."""
+    pos = [s_max - 1, s_max // 2, s_max // 16, s_max // 16]
+    return jnp.array(pos[:B], jnp.int32)
+
+
+def _build_tiered_cache(kc, vc, pos, page_size: int, hot_window: int,
+                        seed: int = 0):
+    """Scatter a contiguous bf16 cache into a shuffled page pool pair and
+    quantize every page outside each request's hot window — exactly the
+    state the continuous scheduler maintains at this position."""
+    b, s = kc.shape[:2]
+    w = s // page_size
+    perm = np.random.RandomState(seed).permutation(np.arange(1, b * w + 1))
+    bt = jnp.asarray(perm.reshape(b, w).astype(np.int32))
+    shape = (b * w + 1, page_size) + kc.shape[2:]
+    cache = dict(
+        k=kvc.scatter_pages(jnp.zeros(shape, kc.dtype), kc, bt),
+        v=kvc.scatter_pages(jnp.zeros(shape, vc.dtype), vc, bt),
+        kq=jnp.zeros(shape, jnp.int8), vq=jnp.zeros(shape, jnp.int8),
+        ks=jnp.zeros(shape[:1] + (kc.shape[2],), jnp.float32),
+        vs=jnp.zeros(shape[:1] + (kc.shape[2],), jnp.float32),
+        bt=bt, hw=jnp.full((1,), hot_window, jnp.int32),
+    )
+    pages = kvq.cold_page_list(bt, pos, page_size, hot_window)
+    if pages:
+        cache = kvq.quantize_pages_layer(cache, jnp.asarray(pages, jnp.int32))
+    return cache, len(pages)
+
+
+def _bench_one(s_max: int, page_size: int, rows: list, traffic: list,
+               interpret: bool, n_iter: int) -> None:
+    scale = 1.0 / DH ** 0.5
+    key = jax.random.key(s_max)
+    q = jax.random.normal(key, (B, 1, HKV * G, DH), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1),
+                          (B, s_max, HKV, DH), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2),
+                          (B, s_max, HKV, DH), jnp.float32)
+    pos = _ragged_pos(s_max)
+    c, n_cold = _build_tiered_cache(k.astype(jnp.bfloat16),
+                                    v.astype(jnp.bfloat16), pos,
+                                    page_size, HOT_WINDOW)
+
+    # caches are runtime operands, not jit closure constants (same rule as
+    # bench_decode: baking pools into the executable would let XLA fold
+    # exactly the HBM traffic the tier comparison prices)
+    impls = {
+        # the f32 einsum oracle every row's accuracy is measured against
+        'einsum_oracle_f32': (jax.jit(
+            lambda q, k, v, p: A.sdpa_decode(q, k, v, p, scale)),
+            (q, k, v, pos)),
+        # fp paged kernel: isolates paging error from quantization error
+        'flash_paged_fp': (jax.jit(
+            lambda q, kp, vp, p, t: fd.flash_decode_paged(
+                q, kp, vp, p, t, scale=scale, interpret=interpret)),
+            (q, c['k'], c['v'], pos, c['bt'])),
+        # the tier-mixing einsum twin of the q8 kernel (same data path)
+        'einsum_q8_tier': (jax.jit(
+            lambda q, cc, p: A.sdpa_decode(q, *kvq.dequant_gather(cc, p),
+                                           p, scale)),
+            (q, c, pos)),
+        'flash_paged_q8': (jax.jit(
+            lambda q, cc, p: fd.flash_decode_paged_q8(
+                q, cc['k'], cc['v'], cc['kq'], cc['vq'], cc['ks'],
+                cc['vs'], p, cc['bt'], cc['hw'], scale=scale,
+                interpret=interpret)),
+            (q, c, pos)),
+    }
+    want = impls['einsum_oracle_f32'][0](*impls['einsum_oracle_f32'][1])
+    for name, (fn, args) in impls.items():
+        # the parity call doubles as the compile/warmup run — full-size
+        # interpret-mode kernel calls take minutes, don't repeat them
+        got = jax.block_until_ready(fn(*args))
+        t_us = time_call(fn, *args, n_warmup=0, n_iter=n_iter)
+        err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                    - want.astype(jnp.float32))))
+        rows.append(dict(name=name, s_max=s_max, page_size=page_size,
+                         hot_window=HOT_WINDOW, cold_pages=n_cold,
+                         us_per_call=round(t_us, 2),
+                         max_abs_err_vs_oracle=err))
+        emit(f'kv_quant.{name}.S{s_max}', t_us, f'max_abs_err={err:.2e}')
+
+    # traffic/energy at the straggler's live length (the "at S=32k" gate)
+    s_live = int(pos[0]) + 1
+    for fp_bytes, label in ((4, 'f32_oracle'), (2, 'bf16_pool')):
+        t = hwmodel.decode_kv_traffic(
+            s_live, n_heads=HKV * G, n_kv_heads=HKV, head_dim=DH,
+            page_size=page_size, hot_window=HOT_WINDOW, fp_bytes=fp_bytes)
+        traffic.append(dict(t, s_max=s_max, baseline=label))
+        emit(f'kv_quant.traffic.{label}.S{s_max}', 0.0,
+             f'bytes_reduction={t["bytes_reduction"]:.2f},'
+             f'tiered_tops_w={t["tiered_tops_w"]:.3f}')
+
+
+def run(smoke: bool = False, out_path: Optional[str] = None) -> dict:
+    if out_path is None:
+        out_path = SMOKE_OUT if smoke else DEFAULT_OUT
+    interpret = jax.default_backend() != 'tpu'
+    page_size = SMOKE_PAGE_SIZE if smoke else PAGE_SIZE
+    # full-size interpret-mode kernel calls take minutes on CPU: one timed
+    # iteration is context, the parity + traffic numbers are the deliverable
+    n_iter = 3 if smoke else 1
+    rows: list = []
+    traffic: list = []
+    for s_max in (SMOKE_SEQ_LENS if smoke else SEQ_LENS):
+        _bench_one(s_max, page_size, rows, traffic, interpret, n_iter)
+    result = dict(
+        bench='kv_quant',
+        backend=jax.default_backend(),
+        interpret=interpret,
+        smoke=smoke,
+        batch=B, n_heads=HKV * G, n_kv_heads=HKV, head_dim=DH,
+        page_size=page_size, hot_window=HOT_WINDOW,
+        parity_atol=dict(q8=Q8_PARITY_ATOL, fp=FP_PARITY_ATOL),
+        rows=rows,
+        traffic=traffic,
+    )
+    # gates precede the write: a broken tier must not overwrite the artifact
+    for row in rows:
+        if row['name'] == 'einsum_oracle_f32':
+            continue
+        atol = FP_PARITY_ATOL if row['name'] == 'flash_paged_fp' \
+            else Q8_PARITY_ATOL
+        assert row['max_abs_err_vs_oracle'] < atol, row
+    # the >=3x bytes gate needs a long cache (at toy smoke sizes the hot
+    # window is a large fraction of the cache); smoke still checks the
+    # tier moves strictly fewer bytes than the baseline
+    top_s = max(r['s_max'] for r in traffic)
+    for t in traffic:
+        if t['s_max'] == top_s and t['baseline'] == 'f32_oracle':
+            floor = 1.0 if smoke else BYTES_REDUCTION_MIN
+            assert t['bytes_reduction'] >= floor, t
+    out_path = os.path.abspath(out_path)
+    with open(out_path, 'w') as f:
+        json.dump(result, f, indent=2)
+    print(f'# wrote {out_path}')
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--smoke', action='store_true',
+                    help='toy sizes, parity-asserted (the CI tier); writes '
+                         'BENCH_kv_quant.smoke.json, not the tracked '
+                         'artifact')
+    ap.add_argument('--out', default=None)
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke, out_path=args.out)
+
+
+if __name__ == '__main__':
+    main()

@@ -8,7 +8,8 @@ import traceback
 
 from benchmarks import (bench_accuracy, bench_decode, bench_fig5_precision,
                         bench_fig67_sota, bench_fig8_overhead,
-                        bench_kernels, bench_table1, roofline)
+                        bench_kernels, bench_kv_quant, bench_table1,
+                        roofline)
 from benchmarks.common import header
 
 
@@ -21,6 +22,7 @@ def main() -> None:
         ('fig8', bench_fig8_overhead.run),
         ('kernels', bench_kernels.run),
         ('decode', bench_decode.run),
+        ('kv_quant', bench_kv_quant.run),
         ('roofline', roofline.run),
         ('accuracy', bench_accuracy.run),
     ]

@@ -1,8 +1,11 @@
 """Serving example: batch-decode three different architecture families
 (dense LM, 4-codebook audio LM, SSM) with int8 weights resident in memory —
 the 'network loaded into the array' deployment mode — then the batched
-heterogeneous-position path: ragged prompts decoded in one jit'd step
-through the fused Pallas flash-decode kernel.
+heterogeneous-position path (ragged prompts decoded in one jit'd step
+through the fused Pallas flash-decode kernel), and finally continuous
+batching over the paged KV cache, with and without the hybrid-precision
+KV tier (int8 cold pages + full-precision hot window — the paper's
+ReRAM–SRAM split applied to the cache).
 
 Usage:  PYTHONPATH=src python examples/serve_decode.py
 """
@@ -26,6 +29,27 @@ def main():
                           gen_len=16, **kwargs)
         print(f'  prefill {out["prefill_s"]}s, decode {out["decode_s"]}s, '
               f'{out["tokens_per_s"]} tok/s, sample={out["sample"]}')
+
+    # continuous batching: a stream of ragged requests over fixed decode
+    # slots backed by the paged pool — admit / grow / evict / re-admit
+    # under one jit'd decode step
+    for label, kwargs in [
+        ('paged fp (bf16 pool)', dict()),
+        # the hybrid tier: pages older than hot_window stream as int8 with
+        # per-page/per-head scales; the paged_q8 kernel mixes the tiers
+        ('kv-quant int8 tier, hot_window=2', dict(kv_quant=True,
+                                                  hot_window=2)),
+    ]:
+        print(f'=== stablelm-1.6b continuous ({label}) ===')
+        out = serve.serve_continuous(
+            'stablelm-1.6b', slots=3, n_requests=6, prompt_len=32,
+            gen_len=16, page_size=8, attn_impl='flash', quiet=True,
+            **kwargs)
+        print(f'  {out["completed"]}/{out["requests"]} done in '
+              f'{out["steps"]} steps, {out["tokens_per_s"]} tok/s, '
+              f'slot_util={out["slot_utilization"]}, '
+              f'peak_pages={out["peak_pages"]}/{out["total_pages"]}, '
+              f'pages_quantized={out["pages_quantized"]}')
 
 
 if __name__ == '__main__':

@@ -233,6 +233,90 @@ def map_matmul(m_tokens: int, k: int, n: int, cfg: CoreConfig = DEFAULT_CORE,
                 effective_tops_w=useful_ops / energy / 1e12)
 
 
+# ----------------------------------------------------------------------------
+# Decode-attention KV traffic / energy: the hybrid ReRAM–SRAM tier model
+# ----------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class KVTierConfig:
+    """Energy constants for the tiered KV memory system (pJ/byte and
+    TOPS/W; commonly-cited planning numbers, not Table I values — the
+    paper's component model stops at the core boundary, this extends it to
+    the memory system the serving stack actually exercises).
+
+    * ``hbm_pj_per_byte``: HBM2E access ≈ 3.9 pJ/bit — the bulk ("ReRAM")
+      tier, where cold int8 pages and the untiered baseline live.
+    * ``sram_pj_per_byte``: large on-chip SRAM ≈ 0.15 pJ/bit — the hot
+      ("SRAM") tier holding the last ``hot_window`` full-precision pages.
+    * ``imc_tops_w``: 8-bit attention arithmetic on the YOCO/AiDAC array
+      (the paper's 123.8 TOPS/W headline, ``energy_efficiency_tops_w``).
+    * ``digital_tops_w``: bf16 digital attention arithmetic, the baseline
+      the int8 tier is compared against.
+    """
+    hbm_pj_per_byte: float = 3.9 * 8
+    sram_pj_per_byte: float = 0.15 * 8
+    imc_tops_w: float = 123.8
+    digital_tops_w: float = 10.0
+    scale_bytes: int = 4              # f32 per-page, per-head absmax scales
+
+
+DEFAULT_KV_TIER = KVTierConfig()
+
+
+def decode_kv_traffic(s_live: int, *, n_heads: int, n_kv_heads: int,
+                      head_dim: int, page_size: int, hot_window: int,
+                      fp_bytes: int = 2,
+                      tier: KVTierConfig = DEFAULT_KV_TIER) -> Dict[str, float]:
+    """Bytes and pJ one decode token pays to read its KV cache, fp baseline
+    vs the hybrid int8/fp tier mix (``runtime.kv_quant``'s layout).
+
+    Counts exactly what the paged flash kernels move: ``s_live`` positions
+    of K and V (dead tiles are never fetched), plus one (Hkv,) scale vector
+    per cold page per operand. ``fp_bytes`` is the hot/baseline element
+    width (2 = bf16/fp16 serving pools, 4 = the f32 einsum oracle).
+
+    Attention op count per generated token: QK^T and PV each do
+    ``H * s_live * dh`` MACs = 2 ops, so ``4 * H * s_live * dh`` total.
+    Baseline arithmetic is digital bf16; tiered arithmetic is the paper's
+    8-bit in-situ multiply (cold tier operands are already int8 — the
+    whole point of storing the bulk tier in the array's native precision).
+    """
+    n_blocks = math.ceil(s_live / page_size)
+    hot_blocks = min(max(hot_window, 1), n_blocks)
+    cold_blocks = n_blocks - hot_blocks
+    elems_per_block = page_size * n_kv_heads * head_dim * 2      # K and V
+    hot_bytes = hot_blocks * elems_per_block * fp_bytes
+    cold_bytes = cold_blocks * elems_per_block * 1 \
+        + cold_blocks * n_kv_heads * 2 * tier.scale_bytes
+    baseline_bytes = n_blocks * elems_per_block * fp_bytes
+    ops = 4.0 * n_heads * s_live * head_dim
+    # tiered: cold pages stream from the bulk tier, the hot window sits in
+    # the precision tier; baseline: everything streams from bulk
+    tiered_mem_pj = (cold_bytes * tier.hbm_pj_per_byte
+                     + hot_bytes * tier.sram_pj_per_byte)
+    baseline_mem_pj = baseline_bytes * tier.hbm_pj_per_byte
+    tiered_compute_pj = ops / tier.imc_tops_w        # 1 TOPS/W == 1 op/pJ
+    baseline_compute_pj = ops / tier.digital_tops_w
+    tiered_pj = tiered_mem_pj + tiered_compute_pj
+    baseline_pj = baseline_mem_pj + baseline_compute_pj
+    return dict(
+        s_live=s_live, n_blocks=n_blocks, hot_blocks=hot_blocks,
+        cold_blocks=cold_blocks, fp_bytes=fp_bytes,
+        hot_bytes_per_token=hot_bytes,
+        cold_bytes_per_token=cold_bytes,
+        tiered_bytes_per_token=hot_bytes + cold_bytes,
+        baseline_bytes_per_token=baseline_bytes,
+        bytes_reduction=baseline_bytes / max(hot_bytes + cold_bytes, 1),
+        tiered_mem_pj=tiered_mem_pj, baseline_mem_pj=baseline_mem_pj,
+        tiered_compute_pj=tiered_compute_pj,
+        baseline_compute_pj=baseline_compute_pj,
+        tiered_pj_per_token=tiered_pj, baseline_pj_per_token=baseline_pj,
+        energy_reduction=baseline_pj / max(tiered_pj, 1e-12),
+        ops_per_token=ops,
+        tiered_tops_w=ops / max(tiered_pj, 1e-12),
+        baseline_tops_w=ops / max(baseline_pj, 1e-12),
+    )
+
+
 def map_architecture(arch_cfg, cfg: CoreConfig = DEFAULT_CORE,
                      activity: float = 0.5,
                      target_tokens_per_s: float = 1e5) -> Dict[str, float]:

@@ -38,6 +38,18 @@ sizes it to ``ceil(max_live / page_size)``, which is the per-request early
 exit: steps past a request's last live block repeat the previous index (no
 DMA) and skip compute.
 
+``flash_decode_paged_q8`` is the hybrid-precision tier variant (the
+YOCO ReRAM–SRAM split applied to the KV cache): cold pages stream from an
+int8 pool with per-page, per-head absmax scales (the dense "ReRAM" tier)
+while the last ``hot_window`` pages of each request read from the
+full-precision pool (the "SRAM" tier, where all writes land). Hotness is
+decided per grid step in the index maps — a cold step fetches the int8
+page and clamps the fp fetch onto the garbage page (repeated index, DMA
+elided), a hot step does the reverse — so each tile moves either fp or
+int8 bytes through HBM, never both. Scales ride in a (1, 1) SMEM operand
+indexed by the same page map; dequantization happens in VMEM inside the
+online-softmax loop, exactly once per fetched tile.
+
 Grid: (B, Hkv, S/bs) with S innermost ("arbitrary"); each (b, h) cell
 keeps the GQA query group (G = H // Hkv queries) resident and reduces over
 the key tiles. B and Hkv are parallel.
@@ -73,11 +85,21 @@ def _live_block_range(pos, win, bs: int):
     return first, last
 
 
-def _softmax_tile(pos, win, s, q_ref, k_ref, v_ref, o_ref,
+def _ref_loader(k_ref, v_ref):
+    """Default K/V tile loader: read the fp refs into f32. The q8 kernel
+    substitutes a loader that dequantizes the int8 tile / selects the tier."""
+    return lambda: (k_ref[0, :, 0, :].astype(jnp.float32),
+                    v_ref[0, :, 0, :].astype(jnp.float32))
+
+
+def _softmax_tile(pos, win, s, q_ref, load_kv, o_ref,
                   acc_ref, m_ref, l_ref, *, bs: int, s_steps: int,
                   scale: float):
     """One online-softmax step over key tile ``s`` (shared by the streamed,
-    prefetch, and paged kernels; only the scalar plumbing differs)."""
+    prefetch, paged, and quantized-paged kernels; only the scalar plumbing
+    and the K/V tile loader differ). ``load_kv() -> (k, v)`` f32 (bs, dh)
+    tiles; it runs under the live-tile predicate so dead steps skip both
+    the load and the compute."""
     @pl.when(s == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -90,8 +112,7 @@ def _softmax_tile(pos, win, s, q_ref, k_ref, v_ref, o_ref,
     @pl.when(live)
     def _tile():
         q = q_ref[0, 0].astype(jnp.float32)                  # (G, dh)
-        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bs, dh)
-        v = v_ref[0, :, 0, :].astype(jnp.float32)            # (bs, dh)
+        k, v = load_kv()                                     # (bs, dh) f32
         kpos = s * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
         valid = (kpos <= pos) & (kpos > pos - win)
         logits = jax.lax.dot_general(
@@ -123,9 +144,9 @@ def _flash_decode_kernel(pos_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
                          acc_ref, m_ref, l_ref, *, bs: int, s_steps: int,
                          scale: float):
     s = pl.program_id(2)
-    _softmax_tile(pos_ref[0, 0], win_ref[0, 0], s, q_ref, k_ref, v_ref,
-                  o_ref, acc_ref, m_ref, l_ref, bs=bs, s_steps=s_steps,
-                  scale=scale)
+    _softmax_tile(pos_ref[0, 0], win_ref[0, 0], s, q_ref,
+                  _ref_loader(k_ref, v_ref), o_ref, acc_ref, m_ref, l_ref,
+                  bs=bs, s_steps=s_steps, scale=scale)
 
 
 @functools.partial(jax.jit,
@@ -188,8 +209,9 @@ def _flash_prefetch_kernel(pos_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
                            scale: float):
     b = pl.program_id(0)
     s = pl.program_id(2)
-    _softmax_tile(pos_ref[b], win_ref[b], s, q_ref, k_ref, v_ref, o_ref,
-                  acc_ref, m_ref, l_ref, bs=bs, s_steps=s_steps, scale=scale)
+    _softmax_tile(pos_ref[b], win_ref[b], s, q_ref,
+                  _ref_loader(k_ref, v_ref), o_ref, acc_ref, m_ref, l_ref,
+                  bs=bs, s_steps=s_steps, scale=scale)
 
 
 def _flash_paged_kernel(pos_ref, win_ref, bt_ref, q_ref, k_ref, v_ref,
@@ -198,8 +220,40 @@ def _flash_paged_kernel(pos_ref, win_ref, bt_ref, q_ref, k_ref, v_ref,
     del bt_ref                       # consumed by the index maps only
     b = pl.program_id(0)
     s = pl.program_id(2)
-    _softmax_tile(pos_ref[b], win_ref[b], s, q_ref, k_ref, v_ref, o_ref,
-                  acc_ref, m_ref, l_ref, bs=bs, s_steps=s_steps, scale=scale)
+    _softmax_tile(pos_ref[b], win_ref[b], s, q_ref,
+                  _ref_loader(k_ref, v_ref), o_ref, acc_ref, m_ref, l_ref,
+                  bs=bs, s_steps=s_steps, scale=scale)
+
+
+def _flash_paged_q8_kernel(pos_ref, win_ref, bt_ref, hw_ref, q_ref,
+                           k_ref, v_ref, kq_ref, vq_ref, ks_ref, vs_ref,
+                           o_ref, acc_ref, m_ref, l_ref, *, bs: int,
+                           s_steps: int, scale: float):
+    """Hybrid-tier tile body: the index maps have already routed the DMA
+    (hot step -> fp page, cold step -> int8 page + its SMEM scale); here we
+    just pick the tier that was actually fetched and dequantize in VMEM."""
+    del bt_ref
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    pos, win = pos_ref[b], win_ref[b]
+    first, last = _live_block_range(pos, win, bs)
+    hot = jnp.clip(s, first, last) > last - hw_ref[0]
+
+    def load_kv():
+        k_fp = k_ref[0, :, 0, :].astype(jnp.float32)
+        v_fp = v_ref[0, :, 0, :].astype(jnp.float32)
+        # the one dequantization per fetched tile (scales are per-page,
+        # per-head, so one scalar covers the whole (bs, dh) tile); round
+        # through the serving dtype so the tier mix is bit-identical with
+        # the dequant_gather einsum oracle
+        k_q8 = (kq_ref[0, :, 0, :].astype(jnp.float32) * ks_ref[0, 0]) \
+            .astype(k_ref.dtype).astype(jnp.float32)
+        v_q8 = (vq_ref[0, :, 0, :].astype(jnp.float32) * vs_ref[0, 0]) \
+            .astype(v_ref.dtype).astype(jnp.float32)
+        return (jnp.where(hot, k_fp, k_q8), jnp.where(hot, v_fp, v_q8))
+
+    _softmax_tile(pos, win, s, q_ref, load_kv, o_ref, acc_ref, m_ref,
+                  l_ref, bs=bs, s_steps=s_steps, scale=scale)
 
 
 def _clamped_block(s, pos_ref, win_ref, b, bs: int):
@@ -329,6 +383,103 @@ def flash_decode_gqa_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
       block_tables.astype(jnp.int32), q, k_pages, v_pages)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=('scale', 'interpret'))
+def flash_decode_gqa_paged_q8(q: jnp.ndarray, k_pages: jnp.ndarray,
+                              v_pages: jnp.ndarray, kq_pages: jnp.ndarray,
+                              vq_pages: jnp.ndarray, k_scales: jnp.ndarray,
+                              v_scales: jnp.ndarray, pos: jnp.ndarray,
+                              window: jnp.ndarray,
+                              block_tables: jnp.ndarray,
+                              hot_window: jnp.ndarray, *, scale: float,
+                              interpret: bool = False) -> jnp.ndarray:
+    """:func:`flash_decode_gqa_paged` over a hybrid-precision pool pair.
+
+    k/v_pages:    (P, page_size, Hkv, dh) full-precision pool — the "SRAM"
+                  tier; holds the last ``hot_window`` pages of each request
+                  (all writes land here)
+    kq/vq_pages:  (P, page_size, Hkv, dh) int8 — the "ReRAM" tier; valid
+                  for pages older than the hot window (the scheduler
+                  quantizes pages as they age out)
+    k/v_scales:   (P, Hkv) f32 per-page, per-head absmax scales
+    hot_window:   (1,) int32, in pages, >= 1 (the page being written is
+                  always hot). >= W reads everything from the fp pool.
+
+    Block ``s`` of a request at ``pos`` is hot iff
+    ``s > pos // page_size - hot_window``; a hot grid step fetches the fp
+    page and clamps the int8 fetch onto the garbage page (and vice versa),
+    so each tile pays one tier's HBM bytes, never both.
+    """
+    b, hkv, g, dh = q.shape
+    _, page_size, hkv_k, dh_k = k_pages.shape
+    assert (hkv_k, dh_k) == (hkv, dh), (q.shape, k_pages.shape)
+    assert v_pages.shape == k_pages.shape
+    assert kq_pages.shape == k_pages.shape and kq_pages.dtype == jnp.int8
+    assert vq_pages.shape == k_pages.shape and vq_pages.dtype == jnp.int8
+    assert k_scales.shape == v_scales.shape == k_pages.shape[:1] + (hkv,)
+    assert pos.shape == (b,) and window.shape == (b,)
+    assert block_tables.ndim == 2 and block_tables.shape[0] == b
+    assert hot_window.shape == (1,)
+    s_steps = block_tables.shape[1]
+    grid = (b, hkv, s_steps)
+
+    def qo_map(bb, h, s, pos_ref, win_ref, bt_ref, hw_ref):
+        del s, pos_ref, win_ref, bt_ref, hw_ref
+        return (bb, h, 0, 0)
+
+    def _blk_hot(bb, s, pos_ref, win_ref, hw_ref):
+        first, last = _live_block_range(pos_ref[bb], win_ref[bb], page_size)
+        blk = jnp.clip(s, first, last)
+        return blk, blk > last - hw_ref[0]
+
+    def kv_fp_map(bb, h, s, pos_ref, win_ref, bt_ref, hw_ref):
+        blk, hot = _blk_hot(bb, s, pos_ref, win_ref, hw_ref)
+        # cold steps park the fp fetch on the garbage page: the repeated
+        # block index elides the DMA, so cold tiles move no fp bytes
+        return (jnp.where(hot, bt_ref[bb, blk], 0), 0, h, 0)
+
+    def kv_q8_map(bb, h, s, pos_ref, win_ref, bt_ref, hw_ref):
+        blk, hot = _blk_hot(bb, s, pos_ref, win_ref, hw_ref)
+        return (jnp.where(hot, 0, bt_ref[bb, blk]), 0, h, 0)
+
+    def scale_map(bb, h, s, pos_ref, win_ref, bt_ref, hw_ref):
+        blk, hot = _blk_hot(bb, s, pos_ref, win_ref, hw_ref)
+        return (jnp.where(hot, 0, bt_ref[bb, blk]), h)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh), qo_map),
+            pl.BlockSpec((1, page_size, 1, dh), kv_fp_map),
+            pl.BlockSpec((1, page_size, 1, dh), kv_fp_map),
+            pl.BlockSpec((1, page_size, 1, dh), kv_q8_map),
+            pl.BlockSpec((1, page_size, 1, dh), kv_q8_map),
+            pl.BlockSpec((1, 1), scale_map, memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), scale_map, memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh), qo_map),
+        scratch_shapes=[
+            pltpu.VMEM((g, dh), jnp.float32),    # unnormalized output
+            pltpu.VMEM((g, 1), jnp.float32),     # running max
+            pltpu.VMEM((g, 1), jnp.float32),     # running sum
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_flash_paged_q8_kernel, bs=page_size,
+                          s_steps=s_steps, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), jnp.float32),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=('parallel', 'parallel', 'arbitrary'),
+        ),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), window.astype(jnp.int32),
+      block_tables.astype(jnp.int32), hot_window.astype(jnp.int32),
+      q, k_pages, v_pages, kq_pages, vq_pages,
+      k_scales.astype(jnp.float32), v_scales.astype(jnp.float32))
+
+
 # ----------------------------------------------------------------------------
 # shape-flexible wrappers
 # ----------------------------------------------------------------------------
@@ -436,5 +587,43 @@ def flash_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
     out = flash_decode_gqa_paged(qg, k_pages, v_pages, pos, win,
                                  block_tables, scale=scale,
                                  interpret=interpret)
+    out = out.reshape(b, h, dh).astype(v_pages.dtype)
+    return out[:, None] if squeeze else out
+
+
+def flash_decode_paged_q8(q: jnp.ndarray, k_pages: jnp.ndarray,
+                          v_pages: jnp.ndarray, kq_pages: jnp.ndarray,
+                          vq_pages: jnp.ndarray, k_scales: jnp.ndarray,
+                          v_scales: jnp.ndarray, pos: jnp.ndarray,
+                          block_tables: jnp.ndarray,
+                          hot_window: jnp.ndarray, *, scale: float,
+                          window=None, interpret=None) -> jnp.ndarray:
+    """Shape-flexible wrapper around :func:`flash_decode_gqa_paged_q8`.
+
+    q: (B, 1, H, dh) or (B, H, dh); pools: (P, page_size, Hkv, dh) fp +
+    int8 pair; scales: (P, Hkv); pos: scalar or (B,); block_tables:
+    (B, W) int32; hot_window: int or (1,) int32.
+
+    Returns attention output shaped like q, in v_pages.dtype.
+    """
+    squeeze = q.ndim == 4
+    if squeeze:
+        assert q.shape[1] == 1, q.shape
+        q = q[:, 0]
+    b, h, dh = q.shape
+    hkv = k_pages.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, dh)
+    s_logical = block_tables.shape[1] * k_pages.shape[1]
+    pos = _norm_scalar_vec(pos, b)
+    win = _norm_scalar_vec(window, b, fill=s_logical + 1)
+    hw = jnp.asarray(hot_window, jnp.int32).reshape(-1)[:1]
+    if interpret is None:
+        from repro.kernels import ops
+        interpret = ops._interpret()
+    out = flash_decode_gqa_paged_q8(qg, k_pages, v_pages, kq_pages,
+                                    vq_pages, k_scales, v_scales, pos, win,
+                                    block_tables, hw, scale=scale,
+                                    interpret=interpret)
     out = out.reshape(b, h, dh).astype(v_pages.dtype)
     return out[:, None] if squeeze else out

@@ -24,6 +24,11 @@ kernel, so dead cache tiles are neither computed nor fetched.
 ``--sample`` (with ``--temperature`` / ``--top-k``) replaces greedy argmax
 with temperature/top-k sampling.
 
+``--kv-quant`` (continuous mode) turns on the hybrid-precision KV tier
+(``runtime/kv_quant.py``): pages older than ``--hot-window`` are quantized
+to int8 with per-page/per-head scales as they age out, and the decode read
+mixes the tiers — the serving-side twin of the paper's ReRAM–SRAM split.
+
 Usage:
   python -m repro.launch.serve --arch stablelm-1.6b --batch 4 \
       --prompt-len 32 --gen-len 32 --mode w8a8 --ragged --attn-impl flash
@@ -51,6 +56,7 @@ from repro.data import synthetic
 from repro.models import model as model_mod
 from repro.models.model import ModelRuntime
 from repro.runtime import kv_cache as kvc
+from repro.runtime import kv_quant as kvq
 from repro.runtime import serve_step as SS
 
 
@@ -188,10 +194,25 @@ class ContinuousScheduler:
     * idle slots decode at ``pos=0`` against the garbage page and their
       outputs are discarded — the decode step's shapes never change, so
       nothing recompiles across steps.
+    * **age-out** (``hot_window`` set, the kv_quant tier): after admission
+      and after growth, :meth:`aged_out_pages` lists the pages that just
+      left the hot window — the driver quantizes exactly those into the
+      int8 tier before the decode step reads them as cold.
     """
 
     def __init__(self, kv: kvc.PagedKVCache, *, prompt_pad: int,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None,
+                 hot_window: Optional[int] = None):
+        if kv.blocks_for(prompt_pad) > kv.max_blocks:
+            # no amount of waiting fixes a table that can't hold the
+            # prompt — reject at construction instead of silently
+            # truncating (or stalling) at admission time
+            raise ValueError(
+                f'padded prompt ({prompt_pad} positions, '
+                f'{kv.blocks_for(prompt_pad)} blocks) exceeds the '
+                f'block-table width ({kv.max_blocks} blocks * '
+                f'{kv.page_size} positions); size max_blocks to the '
+                f'longest admissible sequence')
         self.kv = kv
         self.prompt_pad = prompt_pad
         self.eos_id = eos_id
@@ -201,6 +222,8 @@ class ContinuousScheduler:
         self._admit_seq = 0
         self.completed: List[_SlotState] = []
         self.n_preempted = 0
+        self.tier = (kvq.KVTierTracker(hot_window, kv.page_size)
+                     if hot_window is not None else None)
 
     def submit(self, req: Request) -> None:
         self.pending.append(req)
@@ -254,10 +277,25 @@ class ContinuousScheduler:
         st = self.active.pop(victim)
         self.kv.release(victim)
         self.free_slots.append(victim)
+        if self.tier is not None:
+            self.tier.reset(victim)
         # recompute preemption: generated tokens are discarded, the request
         # re-enters at the queue front and re-prefills when pages free up
         self.pending.appendleft(st.req)
         self.n_preempted += 1
+
+    def aged_out_pages(self) -> List[int]:
+        """Physical pages that just crossed the hot-window boundary across
+        all active slots (kv_quant tier only). Call after admissions and
+        :meth:`grow_for_decode`, before the decode step — the step will
+        read these pages as cold, so they must be int8 by then."""
+        if self.tier is None:
+            return []
+        pages: List[int] = []
+        for slot, st in self.active.items():
+            pages.extend(self.tier.aged_out(slot, st.pos,
+                                            self.kv.tables[slot]))
+        return pages
 
     def step_vectors(self):
         """(token, pos) vectors for the jit'd decode step; idle slots get
@@ -287,6 +325,8 @@ class ContinuousScheduler:
             self.active.pop(slot)
             self.kv.release(slot)
             self.free_slots.append(slot)
+            if self.tier is not None:
+                self.tier.reset(slot)
             self.completed.append(st)
 
 
@@ -314,9 +354,16 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
                      temperature: float = 1.0, top_k: int = 0,
                      eos_id: Optional[int] = None,
                      max_steps: Optional[int] = None,
+                     kv_quant: bool = False, hot_window: int = 2,
                      quiet: bool = False) -> dict:
     """Serve a stream of heterogeneous-length requests end-to-end (admit,
-    decode, evict, re-admit) under one jit'd decode step."""
+    decode, evict, re-admit) under one jit'd decode step.
+
+    ``kv_quant=True`` enables the hybrid-precision KV tier
+    (``runtime.kv_quant``): pages older than ``hot_window`` are quantized
+    to int8 as they age out; decode reads mix the tiers per the hotness
+    rule (``hot_window >= max_blocks`` keeps everything fp — bit-exact
+    with ``kv_quant=False``)."""
     cfg = configs.get(arch, smoke=smoke)
     if cfg.family in ('ssm', 'hybrid') or cfg.mla is not None \
             or cfg.input_kind != 'tokens':
@@ -336,7 +383,8 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
                          f'needs {max_blocks} pages, pool has '
                          f'{num_pages - 1} allocatable')
     kv = kvc.PagedKVCache(num_pages, page_size, max_blocks, slots)
-    sched = ContinuousScheduler(kv, prompt_pad=prompt_len, eos_id=eos_id)
+    sched = ContinuousScheduler(kv, prompt_pad=prompt_len, eos_id=eos_id,
+                                hot_window=hot_window if kv_quant else None)
 
     params = model_mod.init_params(jax.random.key(seed), cfg)
     if prequantize:
@@ -349,7 +397,24 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
 
     cache = model_mod.init_paged_cache_tree(
         cfg, slots, num_pages=num_pages, page_size=page_size,
-        max_blocks=max_blocks)
+        max_blocks=max_blocks, kv_dtype='int8' if kv_quant else None,
+        hot_window=hot_window)
+    # one jit'd shape: aged-out page lists are chunked to max_blocks wide
+    # and padded with the garbage page (quantizing page 0 is harmless)
+    quantize_fn = jax.jit(kvq.quantize_tree_pages, donate_argnums=(0,))
+    n_pages_quantized = 0
+
+    def quantize_aged_out(cache):
+        nonlocal n_pages_quantized
+        pages = sched.aged_out_pages()
+        n_pages_quantized += len(pages)
+        while pages:
+            chunk, pages = pages[:max_blocks], pages[max_blocks:]
+            idx = np.zeros((max_blocks,), np.int32)
+            idx[:len(chunk)] = chunk
+            cache = quantize_fn(cache, jnp.asarray(idx))
+        return cache
+
     prefill_fn = jax.jit(SS.make_prefill_step(cfg, yoco, rt),
                          donate_argnums=(2,))
     decode_fn = jax.jit(SS.make_decode_step(cfg, yoco, rt, greedy=greedy,
@@ -388,6 +453,10 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
             break
         # --- grow + decode one step over every lane ----------------------
         sched.grow_for_decode()
+        if kv_quant:
+            # pages that just left the hot window become int8 before the
+            # step reads them as cold (covers fresh admissions too)
+            cache = quantize_aged_out(cache)
         peak_pages = max(peak_pages, kv.used_pages)
         toks, pos = sched.step_vectors()
         cache = kvc.with_block_tables(cache, kv.table_array())
@@ -424,6 +493,9 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
         page_size=page_size,
         preempted=sched.n_preempted,
         attn_impl=attn_impl,
+        kv_quant=bool(kv_quant),
+        hot_window=hot_window if kv_quant else None,
+        pages_quantized=n_pages_quantized,
         # admit/evict churn must never retrace: idle slots keep the step
         # shapes constant, so exactly one decode compilation serves the run
         decode_compilations=(decode_fn._cache_size()
@@ -467,6 +539,12 @@ def main(argv=None):
                     help='pool size incl. garbage page; shrink to exercise '
                          'queueing/preemption')
     ap.add_argument('--eos-id', type=int, default=None)
+    ap.add_argument('--kv-quant', action='store_true',
+                    help='hybrid-precision KV tier (continuous mode): '
+                         'int8 cold pages + fp hot window')
+    ap.add_argument('--hot-window', type=int, default=2,
+                    help='full-precision pages per request (>= 1; '
+                         '>= max_blocks disables the int8 tier)')
     args = ap.parse_args(argv)
     if args.continuous:
         serve_continuous(args.arch, smoke=args.smoke, slots=args.slots,
@@ -477,7 +555,8 @@ def main(argv=None):
                          attn_impl=args.attn_impl or 'flash',
                          greedy=not args.sample,
                          temperature=args.temperature, top_k=args.top_k,
-                         eos_id=args.eos_id)
+                         eos_id=args.eos_id, kv_quant=args.kv_quant,
+                         hot_window=args.hot_window)
     else:
         serve(args.arch, smoke=args.smoke, batch=args.batch,
               prompt_len=args.prompt_len, gen_len=args.gen_len,

@@ -24,6 +24,14 @@ Paged GQA: dict(k=(P, page_size, Hkv, dh), v=(P, page_size, Hkv, dh),
       ``bt`` key is the layout discriminator: caches carrying it route
       writes through the paged scatter and decode reads through
       ``flash_decode_paged`` (or the densified einsum oracle).
+Quantized paged GQA: the paged layout plus int8 pools ``kq``/``vq``,
+      per-page per-head scales ``ks``/``vs`` (P, Hkv) and the hot-window
+      knob ``hw`` (1,) — ``runtime.kv_quant``'s hybrid ReRAM–SRAM tier
+      split. The ``ks`` leaf is the second-level discriminator: caches
+      carrying it decode through ``flash_decode_paged_q8`` (or the
+      tier-mixing ``dequant_gather`` einsum oracle). Writes still land in
+      the fp ``k``/``v`` pools; the scheduler quantizes pages as they age
+      out of the hot window.
 """
 
 from __future__ import annotations
@@ -100,20 +108,42 @@ def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16,
 
 
 def init_paged_cache(cfg, batch: int, *, num_pages: int, page_size: int,
-                     max_blocks: int, dtype=jnp.bfloat16) -> dict:
+                     max_blocks: int, dtype=jnp.bfloat16,
+                     kv_dtype: Optional[str] = None,
+                     hot_window: int = 1) -> dict:
     """Empty paged KV cache: one physical pool (page 0 = garbage page) plus
     all-garbage block tables. ``runtime.kv_cache.PagedKVCache`` owns the
-    allocation state; this is just the device arrays."""
+    allocation state; this is just the device arrays.
+
+    ``kv_dtype='int8'`` adds the hybrid-precision tier (``runtime.kv_quant``
+    contract): int8 cold pools + per-page/per-head scales + the
+    ``hot_window`` knob (in pages, >= 1; >= max_blocks disables the int8
+    tier). ``dtype`` stays the hot/fp tier's dtype."""
     if cfg.mla is not None:
         raise NotImplementedError(
             'paged cache covers GQA; MLA absorbed decode is ROADMAP open '
             'item #3 (same block-table plumbing, latent pool)')
     hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
-    return dict(
+    cache = dict(
         k=jnp.zeros((num_pages, page_size, hkv, dh), dtype),
         v=jnp.zeros((num_pages, page_size, hkv, dh), dtype),
         bt=jnp.zeros((batch, max_blocks), jnp.int32),
     )
+    if kv_dtype is None or kv_dtype == 'fp':
+        return cache
+    if kv_dtype != 'int8':
+        raise ValueError(f'kv_dtype must be None/"fp"/"int8", got {kv_dtype!r}')
+    if hot_window < 1:
+        raise ValueError('hot_window must be >= 1: the page being written '
+                         'is always full-precision')
+    cache.update(
+        kq=jnp.zeros((num_pages, page_size, hkv, dh), jnp.int8),
+        vq=jnp.zeros((num_pages, page_size, hkv, dh), jnp.int8),
+        ks=jnp.zeros((num_pages, hkv), jnp.float32),
+        vs=jnp.zeros((num_pages, hkv), jnp.float32),
+        hw=jnp.full((1,), hot_window, jnp.int32),
+    )
+    return cache
 
 
 # ----------------------------------------------------------------------------
@@ -253,10 +283,13 @@ def attention(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
     new_cache = None
     if cache is not None and 'bt' in cache:
         from repro.runtime import kv_cache as kvc
+        # quantized layouts prefill the fp (hot) pools too — the scheduler
+        # quantizes aged-out pages after admission; extra tier leaves
+        # (kq/vq/ks/vs/hw) pass through untouched
         new_cache = dict(
+            cache,
             k=kvc.paged_prefill_update(cache['k'], k, cache['bt']),
             v=kvc.paged_prefill_update(cache['v'], v, cache['bt']),
-            bt=cache['bt'],
         )
     elif cache is not None:
         new_cache = dict(
@@ -299,9 +332,21 @@ def attention_decode(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
         from repro.kernels import flash_decode as fd
         from repro.runtime import kv_cache as kvc
         posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+        # writes always land in the fp (hot-tier) pools, quantized or not
         ck = kvc.paged_token_update(cache['k'], k, posv, cache['bt'])
         cv = kvc.paged_token_update(cache['v'], v, posv, cache['bt'])
-        if use_flash:
+        new_cache = dict(cache, k=ck, v=cv)
+        if 'ks' in cache:              # hybrid-precision tier (kv_quant)
+            from repro.runtime import kv_quant as kvq
+            if use_flash:
+                out = fd.flash_decode_paged_q8(
+                    q, ck, cv, cache['kq'], cache['vq'], cache['ks'],
+                    cache['vs'], posv, cache['bt'], cache['hw'],
+                    scale=scale, window=window)
+            else:
+                kd, vd = kvq.dequant_gather(new_cache, posv)
+                out = sdpa_decode(q, kd, vd, posv, scale, window)
+        elif use_flash:
             out = fd.flash_decode_paged(q, ck, cv, posv, cache['bt'],
                                         scale=scale, window=window)
         else:
@@ -310,7 +355,7 @@ def attention_decode(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
                               kvc.gather_pages(cv, cache['bt']),
                               posv, scale, window)
         out = yoco_linear.linear(out.reshape(b, 1, -1), p['wo'], cfg=yoco)
-        return out, dict(k=ck, v=cv, bt=cache['bt'])
+        return out, new_cache
     ck = _cache_update(cache['k'], k, pos)
     cv = _cache_update(cache['v'], v, pos)
     if use_flash:

@@ -357,12 +357,18 @@ def init_cache_tree(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16) -> dict:
 
 def init_paged_cache_tree(cfg, batch: int, *, num_pages: int,
                           page_size: int, max_blocks: int,
-                          dtype=jnp.bfloat16) -> dict:
+                          dtype=jnp.bfloat16,
+                          kv_dtype: Optional[str] = None,
+                          hot_window: int = 1) -> dict:
     """Paged-cache analogue of :func:`init_cache_tree`: each attention
     layer gets its own physical pool (stacked over L), every layer shares
     the same logical block tables (the ``bt`` leaf is broadcast per layer so
     the layer scan slices it for free; ``runtime.kv_cache.with_block_tables``
     refreshes every copy when the scheduler reassigns pages).
+
+    ``kv_dtype='int8'`` builds the hybrid-precision tier layout
+    (``runtime.kv_quant``): per-layer int8 pools + scale leaves and the
+    per-layer-broadcast ``hw`` hot-window knob, alongside the fp pools.
 
     Attention-cache families only: an SSM/hybrid decode state has no
     position to page behind (ROADMAP open item), and MLA's latent pool is
@@ -374,7 +380,9 @@ def init_paged_cache_tree(cfg, batch: int, *, num_pages: int,
     def paged_caches(n):
         one = attn_mod.init_paged_cache(cfg, batch, num_pages=num_pages,
                                         page_size=page_size,
-                                        max_blocks=max_blocks, dtype=dtype)
+                                        max_blocks=max_blocks, dtype=dtype,
+                                        kv_dtype=kv_dtype,
+                                        hot_window=hot_window)
         return jax.tree.map(lambda a: jnp.broadcast_to(a[None],
                                                        (n,) + a.shape).copy(),
                             one)

@@ -141,8 +141,13 @@ def paged_prefill_update(pool: jnp.ndarray, t: jnp.ndarray,
     overwritten as the request advances, same as the contiguous layout)."""
     b, sp = t.shape[:2]
     ps = pool.shape[1]
-    assert sp <= block_tables.shape[1] * ps, \
-        (sp, block_tables.shape, ps)
+    if sp > block_tables.shape[1] * ps:
+        # a prompt the table can't hold must fail loudly at trace time —
+        # the scatter below would otherwise clamp/wrap rows silently
+        raise ValueError(
+            f'prompt length {sp} exceeds the block-table capacity '
+            f'({block_tables.shape[1]} blocks * {ps} positions); size '
+            f'max_blocks to the longest admissible sequence')
     l = jnp.arange(sp, dtype=jnp.int32)
     page = block_tables[:, l // ps]                        # (B, Sp)
     row = jnp.broadcast_to(l % ps, (b, sp))

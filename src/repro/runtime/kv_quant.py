@@ -1,0 +1,186 @@
+"""Hybrid-precision KV tiering: int8 cold pages + full-precision hot window
+over the paged pool — the YOCO ReRAM–SRAM memory split applied to serving.
+
+The paper's second proposal is a hybrid memory structure: a dense,
+efficient bulk tier (ReRAM, 8-bit in-situ arithmetic) backed by a small
+precision tier (SRAM) for the data still being worked on. The serving-side
+twin of that split is the KV cache: the last ``hot_window`` pages of every
+request — the ones the decode head is actively writing and re-reading —
+stay full-precision, while pages that age out of the window are quantized
+once to int8 with per-page, per-head absmax scales and stream from the
+cheap tier forever after. Cold pages are never written again (writes only
+land at the decode head, which is always inside the hot window), so one
+quantization per page is exact bookkeeping, not an approximation loop.
+
+Quantized-layer cache layout (the ``ks`` leaf is the layout discriminator,
+the way ``bt`` discriminates paged from contiguous):
+
+    k, v    (P, page_size, Hkv, dh)  fp pool — the "SRAM" tier; all
+                                     writes (prefill + decode) land here
+    kq, vq  (P, page_size, Hkv, dh)  int8 pool — the "ReRAM" tier
+    ks, vs  (P, Hkv) f32             per-page, per-head absmax scales
+    bt      (B, W) int32             block tables (shared with the fp path)
+    hw      (1,) int32               hot window, in pages (>= 1)
+
+Hotness rule (shared by the Pallas kernel's index maps, the einsum oracle
+in :func:`dequant_gather`, and the scheduler's aging bookkeeping): block
+``s`` of a request at position ``pos`` is HOT iff
+``s > pos // page_size - hw``. The block containing ``pos`` is therefore
+always hot — hw=1 is the leanest legal setting, hw >= W disables the int8
+tier entirely (bit-exact with the fp paged path).
+
+Both pools are resident in this emulation — this models a tiered memory's
+*traffic*, not its capacity; ``core.hwmodel.decode_kv_traffic`` prices the
+bytes each tier actually moves per decode step.
+
+Quantization reuses ``core.quant``'s absmax primitives (the digital
+contract of the YOCO array); nothing here re-derives rounding.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.runtime import kv_cache as kvc
+
+
+# ----------------------------------------------------------------------------
+# pure device-side ops (jittable)
+# ----------------------------------------------------------------------------
+def quantize_pages_layer(c: dict, pages: jnp.ndarray) -> dict:
+    """Quantize physical pages ``pages`` of ONE quantized-layer cache dict
+    from the fp pool into the int8 pool + scales. Idempotent, and padding
+    the index vector with the garbage page 0 is harmless (page 0 is always
+    masked on read) — the scheduler pads its aged-out page lists with 0 so
+    the op keeps one jit'd shape per chunk width.
+    """
+    pages = jnp.asarray(pages, jnp.int32).reshape(-1)
+    out = dict(c)
+    for pool, qpool, sc in (('k', 'kq', 'ks'), ('v', 'vq', 'vs')):
+        tiles = c[pool][pages].astype(jnp.float32)     # (N, ps, Hkv, dh)
+        scale = quant.absmax_scale(tiles, axis=(0, 2))  # (N, 1, Hkv, 1)
+        q8 = quant.quantize(tiles, scale)
+        out[qpool] = c[qpool].at[pages].set(q8)
+        out[sc] = c[sc].at[pages].set(scale[:, 0, :, 0])
+    return out
+
+
+def quantize_tree_pages(cache_tree, pages: jnp.ndarray):
+    """Apply :func:`quantize_pages_layer` to every quantized layer dict in
+    a (possibly layer-stacked) cache tree. Page indices are physical, so
+    one vector covers every layer (each layer owns its own pool but the
+    block tables — and therefore the page numbering discipline — are
+    shared). Non-quantized subtrees pass through untouched."""
+    pages = jnp.asarray(pages, jnp.int32).reshape(-1)
+
+    def quant_stack(node):
+        keys = ('k', 'v', 'kq', 'vq', 'ks', 'vs')
+        if node['ks'].ndim == 2:           # single layer dict
+            return quantize_pages_layer(node, pages)
+
+        def one(*leaves):
+            d = quantize_pages_layer(dict(zip(keys, leaves)), pages)
+            return tuple(d[k] for k in keys)
+
+        stacked = jax.vmap(one)(*(node[k] for k in keys))
+        return dict(node, **dict(zip(keys, stacked)))
+
+    def walk(node):
+        if isinstance(node, dict):
+            if 'ks' in node:
+                return quant_stack(node)
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    return walk(cache_tree)
+
+
+def dequant_gather(c: dict, pos: jnp.ndarray):
+    """Densify ONE quantized-layer cache into contiguous (B, W*ps, Hkv, dh)
+    K/V views in the fp pool's dtype, mixing tiers per the hotness rule —
+    the einsum-oracle path for the quantized layout (and the debugging lens
+    on tier state). Returning the pool dtype keeps the full-hot-window case
+    bit-identical with the fp paged oracle; the q8 kernel rounds its
+    in-VMEM dequant through the same serving dtype, so the cold tiers
+    agree exactly too.
+
+    ``pos``: (B,) int32 per-request positions (the decode step's write
+    positions; hotness is evaluated against them exactly as the kernel's
+    index maps do)."""
+    bt = c['bt']
+    ps = c['k'].shape[1]
+    w = bt.shape[1]
+    pos = jnp.asarray(pos, jnp.int32).reshape(-1)
+    last = pos // ps
+    hot_blk = jnp.arange(w, dtype=jnp.int32)[None, :] > \
+        (last[:, None] - c['hw'][0])                        # (B, W)
+    hot = jnp.repeat(hot_blk, ps, axis=1)[:, :, None, None]  # (B, W*ps,1,1)
+
+    def densify(pool, qpool, sc):
+        fp = kvc.gather_pages(pool, bt)
+        q_pages = c[qpool][bt].astype(jnp.float32)          # (B, W, ps, ..)
+        scales = c[sc][bt][:, :, None, :, None]             # (B, W,1,Hkv,1)
+        cold = (q_pages * scales).reshape(fp.shape).astype(pool.dtype)
+        return jnp.where(hot, fp, cold)
+
+    return densify(c['k'], 'kq', 'ks'), densify(c['v'], 'vq', 'vs')
+
+
+# ----------------------------------------------------------------------------
+# host-side tier bookkeeping (drives the jit'd quantize op)
+# ----------------------------------------------------------------------------
+def cold_block_count(pos: int, page_size: int, hot_window: int) -> int:
+    """Number of leading blocks outside the hot window for a request about
+    to write at ``pos`` — THE hotness rule's host-side form (the kernel's
+    index maps and :func:`dequant_gather` evaluate its complement
+    ``s > pos // page_size - hw`` per block)."""
+    return max(0, pos // page_size + 1 - hot_window)
+
+
+def cold_page_list(tables, pos, page_size: int, hot_window: int):
+    """Physical pages outside each request's hot window, given block-table
+    rows and per-request positions — one-shot tier construction for tests
+    and benchmarks (the serving path ages pages out incrementally through
+    :class:`KVTierTracker`, which applies the same rule)."""
+    import numpy as np
+    tables = np.asarray(tables)
+    pos = np.asarray(pos).reshape(-1)
+    pages: List[int] = []
+    for b in range(tables.shape[0]):
+        cold = cold_block_count(int(pos[b]), page_size, hot_window)
+        pages.extend(int(p) for p in tables[b, :cold])
+    return pages
+
+
+class KVTierTracker:
+    """Tracks, per slot, how many leading blocks have aged out of the hot
+    window and been quantized — the host-side mirror of the hotness rule.
+    The continuous scheduler owns one of these and calls :meth:`aged_out`
+    each step; released/preempted slots call :meth:`reset` (their pages
+    return to the free list and will be re-quantized by their next owner
+    once they age out again)."""
+
+    def __init__(self, hot_window: int, page_size: int):
+        assert hot_window >= 1, \
+            'hot_window must be >= 1: the page being written is always hot'
+        self.hot_window = hot_window
+        self.page_size = page_size
+        self._upto = {}                  # slot -> blocks already quantized
+
+    def aged_out(self, slot: int, pos: int, table_row) -> List[int]:
+        """Physical pages of ``slot`` that just crossed the hot-window
+        boundary given the position about to be written. Call AFTER the
+        slot's table is grown for ``pos`` and BEFORE the decode step."""
+        cold = cold_block_count(pos, self.page_size, self.hot_window)
+        done = self._upto.get(slot, 0)
+        if cold <= done:
+            return []
+        self._upto[slot] = cold
+        return [int(p) for p in table_row[done:cold]]
+
+    def reset(self, slot: int) -> None:
+        self._upto.pop(slot, None)

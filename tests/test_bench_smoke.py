@@ -6,7 +6,7 @@ three-way (plus paged) comparison."""
 
 import json
 
-from benchmarks import bench_decode
+from benchmarks import bench_decode, bench_kv_quant
 
 
 def test_bench_decode_smoke_writes_parity_checked_json(tmp_path):
@@ -26,3 +26,29 @@ def test_bench_decode_smoke_writes_parity_checked_json(tmp_path):
     # both requested cache lengths present
     assert {r['s_max'] for r in on_disk['rows']} == set(
         bench_decode.SMOKE_SEQ_LENS)
+
+
+def test_bench_kv_quant_smoke_asserts_quantized_path(tmp_path):
+    """The hybrid-tier benchmark in the fast tier: q8 kernel + tier-mixing
+    oracle parity-gated against the f32 oracle, traffic model emitted."""
+    out = tmp_path / 'BENCH_kv_quant.json'
+    result = bench_kv_quant.run(smoke=True, out_path=str(out))
+    assert out.exists()
+    on_disk = json.loads(out.read_text())
+    assert on_disk['smoke'] is True
+    names = {r['name'] for r in on_disk['rows']}
+    assert {'einsum_oracle_f32', 'flash_paged_fp', 'einsum_q8_tier',
+            'flash_paged_q8'} <= names
+    for row in result['rows']:
+        if row['name'] == 'einsum_oracle_f32':
+            continue
+        atol = bench_kv_quant.FP_PARITY_ATOL \
+            if row['name'] == 'flash_paged_fp' \
+            else bench_kv_quant.Q8_PARITY_ATOL
+        assert row['max_abs_err_vs_oracle'] < atol
+    # traffic rows carry the hwmodel energy breakdown for both baselines
+    baselines = {t['baseline'] for t in on_disk['traffic']}
+    assert baselines == {'f32_oracle', 'bf16_pool'}
+    for t in on_disk['traffic']:
+        assert t['tiered_bytes_per_token'] <= t['baseline_bytes_per_token']
+        assert 'tiered_pj_per_token' in t and 'tiered_tops_w' in t

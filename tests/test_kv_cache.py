@@ -212,3 +212,80 @@ def test_paged_cache_tree_rejects_ssm():
     with pytest.raises(NotImplementedError):
         M.init_paged_cache_tree(cfg, 2, num_pages=9, page_size=4,
                                 max_blocks=4)
+
+
+# ----------------------------------------------------------------------------
+# paged-prefill edge cases
+# ----------------------------------------------------------------------------
+def test_prefill_update_exact_page_multiple():
+    """Prompt length == k * page_size: the last page is exactly filled, no
+    partial tail, and the scatter matches the contiguous layout."""
+    ps, w, b, hkv, dh = 4, 3, 2, 2, 8
+    sp = 2 * ps                                   # exact multiple
+    kv = kvc.PagedKVCache(num_pages=b * w + 1, page_size=ps, max_blocks=w,
+                          slots=b)
+    for s in range(b):
+        assert kv.alloc_blocks(s, sp // ps)
+    pool = jnp.zeros((b * w + 1, ps, hkv, dh))
+    t = jax.random.normal(jax.random.key(7), (b, sp, hkv, dh))
+    pool = kvc.paged_prefill_update(pool, t, kv.table_array())
+    got = np.asarray(kvc.gather_pages(pool, kv.table_array()))[:, :sp]
+    np.testing.assert_array_equal(got, np.asarray(t))
+    # unallocated third block stayed at the garbage page and reads zero
+    np.testing.assert_array_equal(
+        np.asarray(kvc.gather_pages(pool, kv.table_array()))[:, sp:], 0.0)
+
+
+def test_prefill_update_rejects_prompt_beyond_table():
+    """A prompt the block table can't hold fails loudly, never truncates."""
+    ps, w, b, hkv, dh = 4, 2, 1, 2, 8
+    pool = jnp.zeros((4, ps, hkv, dh))
+    t = jnp.ones((b, w * ps + 1, hkv, dh))
+    with pytest.raises(ValueError, match='exceeds the block-table'):
+        kvc.paged_prefill_update(pool, t, jnp.zeros((b, w), jnp.int32))
+
+
+def test_scheduler_rejects_prompt_beyond_table_at_construction():
+    from repro.launch.serve import ContinuousScheduler
+    kv = kvc.PagedKVCache(num_pages=9, page_size=4, max_blocks=2, slots=2)
+    with pytest.raises(ValueError, match='block-table width'):
+        ContinuousScheduler(kv, prompt_pad=12)        # 3 blocks > W=2
+
+
+def test_garbage_page_isolation_fp_and_quantized():
+    """Idle-slot writes (all-garbage tables) land in page 0 and must never
+    leak into a live request's reads — including through the int8 pool
+    when the scheduler's padded quantize chunks touch page 0."""
+    from repro.runtime import kv_quant as kvq
+    ps, w, hkv, dh = 4, 3, 2, 8
+    kv = kvc.PagedKVCache(num_pages=w + 1, page_size=ps, max_blocks=w,
+                          slots=2)
+    assert kv.alloc_blocks(0, w)                  # slot 1 stays idle
+    shape = (w + 1, ps, hkv, dh)
+    live = jax.random.normal(jax.random.key(8), (1, w * ps, hkv, dh))
+    bt = kv.table_array()
+    cache = dict(
+        k=kvc.scatter_pages(jnp.zeros(shape), live, bt[:1]),
+        v=kvc.scatter_pages(jnp.zeros(shape), live, bt[:1]),
+        kq=jnp.zeros(shape, jnp.int8), vq=jnp.zeros(shape, jnp.int8),
+        ks=jnp.zeros((w + 1, hkv)), vs=jnp.zeros((w + 1, hkv)),
+        bt=bt, hw=jnp.full((1,), 1, jnp.int32),
+    )
+    before_k = np.asarray(kvc.gather_pages(cache['k'], bt[:1]))
+    # idle slot 1 decodes at pos=0: its token lands in the garbage page
+    junk = jnp.full((2, 1, hkv, dh), 99.0)
+    ck = kvc.paged_token_update(cache['k'], junk,
+                                jnp.array([w * ps - 1, 0], jnp.int32), bt)
+    after = np.asarray(kvc.gather_pages(ck, bt[:1]))
+    # live slot's own write went through; everything else untouched
+    np.testing.assert_array_equal(after[0, :w * ps - 1],
+                                  before_k[0, :w * ps - 1])
+    np.testing.assert_array_equal(after[0, -1], 99.0)
+    # quantize with garbage-padded page list (scheduler chunking), then
+    # read the live request through the tier mix: garbage never leaks
+    cache = dict(cache, k=ck)
+    pages = jnp.asarray([0, 0] + [int(p) for p in bt[0, :w - 1]], jnp.int32)
+    cache = kvq.quantize_pages_layer(cache, pages)
+    gk, _ = kvq.dequant_gather(cache, jnp.array([w * ps - 1, 0], jnp.int32))
+    np.testing.assert_allclose(np.asarray(gk[0], np.float32), after[0],
+                               atol=5e-2)

@@ -1,0 +1,371 @@
+"""Hybrid-precision KV tiering (runtime/kv_quant.py + flash_decode_paged_q8):
+quantize/dequantize bookkeeping, tier-mixing parity against the fp einsum
+oracle, the exactness guarantee when the hot window covers the cache, the
+scheduler's age-out bookkeeping, and token-level parity through continuous
+serving.
+
+Documented tolerances (also in ROADMAP.md's KV-tier contract): per-page,
+per-head int8 absmax KV on smoke-sized activations lands the decode-
+attention output within ~5e-2 of the fp oracle and end-of-model logits
+within rtol/atol 2e-1 of the fp paged run; with ``hot_window >= max_blocks``
+the int8 tier is never read and every comparison is exact.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import hwmodel, quant
+from repro.core.yoco_linear import DEFAULT_YOCO
+from repro.kernels import flash_decode as fd
+from repro.launch import serve as SV
+from repro.models import attention as A
+from repro.models import model as M
+from repro.models.model import ModelRuntime
+from repro.runtime import kv_cache as kvc
+from repro.runtime import kv_quant as kvq
+
+ARCH = 'stablelm-1.6b'
+Q8_ATOL = 5e-2          # attention-output tolerance, int8 tier vs fp oracle
+
+
+def _tiered_cache(key, b, w, ps, hkv, dh, hot_window, pos):
+    """Random dense K/V scattered into a shuffled quantized-layout pool,
+    with every page outside each request's hot window quantized — the
+    state the scheduler maintains. Returns (cache, dense_k, dense_v)."""
+    s = w * ps
+    kd = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, dh))
+    vd = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, dh))
+    perm = np.random.RandomState(0).permutation(np.arange(1, b * w + 1))
+    bt = jnp.asarray(perm.reshape(b, w).astype(np.int32))
+    shape = (b * w + 1, ps, hkv, dh)
+    cache = dict(
+        k=kvc.scatter_pages(jnp.zeros(shape), kd, bt),
+        v=kvc.scatter_pages(jnp.zeros(shape), vd, bt),
+        kq=jnp.zeros(shape, jnp.int8), vq=jnp.zeros(shape, jnp.int8),
+        ks=jnp.zeros((b * w + 1, hkv)), vs=jnp.zeros((b * w + 1, hkv)),
+        bt=bt, hw=jnp.full((1,), hot_window, jnp.int32),
+    )
+    pages = kvq.cold_page_list(bt, pos, ps, hot_window)
+    if pages:
+        cache = kvq.quantize_pages_layer(cache,
+                                         jnp.asarray(pages, jnp.int32))
+    return cache, kd, vd
+
+
+# ----------------------------------------------------------------------------
+# pure ops
+# ----------------------------------------------------------------------------
+def test_quantize_pages_roundtrip_error_bound():
+    """Dequantized pages stay within half an LSB of the page/head absmax."""
+    key = jax.random.key(0)
+    b, w, ps, hkv, dh = 2, 3, 4, 2, 8
+    pos = [w * ps - 1] * b                  # all blocks but the last cold
+    cache, kd, vd = _tiered_cache(key, b, w, ps, hkv, dh, 1, pos)
+    pages = np.unique(np.asarray(cache['bt'][:, :w - 1]))   # the cold set
+    pages = pages[pages != kvc.GARBAGE_PAGE]
+    deq = cache['kq'][pages].astype(jnp.float32) \
+        * cache['ks'][pages][:, None, :, None]
+    ref = cache['k'][pages].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(ref), axis=(1, 3), keepdims=True)
+    bound = amax * quant.quant_error_bound() + 1e-6
+    assert float(jnp.max(jnp.abs(deq - ref) - bound)) <= 0.0
+
+
+def test_quantize_pages_idempotent_and_garbage_pad_harmless():
+    key = jax.random.key(1)
+    cache, _, _ = _tiered_cache(key, 2, 3, 4, 2, 8, 1, [11, 11])
+    # re-quantizing the already-cold pages (plus garbage-page padding, as
+    # the scheduler's fixed-width chunks do) changes nothing
+    cold = np.unique(np.asarray(cache['bt'][:, :2])).tolist()
+    pages = jnp.asarray([0, 0] + cold, jnp.int32)
+    again = kvq.quantize_pages_layer(cache, pages)
+    np.testing.assert_array_equal(np.asarray(again['kq']),
+                                  np.asarray(cache['kq']))
+    # garbage page picks up the eps absmax floor (~1e-10); its scale is
+    # never read (page 0 reads are always masked)
+    np.testing.assert_allclose(np.asarray(again['ks']),
+                               np.asarray(cache['ks']), atol=1e-9)
+
+
+def test_dequant_gather_mixes_tiers_by_hotness():
+    """Hot positions come back exact; cold positions come back through the
+    int8 tier (quantized, hence close-but-not-equal)."""
+    key = jax.random.key(2)
+    b, w, ps, hkv, dh, hw = 2, 4, 4, 2, 8, 2
+    pos = jnp.array([w * ps - 1, 2 * ps], jnp.int32)
+    cache, kd, vd = _tiered_cache(key, b, w, ps, hkv, dh, hw, pos)
+    gk, gv = kvq.dequant_gather(cache, pos)
+    for bb in range(b):
+        last = int(pos[bb]) // ps
+        hot_lo = (last - hw + 1) * ps
+        np.testing.assert_array_equal(np.asarray(gk[bb, hot_lo:]),
+                                      np.asarray(kd[bb, hot_lo:]))
+        cold = np.asarray(gk[bb, :max(hot_lo, 0)])
+        ref = np.asarray(kd[bb, :max(hot_lo, 0)])
+        if cold.size:
+            assert np.max(np.abs(cold - ref)) > 0        # went through int8
+            np.testing.assert_allclose(cold, ref, atol=Q8_ATOL)
+
+
+def test_quantize_tree_pages_walks_layer_stacks():
+    cfg = configs.get('stablelm-12b', smoke=True)
+    cache = M.init_paged_cache_tree(cfg, 2, num_pages=9, page_size=4,
+                                    max_blocks=4, kv_dtype='int8',
+                                    hot_window=2)
+    lk = cache['layers']
+    assert lk['kq'].dtype == jnp.int8 and lk['ks'].shape[1:] == \
+        (9, cfg.n_kv_heads)
+    # seed the fp pools with data, then quantize two pages in every layer
+    lk = dict(lk, k=jax.random.normal(jax.random.key(0), lk['k'].shape,
+                                      dtype=lk['k'].dtype))
+    out = kvq.quantize_tree_pages(dict(layers=lk),
+                                  jnp.asarray([1, 2], jnp.int32))['layers']
+    assert float(jnp.max(jnp.abs(out['ks'][:, 1:3]))) > 0
+    assert float(jnp.max(jnp.abs(out['ks'][:, 3:]))) == 0
+    # every layer quantized independently (pools differ per layer)
+    l0 = np.asarray(out['kq'][0, 1])
+    l1 = np.asarray(out['kq'][1, 1])
+    assert (l0 != l1).any()
+
+
+# ----------------------------------------------------------------------------
+# kernel parity
+# ----------------------------------------------------------------------------
+def test_q8_kernel_matches_tier_mixing_oracle():
+    """flash_decode_paged_q8 vs dequant_gather + sdpa on identical tier
+    state: same data path, f32-roundoff agreement."""
+    key = jax.random.key(3)
+    b, w, ps, hkv, g, dh, hw = 3, 6, 4, 2, 4, 16, 2
+    pos = jnp.array([w * ps - 1, 9, 4], jnp.int32)
+    cache, _, _ = _tiered_cache(key, b, w, ps, hkv, dh, hw, pos)
+    q = jax.random.normal(key, (b, 1, hkv * g, dh), jnp.float32)
+    scale = 1.0 / dh ** 0.5
+    gk, gv = kvq.dequant_gather(cache, pos)
+    want = A.sdpa_decode(q, gk, gv, pos, scale)
+    got = fd.flash_decode_paged_q8(
+        q, cache['k'], cache['v'], cache['kq'], cache['vq'], cache['ks'],
+        cache['vs'], pos, cache['bt'], cache['hw'], scale=scale,
+        interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=2e-5)
+
+
+def test_q8_kernel_exact_when_hot_window_covers_cache():
+    """hot_window >= W never reads the int8 tier: bit-identical with the
+    fp paged kernel even over garbage int8 pools."""
+    key = jax.random.key(4)
+    b, w, ps, hkv, g, dh = 2, 4, 4, 2, 2, 16
+    pos = jnp.array([w * ps - 1, 5], jnp.int32)
+    cache, _, _ = _tiered_cache(key, b, w, ps, hkv, dh, w, pos)
+    # poison the int8 tier: it must never be read
+    cache = dict(cache,
+                 kq=jnp.full_like(cache['kq'], 127),
+                 vq=jnp.full_like(cache['vq'], -127),
+                 ks=jnp.ones_like(cache['ks']) * 1e6,
+                 vs=jnp.ones_like(cache['vs']) * 1e6)
+    q = jax.random.normal(key, (b, 1, hkv * g, dh), jnp.float32)
+    scale = 1.0 / dh ** 0.5
+    fp = fd.flash_decode_paged(q, cache['k'], cache['v'], pos, cache['bt'],
+                               scale=scale, interpret=True)
+    q8 = fd.flash_decode_paged_q8(
+        q, cache['k'], cache['v'], cache['kq'], cache['vq'], cache['ks'],
+        cache['vs'], pos, cache['bt'], cache['hw'], scale=scale,
+        interpret=True)
+    np.testing.assert_array_equal(np.asarray(q8), np.asarray(fp))
+
+
+def test_q8_kernel_vs_fp_oracle_within_documented_tolerance():
+    key = jax.random.key(5)
+    b, w, ps, hkv, g, dh, hw = 3, 6, 4, 2, 4, 16, 1
+    pos = jnp.array([w * ps - 1, 13, 4], jnp.int32)
+    cache, kd, vd = _tiered_cache(key, b, w, ps, hkv, dh, hw, pos)
+    q = jax.random.normal(key, (b, 1, hkv * g, dh), jnp.float32)
+    scale = 1.0 / dh ** 0.5
+    want = A.sdpa_decode(q, kd, vd, pos, scale)
+    got = fd.flash_decode_paged_q8(
+        q, cache['k'], cache['v'], cache['kq'], cache['vq'], cache['ks'],
+        cache['vs'], pos, cache['bt'], cache['hw'], scale=scale,
+        interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=Q8_ATOL)
+
+
+# ----------------------------------------------------------------------------
+# attention layer + model integration
+# ----------------------------------------------------------------------------
+@pytest.mark.parametrize('impl', ['einsum', 'flash'])
+def test_attention_decode_quantized_paged(impl):
+    """The 'ks' discriminator routes decode through the tier mix; writes
+    land in the fp pool; tier leaves survive the cache round-trip."""
+    cfg = configs.get('stablelm-12b', smoke=True)
+    p = A.init_attention(jax.random.key(10), cfg)
+    x = jax.random.normal(jax.random.key(11), (3, 9, cfg.d_model))
+    cache = A.init_cache(cfg, 3, 16, dtype=jnp.float32)
+    _, cache = A.attention(p, x[:, :8], cfg, DEFAULT_YOCO, cache=cache)
+    kv = kvc.PagedKVCache(num_pages=3 * 4 + 1, page_size=4, max_blocks=4,
+                          slots=3)
+    for s in range(3):
+        assert kv.alloc_blocks(s, 4)
+    bt = kv.table_array()
+    shape = (kv.num_pages, 4) + cache['k'].shape[2:]
+    paged = dict(
+        k=kvc.scatter_pages(jnp.zeros(shape), cache['k'], bt),
+        v=kvc.scatter_pages(jnp.zeros(shape), cache['v'], bt),
+        kq=jnp.zeros(shape, jnp.int8), vq=jnp.zeros(shape, jnp.int8),
+        ks=jnp.zeros(shape[:1] + shape[2:3]),
+        vs=jnp.zeros(shape[:1] + shape[2:3]),
+        bt=bt, hw=jnp.full((1,), 2, jnp.int32),
+    )
+    pos = jnp.array([8, 5, 3], jnp.int32)
+    pages = kvq.cold_page_list(bt, pos, 4, 2)
+    paged = kvq.quantize_pages_layer(paged, jnp.asarray(pages, jnp.int32))
+    rt = ModelRuntime(attn_impl=impl)
+    y_ref, cc = A.attention_decode(p, x[:, 8:9], cfg, DEFAULT_YOCO,
+                                   cache=cache, pos=pos)
+    y_q, cq = A.attention_decode(p, x[:, 8:9], cfg, DEFAULT_YOCO,
+                                 cache=paged, pos=pos, rt=rt)
+    np.testing.assert_allclose(np.asarray(y_q, np.float32),
+                               np.asarray(y_ref, np.float32), atol=Q8_ATOL)
+    assert set(cq) == set(paged)                 # tier leaves preserved
+    # the decode write landed in the fp pool rows
+    dense = kvc.gather_pages(cq['k'], cq['bt'])[:, :16]
+    np.testing.assert_allclose(np.asarray(dense, np.float32),
+                               np.asarray(cc['k'], np.float32))
+
+
+def test_model_decode_step_quantized_tree_parity():
+    """Full decode_step over the scanned stack: int8-tier tree vs the fp
+    paged tree — exact with a covering hot window, within the documented
+    logits tolerance with a 1-page window."""
+    cfg = configs.get('stablelm-12b', smoke=True)
+    params = M.init_params(jax.random.key(0), cfg)
+    b, prompt, ps, w = 2, 8, 4, 4
+    toks = jax.random.randint(jax.random.key(1), (b, prompt), 0,
+                              cfg.vocab_size)
+    kv = kvc.PagedKVCache(num_pages=b * w + 1, page_size=ps, max_blocks=w,
+                          slots=b)
+    for s in range(b):
+        assert kv.alloc_blocks(s, w)
+    lens = jnp.array([prompt, prompt - 3], jnp.int32)
+
+    def run(kv_dtype, hot_window):
+        cache = M.init_paged_cache_tree(cfg, b, num_pages=b * w + 1,
+                                        page_size=ps, max_blocks=w,
+                                        kv_dtype=kv_dtype,
+                                        hot_window=hot_window)
+        cache = kvc.with_block_tables(cache, kv.table_array())
+        logits, cache = M.prefill(params, dict(inputs=toks), cache, cfg,
+                                  last_pos=lens - 1)
+        if kv_dtype == 'int8':
+            pages = kvq.cold_page_list(kv.tables, lens, ps, hot_window)
+            if pages:
+                cache = kvq.quantize_tree_pages(
+                    cache, jnp.asarray(pages, jnp.int32))
+        out = [logits]
+        tok = jnp.array([3, 5], jnp.int32)
+        for step in range(2):
+            logits, cache = M.decode_step(params, tok, lens + step, cache,
+                                          cfg)
+            out.append(logits)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return out
+
+    ref = run(None, 1)
+    exact = run('int8', w + 1)          # covering hot window: never int8
+    for a, e in zip(ref, exact):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(e))
+    lossy = run('int8', 1)
+    for a, l in zip(ref, lossy):
+        np.testing.assert_allclose(np.asarray(l, np.float32),
+                                   np.asarray(a, np.float32),
+                                   rtol=2e-1, atol=2e-1)
+
+
+# ----------------------------------------------------------------------------
+# scheduler bookkeeping + token-level serving parity
+# ----------------------------------------------------------------------------
+def test_tier_tracker_ages_blocks_out_once():
+    tr = kvq.KVTierTracker(hot_window=2, page_size=4)
+    row = np.array([7, 8, 9, 10], np.int32)
+    assert tr.aged_out(0, 4, row) == []          # blocks 0,1 live, hw=2
+    assert tr.aged_out(0, 8, row) == [7]         # block 0 aged out
+    assert tr.aged_out(0, 9, row) == []          # nothing new mid-page
+    assert tr.aged_out(0, 15, row) == [8]
+    tr.reset(0)
+    assert tr.aged_out(0, 15, row) == [7, 8]     # fresh owner re-quantizes
+    with pytest.raises(AssertionError):
+        kvq.KVTierTracker(hot_window=0, page_size=4)
+
+
+def test_continuous_serve_kv_quant_full_hot_window_is_exact():
+    """hot_window >= max_blocks: the int8 tier is configured but never
+    read — token streams must equal the fp continuous run exactly."""
+    kwargs = dict(slots=2, n_requests=3, prompt_len=16, gen_len=6,
+                  page_size=4, attn_impl='einsum', quiet=True)
+    fp = SV.serve_continuous(ARCH, **kwargs)
+    hot = SV.serve_continuous(ARCH, kv_quant=True, hot_window=64, **kwargs)
+    assert hot['pages_quantized'] == 0
+    assert fp['outputs'] == hot['outputs']
+
+
+def test_continuous_serve_kv_quant_quantizes_and_stays_close():
+    """The leanest hot window (1 page) quantizes every aged-out page and
+    still completes the stream; emitted token streams are compared
+    per-token against the fp run (logit-level tolerance is covered by
+    test_model_decode_step_quantized_tree_parity — token streams may
+    legitimately diverge after a near-tie, so only report agreement)."""
+    kwargs = dict(slots=2, n_requests=3, prompt_len=16, gen_len=6,
+                  page_size=4, attn_impl='einsum', quiet=True)
+    fp = SV.serve_continuous(ARCH, **kwargs)
+    q8 = SV.serve_continuous(ARCH, kv_quant=True, hot_window=1, **kwargs)
+    assert q8['completed'] == 3
+    assert q8['pages_quantized'] > 0
+    agree = sum(a == b for r in fp['outputs']
+                for a, b in zip(fp['outputs'][r], q8['outputs'][r]))
+    total = sum(len(t) for t in fp['outputs'].values())
+    assert agree / total > 0.5, (agree, total, q8['outputs'])
+
+
+@pytest.mark.slow
+def test_continuous_serve_kv_quant_flash_matches_einsum():
+    """The q8 Pallas kernel serves the same stream with the same tokens as
+    the tier-mixing einsum oracle."""
+    kwargs = dict(slots=2, n_requests=3, prompt_len=16, gen_len=6,
+                  page_size=4, kv_quant=True, hot_window=1, quiet=True)
+    a = SV.serve_continuous(ARCH, attn_impl='einsum', **kwargs)
+    b = SV.serve_continuous(ARCH, attn_impl='flash', **kwargs)
+    assert a['outputs'] == b['outputs']
+
+
+# ----------------------------------------------------------------------------
+# hwmodel traffic model
+# ----------------------------------------------------------------------------
+def test_decode_kv_traffic_headline_reduction():
+    t = hwmodel.decode_kv_traffic(32768, n_heads=8, n_kv_heads=2,
+                                  head_dim=64, page_size=128, hot_window=4,
+                                  fp_bytes=4)
+    assert t['bytes_reduction'] >= 3.0
+    assert t['energy_reduction'] > 1.0
+    assert t['tiered_tops_w'] > t['baseline_tops_w']
+    # accounting closes: tier bytes sum to the total
+    assert t['tiered_bytes_per_token'] == \
+        t['hot_bytes_per_token'] + t['cold_bytes_per_token']
+    bf16 = hwmodel.decode_kv_traffic(32768, n_heads=8, n_kv_heads=2,
+                                     head_dim=64, page_size=128,
+                                     hot_window=4, fp_bytes=2)
+    assert 1.5 < bf16['bytes_reduction'] < t['bytes_reduction']
+
+
+def test_decode_kv_traffic_hot_window_clamps():
+    """A hot window wider than the live cache degenerates to the fp
+    baseline bytes (no int8 tier read)."""
+    t = hwmodel.decode_kv_traffic(256, n_heads=8, n_kv_heads=2,
+                                  head_dim=64, page_size=128, hot_window=64,
+                                  fp_bytes=2)
+    assert t['cold_blocks'] == 0
+    assert t['tiered_bytes_per_token'] == t['baseline_bytes_per_token']
