@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src:.$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test test-fast test-slow bench bench-smoke serve-demo check
+.PHONY: test test-fast test-slow test-mla bench bench-smoke serve-demo check
 
 # tier-1: the full suite (what CI / the driver runs)
 test:
@@ -13,6 +13,13 @@ test-fast:
 
 test-slow:
 	$(PY) -m pytest -q -m "slow"
+
+# the MLA serving surface in one shot: the absorbed paged-decode parity
+# grid (incl. its slow model-level cells) plus the deepseek continuous-
+# serving parity/routing tests
+test-mla:
+	$(PY) -m pytest -q tests/test_mla_paged_decode.py \
+		tests/test_serve_continuous.py
 
 bench:
 	$(PY) -m benchmarks.run

@@ -13,6 +13,19 @@ the layout continuous batching serves from). Run at S_max ∈ {8k, 32k}
 with ragged live lengths (mean ~2k): exactly the regime where the
 streamed kernel pays ~S_max of bandwidth for ~live of useful work.
 
+The MLA section prices the absorbed latent path at the same cache lengths:
+
+  * ``mla_einsum_oracle``: the absorbed einsum (``mla_absorbed_attend``,
+    the production decode path) over dense latent views,
+  * ``mla_flash_paged``: ``flash_decode_paged_mla`` over a fragmented
+    latent pool — one (page_size, r + d_rope) tile per page, fetched once
+    and used as both keys and values.
+
+Full-size runs use DeepSeek-V3's latent dims (r=512, d_rope=64 — 576
+values/token vs 2·Hkv·dh for GQA); head count is trimmed to keep the
+CPU-interpret timing tractable (per-key bytes, the quantity the latent
+layout changes, don't depend on H).
+
 Reports tokens/sec per decode-attention call (B requests, each at its own
 position, one attention layer) plus each impl's max abs delta vs the
 oracle, and writes the whole table to ``BENCH_decode.json`` at the repo
@@ -46,6 +59,9 @@ SEQ_LENS = [8192, 32768]
 SMOKE_SEQ_LENS = [256, 512]
 PAGE_SIZE = 128
 PARITY_ATOL = 2e-2
+# MLA absorbed-decode dims: (H, r, d_rope). Full size keeps DeepSeek-V3's
+# latent widths (r + d_rope = 576/token) with a trimmed head count
+MLA_DIMS = dict(full=(16, 512, 64), smoke=(8, 64, 16))
 
 _ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), '..')
 DEFAULT_OUT = os.path.join(_ROOT, 'BENCH_decode.json')
@@ -125,6 +141,47 @@ def _bench_one(s_max: int, rows: list, interpret: bool) -> None:
              f'tok_per_s={row["tok_per_s"]},max_abs_err={err:.2e}')
 
 
+def _bench_mla_one(s_max: int, rows: list, interpret: bool,
+                   smoke: bool) -> None:
+    """Absorbed MLA decode over the paged latent pool vs the absorbed
+    einsum oracle, same ragged positions as the GQA section."""
+    h, r, dr = MLA_DIMS['smoke' if smoke else 'full']
+    scale = 1.0 / float(r + dr) ** 0.5
+    key = jax.random.key(s_max + 1)
+    q = jax.random.normal(key, (B, 1, h, r + dr), jnp.float32)
+    lat = jax.random.normal(jax.random.fold_in(key, 1),
+                            (B, s_max, r + dr),
+                            jnp.float32).astype(jnp.bfloat16)
+    cp, bt = _paged_from_contiguous(lat, PAGE_SIZE)
+    pos = _ragged_pos(s_max)
+
+    impls = {
+        'mla_einsum_oracle': (jax.jit(
+            lambda q, c, p: A.mla_absorbed_attend(
+                q[..., :r], q[..., r:], c[..., :r], c[..., r:], p, scale)),
+            (q, lat, pos)),
+        'mla_flash_paged': (jax.jit(
+            lambda q, c, p, t: fd.flash_decode_paged_mla(
+                q, c, p, t, r=r, scale=scale, interpret=interpret)),
+            (q, cp, pos, bt)),
+    }
+    want = impls['mla_einsum_oracle'][0](*impls['mla_einsum_oracle'][1])
+    for name, (fn, args) in impls.items():
+        t_us = time_call(fn, *args, n_iter=3)
+        got = fn(*args)
+        err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                    - want.astype(jnp.float32))))
+        row = dict(name=name, s_max=s_max,
+                   mean_live=float(jnp.mean(pos + 1)),
+                   n_heads=h, latent=r + dr,
+                   us_per_call=round(t_us, 2),
+                   tok_per_s=round(B / (t_us * 1e-6), 1),
+                   max_abs_err_vs_oracle=err)
+        rows.append(row)
+        emit(f'decode.{name}.S{s_max}', t_us,
+             f'tok_per_s={row["tok_per_s"]},max_abs_err={err:.2e}')
+
+
 def run(smoke: bool = False, out_path: Optional[str] = None) -> dict:
     if out_path is None:
         out_path = SMOKE_OUT if smoke else DEFAULT_OUT
@@ -132,6 +189,7 @@ def run(smoke: bool = False, out_path: Optional[str] = None) -> dict:
     rows: list = []
     for s_max in (SMOKE_SEQ_LENS if smoke else SEQ_LENS):
         _bench_one(s_max, rows, interpret)
+        _bench_mla_one(s_max, rows, interpret, smoke)
     result = dict(
         bench='decode',
         backend=jax.default_backend(),
@@ -139,12 +197,15 @@ def run(smoke: bool = False, out_path: Optional[str] = None) -> dict:
         smoke=smoke,
         batch=B, n_heads=HKV * G, n_kv_heads=HKV, head_dim=DH,
         page_size=PAGE_SIZE,
+        mla_dims=dict(zip(('n_heads', 'kv_lora_rank', 'rope_head_dim'),
+                          MLA_DIMS['smoke' if smoke else 'full'])),
         rows=rows,
     )
     # parity gates the write: a broken kernel must not overwrite the
-    # tracked perf artifact with its own numbers
+    # tracked perf artifact with its own numbers (each family's flash rows
+    # are gated against that family's einsum oracle)
     for row in rows:
-        if row['name'] != 'einsum_oracle':
+        if not row['name'].endswith('einsum_oracle'):
             assert row['max_abs_err_vs_oracle'] < PARITY_ATOL, row
     out_path = os.path.abspath(out_path)
     with open(out_path, 'w') as f:

@@ -33,16 +33,19 @@ def main():
     # continuous batching: a stream of ragged requests over fixed decode
     # slots backed by the paged pool — admit / grow / evict / re-admit
     # under one jit'd decode step
-    for label, kwargs in [
-        ('paged fp (bf16 pool)', dict()),
+    for arch, label, kwargs in [
+        ('stablelm-1.6b', 'paged fp (bf16 pool)', dict()),
         # the hybrid tier: pages older than hot_window stream as int8 with
         # per-page/per-head scales; the paged_q8 kernel mixes the tiers
-        ('kv-quant int8 tier, hot_window=2', dict(kv_quant=True,
-                                                  hot_window=2)),
+        ('stablelm-1.6b', 'kv-quant int8 tier, hot_window=2',
+         dict(kv_quant=True, hot_window=2)),
+        # MLA: the paged LATENT pool (r + d_rope values/token) under the
+        # absorbed flash_decode_paged_mla kernel — same scheduler
+        ('deepseek-v3-671b', 'MLA paged latent pool', dict()),
     ]:
-        print(f'=== stablelm-1.6b continuous ({label}) ===')
+        print(f'=== {arch} continuous ({label}) ===')
         out = serve.serve_continuous(
-            'stablelm-1.6b', slots=3, n_requests=6, prompt_len=32,
+            arch, slots=3, n_requests=6, prompt_len=32,
             gen_len=16, page_size=8, attn_impl='flash', quiet=True,
             **kwargs)
         print(f'  {out["completed"]}/{out["requests"]} done in '

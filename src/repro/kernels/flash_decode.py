@@ -38,6 +38,19 @@ sizes it to ``ceil(max_live / page_size)``, which is the per-request early
 exit: steps past a request's last live block repeat the previous index (no
 DMA) and skip compute.
 
+``flash_decode_paged_mla`` is the absorbed multi-head-latent-attention
+variant of the paged kernel: the pool holds the LATENT cache
+``(num_pages, page_size, r + d_rope)`` — one pool, no separate K/V — and
+the query arrives already absorbed (``q_nope @ W_uk`` concatenated with the
+rope query). Each fetched latent tile is used twice: the full
+``r + d_rope`` width scores against the absorbed query
+(``q_abs · ckv^T + q_rope · krope^T`` collapses to one dot product on the
+concatenated layout) and its first ``r`` columns are the "values" for the
+weighted sum, so attention runs entirely in latent space and the kernel
+moves ``r + d_rope`` values per key position (576 for DeepSeek-V3, vs
+2·Hkv·dh = 32768 for naive GQA). The ``W_uv`` up-projection happens once,
+outside the online-softmax loop, on the normalized (B, H, r) output.
+
 ``flash_decode_paged_q8`` is the hybrid-precision tier variant (the
 YOCO ReRAM–SRAM split applied to the KV cache): cold pages stream from an
 int8 pool with per-page, per-head absmax scales (the dense "ReRAM" tier)
@@ -52,7 +65,9 @@ online-softmax loop, exactly once per fetched tile.
 
 Grid: (B, Hkv, S/bs) with S innermost ("arbitrary"); each (b, h) cell
 keeps the GQA query group (G = H // Hkv queries) resident and reduces over
-the key tiles. B and Hkv are parallel.
+the key tiles. B and Hkv are parallel. The MLA kernel degenerates the Hkv
+axis to 1 (the latent cache is shared by every head) and keeps all H
+queries resident in the one cell.
 
 CPU CI runs these same kernel bodies with ``interpret=True``.
 """
@@ -225,6 +240,24 @@ def _flash_paged_kernel(pos_ref, win_ref, bt_ref, q_ref, k_ref, v_ref,
                   bs=bs, s_steps=s_steps, scale=scale)
 
 
+def _flash_paged_mla_kernel(pos_ref, win_ref, bt_ref, q_ref, c_ref, o_ref,
+                            acc_ref, m_ref, l_ref, *, bs: int, s_steps: int,
+                            scale: float, r: int):
+    """Absorbed-MLA tile body: one latent tile (bs, r + d_rope) serves as
+    both the keys (full width, against the absorbed+rope query) and the
+    values (first ``r`` columns) — fetched once, used twice."""
+    del bt_ref                       # consumed by the index maps only
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+
+    def load_kv():
+        lat = c_ref[0].astype(jnp.float32)             # (bs, r + d_rope)
+        return lat, lat[:, :r]
+
+    _softmax_tile(pos_ref[b], win_ref[b], s, q_ref, load_kv, o_ref,
+                  acc_ref, m_ref, l_ref, bs=bs, s_steps=s_steps, scale=scale)
+
+
 def _flash_paged_q8_kernel(pos_ref, win_ref, bt_ref, hw_ref, q_ref,
                            k_ref, v_ref, kq_ref, vq_ref, ks_ref, vs_ref,
                            o_ref, acc_ref, m_ref, l_ref, *, bs: int,
@@ -381,6 +414,81 @@ def flash_decode_gqa_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
         interpret=interpret,
     )(pos.astype(jnp.int32), window.astype(jnp.int32),
       block_tables.astype(jnp.int32), q, k_pages, v_pages)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=('scale', 'r', 'interpret'))
+def flash_decode_mla_paged(q: jnp.ndarray, c_pages: jnp.ndarray,
+                           pos: jnp.ndarray, window: jnp.ndarray,
+                           block_tables: jnp.ndarray, *, scale: float,
+                           r: int, interpret: bool = False) -> jnp.ndarray:
+    """Single-token absorbed-MLA decode attention over a *paged* latent pool.
+
+    q:            (B, 1, H, r + d_rope) — the ABSORBED query: per head,
+                  ``q_nope @ W_uk`` (width r) concatenated with the rope
+                  query (width d_rope); on the concatenated layout the
+                  absorbed score ``q_abs · ckv^T + q_rope · krope^T`` is a
+                  single dot product against the latent tile
+    c_pages:      (P, page_size, r + d_rope) — latent pool shared by all
+                  requests: ``ckv`` in the first r columns, ``krope`` in
+                  the last d_rope (one pool — MLA has no separate K/V)
+    pos:          (B,) int32 per-request absolute position
+    window:       (B,) int32 per-request sliding window (>= S+1 disables;
+                  MLA archs here never window — the operand exists so the
+                  kernel shares ``_live_block_range``/``_softmax_tile``
+                  with the GQA family verbatim)
+    block_tables: (B, W) int32 — same contract as
+                  :func:`flash_decode_gqa_paged`; dead steps clamp onto the
+                  nearest live block so their DMA is elided
+    r:            static latent rank — the value width (``W_uv`` is applied
+                  once OUTSIDE the kernel, on the normalized output)
+
+    Returns (B, 1, H, r) f32: the latent-space attention output.
+    """
+    b, one, h, dk = q.shape
+    assert one == 1, q.shape
+    _, page_size, dk_c = c_pages.shape
+    assert dk_c == dk, (q.shape, c_pages.shape)
+    assert 0 < r < dk, (r, dk)
+    assert pos.shape == (b,) and window.shape == (b,)
+    assert block_tables.ndim == 2 and block_tables.shape[0] == b
+    s_steps = block_tables.shape[1]
+    grid = (b, 1, s_steps)           # degenerate Hkv axis: one latent cache
+
+    def qo_map(bb, g_, s, pos_ref, win_ref, bt_ref):
+        del g_, s, pos_ref, win_ref, bt_ref
+        return (bb, 0, 0, 0)
+
+    def c_map(bb, g_, s, pos_ref, win_ref, bt_ref):
+        del g_
+        blk = _clamped_block(s, pos_ref, win_ref, bb, page_size)
+        return (bt_ref[bb, blk], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, h, dk), qo_map),
+            pl.BlockSpec((1, page_size, dk), c_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, h, r), qo_map),
+        scratch_shapes=[
+            pltpu.VMEM((h, r), jnp.float32),     # unnormalized latent out
+            pltpu.VMEM((h, 1), jnp.float32),     # running max
+            pltpu.VMEM((h, 1), jnp.float32),     # running sum
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_flash_paged_mla_kernel, bs=page_size,
+                          s_steps=s_steps, scale=scale, r=r),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, 1, h, r), jnp.float32),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=('parallel', 'parallel', 'arbitrary'),
+        ),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), window.astype(jnp.int32),
+      block_tables.astype(jnp.int32), q, c_pages)
 
 
 @functools.partial(jax.jit,
@@ -589,6 +697,37 @@ def flash_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
                                  interpret=interpret)
     out = out.reshape(b, h, dh).astype(v_pages.dtype)
     return out[:, None] if squeeze else out
+
+
+def flash_decode_paged_mla(q: jnp.ndarray, c_pages: jnp.ndarray,
+                           pos: jnp.ndarray, block_tables: jnp.ndarray, *,
+                           r: int, scale: float, window=None,
+                           interpret=None) -> jnp.ndarray:
+    """Shape-flexible wrapper around :func:`flash_decode_mla_paged`.
+
+    q: (B, 1, H, r + d_rope) or (B, H, r + d_rope) — the absorbed+rope
+    query; c_pages: (P, page_size, r + d_rope) latent pool; pos: scalar or
+    (B,); block_tables: (B, W) int32; ``r``: static latent rank.
+
+    Returns the latent-space attention output shaped like q with last dim
+    ``r``, in f32 (the caller applies ``W_uv`` once and converts — the MLA
+    analogue of the single output conversion).
+    """
+    had_q_axis = q.ndim == 4
+    if had_q_axis:
+        assert q.shape[1] == 1, q.shape
+    else:
+        q = q[:, None]               # (B, H, dk) -> (B, 1, H, dk)
+    b = q.shape[0]
+    s_logical = block_tables.shape[1] * c_pages.shape[1]
+    pos = _norm_scalar_vec(pos, b)
+    win = _norm_scalar_vec(window, b, fill=s_logical + 1)
+    if interpret is None:
+        from repro.kernels import ops
+        interpret = ops._interpret()
+    out = flash_decode_mla_paged(q, c_pages, pos, win, block_tables,
+                                 scale=scale, r=r, interpret=interpret)
+    return out if had_q_axis else out[:, 0]
 
 
 def flash_decode_paged_q8(q: jnp.ndarray, k_pages: jnp.ndarray,

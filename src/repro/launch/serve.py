@@ -19,7 +19,10 @@ Three serving shapes:
 ``--attn-impl flash`` routes the decode cache read through the fused
 Pallas flash-decode kernel (``kernels/flash_decode.py``) instead of the
 einsum oracle; under ``--continuous`` this is the scalar-prefetch paged
-kernel, so dead cache tiles are neither computed nor fetched.
+kernel, so dead cache tiles are neither computed nor fetched. MLA archs
+(deepseek-v3) serve ``--continuous`` through the paged *latent* pool
+(r + d_rope per token) and the absorbed ``flash_decode_paged_mla`` kernel;
+``--kv-quant`` stays GQA-only (latent-tier int8 is follow-up work).
 
 ``--sample`` (with ``--temperature`` / ``--top-k``) replaces greedy argmax
 with temperature/top-k sampling.
@@ -79,8 +82,11 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
                          f'{arch} is family={cfg.family}')
     if attn_impl == 'flash' and (cfg.mla is not None or cfg.family == 'ssm'):
         kind = 'MLA' if cfg.mla is not None else 'SSM'
-        raise ValueError(f'--attn-impl flash covers GQA decode only; '
-                         f'{arch} uses {kind} layers (see ROADMAP.md)')
+        hint = ('MLA flash decode is the paged kernel — serve it with '
+                '--continuous' if cfg.mla is not None else 'see ROADMAP.md')
+        raise ValueError(f'--attn-impl flash covers GQA decode on the '
+                         f'contiguous cache; {arch} uses {kind} layers '
+                         f'({hint})')
     yoco = YocoConfig(mode=mode)
     rt = ModelRuntime(attn_impl=attn_impl)
     max_seq = prompt_len + gen_len
@@ -365,11 +371,24 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
     rule (``hot_window >= max_blocks`` keeps everything fp — bit-exact
     with ``kv_quant=False``)."""
     cfg = configs.get(arch, smoke=smoke)
-    if cfg.family in ('ssm', 'hybrid') or cfg.mla is not None \
-            or cfg.input_kind != 'tokens':
-        raise ValueError(f'--continuous needs a token-input GQA KV cache; '
-                         f'{arch} is family={cfg.family} '
-                         f'input_kind={cfg.input_kind}')
+    # routing table (pinned by tests/test_serve_continuous.py): only
+    # genuinely stateless-position families are blocked — an SSM/hybrid
+    # decode state has no position to page behind. MLA pages its latent
+    # pool through the same block tables as GQA.
+    if cfg.family in ('ssm', 'hybrid') or cfg.hybrid_group:
+        raise ValueError(f'--continuous needs a per-position KV cache; '
+                         f'{arch} is family={cfg.family} (SSM/hybrid decode '
+                         f'state has no position to page behind — ROADMAP '
+                         f'open item)')
+    if cfg.input_kind != 'tokens':
+        raise ValueError(f'--continuous schedules token streams; {arch} '
+                         f'has input_kind={cfg.input_kind} (the stubbed '
+                         f'frontend cannot requeue/re-prefill non-token '
+                         f'prompts)')
+    if kv_quant and cfg.mla is not None:
+        raise ValueError(f'--kv-quant covers the GQA k/v pools; {arch} uses '
+                         f'MLA and latent-tier int8 is follow-up work '
+                         f'(serve it with the fp latent pool)')
     yoco = YocoConfig(mode=mode)
     rt = ModelRuntime(attn_impl=attn_impl)
     max_seq = prompt_len + gen_len

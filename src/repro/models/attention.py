@@ -24,6 +24,14 @@ Paged GQA: dict(k=(P, page_size, Hkv, dh), v=(P, page_size, Hkv, dh),
       ``bt`` key is the layout discriminator: caches carrying it route
       writes through the paged scatter and decode reads through
       ``flash_decode_paged`` (or the densified einsum oracle).
+Paged MLA: dict(cl=(P, page_size, r + d_rope), bt=(B, W) int32) — ONE
+      latent pool per layer (``ckv`` in the first r columns, ``krope`` in
+      the last d_rope; they are written together and scored together, so
+      splitting them would double the page bookkeeping for nothing). Same
+      ``bt`` discriminator and the exact same block-table contract as the
+      GQA pools; decode reads through ``flash_decode_paged_mla`` (or the
+      densified absorbed-einsum oracle). fp-only: latent-tier int8
+      (``kv_dtype='int8'``) is follow-up work and raises.
 Quantized paged GQA: the paged layout plus int8 pools ``kq``/``vq``,
       per-page per-head scales ``ks``/``vs`` (P, Hkv) and the hot-window
       knob ``hw`` (1,) — ``runtime.kv_quant``'s hybrid ReRAM–SRAM tier
@@ -118,11 +126,29 @@ def init_paged_cache(cfg, batch: int, *, num_pages: int, page_size: int,
     ``kv_dtype='int8'`` adds the hybrid-precision tier (``runtime.kv_quant``
     contract): int8 cold pools + per-page/per-head scales + the
     ``hot_window`` knob (in pages, >= 1; >= max_blocks disables the int8
-    tier). ``dtype`` stays the hot/fp tier's dtype."""
+    tier). ``dtype`` stays the hot/fp tier's dtype.
+
+    MLA configs get the latent layout instead: one ``cl`` pool of width
+    ``r + d_rope`` per layer (same block tables). The int8 tier does not
+    apply — ``kv_quant``'s hotness plumbing and scales are keyed to the
+    (Hkv, dh) K/V layout, and quantizing the latent would round *before*
+    the W_uk/W_uv expansion, a different error model that needs its own
+    validation — so ``kv_dtype='int8'`` raises rather than writing silent
+    garbage through the GQA-shaped tier."""
     if cfg.mla is not None:
-        raise NotImplementedError(
-            'paged cache covers GQA; MLA absorbed decode is ROADMAP open '
-            'item #3 (same block-table plumbing, latent pool)')
+        if kv_dtype not in (None, 'fp'):
+            raise ValueError(
+                f'kv_dtype={kv_dtype!r} is not supported for MLA paged '
+                f'caches: the int8 KV tier quantizes (Hkv, dh) K/V pages; '
+                f'latent-tier int8 (quantizing the (r + d_rope) latent '
+                f'before the W_uk/W_uv expansion) is follow-up work — '
+                f'serve MLA with the fp latent pool')
+        m = cfg.mla
+        return dict(
+            cl=jnp.zeros((num_pages, page_size,
+                          m.kv_lora_rank + m.rope_head_dim), dtype),
+            bt=jnp.zeros((batch, max_blocks), jnp.int32),
+        )
     hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
     cache = dict(
         k=jnp.zeros((num_pages, page_size, hkv, dh), dtype),
@@ -434,7 +460,16 @@ def mla_attention(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
     q_nope, q_rope, k_nope, krope, v, ckv = _mla_qkv_full(
         p, x, cfg, yoco, positions)
     new_cache = None
-    if cache is not None:
+    if cache is not None and 'bt' in cache:
+        from repro.runtime import kv_cache as kvc
+        # paged latent prefill: ckv and krope scatter as ONE row per token
+        new_cache = dict(
+            cache,
+            cl=kvc.paged_prefill_update(
+                cache['cl'], jnp.concatenate([ckv, krope], axis=-1),
+                cache['bt']),
+        )
+    elif cache is not None:
         new_cache = dict(
             ckv=jax.lax.dynamic_update_slice(
                 cache['ckv'], ckv.astype(cache['ckv'].dtype), (0, 0, 0)),
@@ -497,8 +532,31 @@ def _mla_sdpa_latent_2d(q_nope, q_rope, ckv, krope, w_ukv, cfg, rt, s):
     )(q_nope, q_rope, ckv, krope, w_ukv)
 
 
+def mla_absorbed_attend(q_lat: jnp.ndarray, q_rope: jnp.ndarray,
+                        ckv: jnp.ndarray, krope: jnp.ndarray, pos,
+                        scale: float) -> jnp.ndarray:
+    """Absorbed latent-space decode attention core — THE einsum oracle the
+    paged MLA flash kernel is validated against (tests and benchmarks call
+    this exact function, not a re-assembled copy).
+
+    q_lat: (B, 1, H, r) — q_nope already absorbed through W_uk;
+    q_rope: (B, 1, H, d_rope); ckv/krope: (B, S, r) / (B, S, d_rope) dense
+    latent views; pos scalar or (B,). Math runs in f32 (latent scores carry
+    r-deep dot products); returns the (B, 1, H, r) latent output, BEFORE
+    the W_uv up-projection."""
+    lo = jnp.einsum('bqhr,bsr->bhqs', q_lat.astype(jnp.float32),
+                    ckv.astype(jnp.float32))
+    lo += jnp.einsum('bqhd,bsd->bhqs', q_rope.astype(jnp.float32),
+                     krope.astype(jnp.float32))
+    mask = decode_mask(pos, ckv.shape[1])
+    if jnp.ndim(pos) != 0:
+        mask = mask[:, None, None, :]               # lo is (b, h, q, s)
+    probs = jax.nn.softmax(lo * scale + mask, axis=-1)
+    return jnp.einsum('bhqs,bsr->bqhr', probs, ckv.astype(jnp.float32))
+
+
 def mla_attention_decode(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
-                         cache: dict, pos: jnp.ndarray,
+                         cache: dict, pos: jnp.ndarray, rt=None,
                          ) -> Tuple[jnp.ndarray, dict]:
     """Absorbed MLA decode: attention runs in the latent space.
 
@@ -509,7 +567,13 @@ def mla_attention_decode(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
     DeepSeek-V3 vs 2·128·128 = 32768 for naive GQA: the paper's 'keep it
     compressed until the last moment' on the memory side.
 
-    ``pos``: scalar int or (B,) vector of per-request absolute positions."""
+    ``pos``: scalar int or (B,) vector of per-request absolute positions.
+
+    Caches carrying ``bt`` use the paged latent layout (one ``cl`` pool);
+    ``rt.attn_impl == 'flash'`` then routes the read through
+    ``flash_decode_paged_mla`` (dead latent tiles neither computed nor
+    fetched), otherwise the densified :func:`mla_absorbed_attend` oracle
+    runs. Either way W_uv is applied once, outside the softmax loop."""
     m = cfg.mla
     b = x.shape[0]
     h = cfg.n_heads
@@ -528,8 +592,6 @@ def mla_attention_decode(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
     krope_t = dkv[..., m.kv_lora_rank:]
     krope_t = rope_mod.apply_rope(krope_t[:, :, None, :], positions,
                                   cfg.rope_theta)[:, :, 0, :]
-    ckv = _cache_update(cache['ckv'], ckv_t, pos)
-    krope = _cache_update(cache['krope'], krope_t, pos)
 
     # absorb W_uk into q: (b,1,h,dn) @ (r, h, dn) -> (b,1,h,r)
     w_ukv = p['w_ukv'].reshape(m.kv_lora_rank, h, m.nope_head_dim + m.v_head_dim)
@@ -537,17 +599,37 @@ def mla_attention_decode(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
     w_uv = w_ukv[..., m.nope_head_dim:]                    # (r, h, dv)
     q_lat = jnp.einsum('bqhd,rhd->bqhr', q_nope.astype(jnp.float32),
                        w_uk.astype(jnp.float32))
-    lo = jnp.einsum('bqhr,bsr->bhqs', q_lat, ckv.astype(jnp.float32))
-    lo += jnp.einsum('bqhd,bsd->bhqs', q_rope.astype(jnp.float32),
-                     krope.astype(jnp.float32))
-    scale = 1.0 / jnp.sqrt(float(m.nope_head_dim + m.rope_head_dim))
-    smax = ckv.shape[1]
-    mask = decode_mask(pos, smax)
-    if jnp.ndim(pos) != 0:
-        mask = mask[:, None, None, :]               # lo is (b, h, q, s)
-    probs = jax.nn.softmax(lo * scale + mask, axis=-1)
-    o_lat = jnp.einsum('bhqs,bsr->bqhr', probs, ckv.astype(jnp.float32))
+    # python float, not a traced jnp scalar: the flash kernel takes it as a
+    # static (hashable) argument
+    scale = 1.0 / float(m.nope_head_dim + m.rope_head_dim) ** 0.5
+    use_flash = (rt is not None
+                 and getattr(rt, 'attn_impl', 'einsum') == 'flash')
+
+    if 'bt' in cache:
+        from repro.kernels import flash_decode as fd
+        from repro.runtime import kv_cache as kvc
+        r = m.kv_lora_rank
+        posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+        cl = kvc.paged_token_update(
+            cache['cl'], jnp.concatenate([ckv_t, krope_t], axis=-1), posv,
+            cache['bt'])
+        new_cache = dict(cache, cl=cl)
+        if use_flash:
+            o_lat = fd.flash_decode_paged_mla(
+                jnp.concatenate([q_lat, q_rope.astype(jnp.float32)], -1),
+                cl, posv, cache['bt'], r=r, scale=scale)
+        else:
+            # absorbed einsum oracle on the paged layout: densify, attend
+            dense = kvc.gather_pages(cl, cache['bt'])
+            o_lat = mla_absorbed_attend(q_lat, q_rope, dense[..., :r],
+                                        dense[..., r:], posv, scale)
+    else:
+        ckv = _cache_update(cache['ckv'], ckv_t, pos)
+        krope = _cache_update(cache['krope'], krope_t, pos)
+        new_cache = dict(ckv=ckv, krope=krope)
+        o_lat = mla_absorbed_attend(q_lat, q_rope, ckv, krope, pos, scale)
+
     out = jnp.einsum('bqhr,rhd->bqhd', o_lat, w_uv.astype(jnp.float32))
     out = out.reshape(b, 1, -1).astype(x.dtype)
     out = yoco_linear.linear(out, p['wo'], cfg=yoco)
-    return out, dict(ckv=ckv, krope=krope)
+    return out, new_cache

@@ -42,7 +42,8 @@ def _mix_attn(p, x, cfg, yoco, *, window, theta, cache, cache_pos,
     if cfg.mla is not None:
         if decode_pos is not None:
             return attn_mod.mla_attention_decode(p['attn'], x, cfg, yoco,
-                                                 cache=cache, pos=decode_pos)
+                                                 cache=cache, pos=decode_pos,
+                                                 rt=rt)
         return attn_mod.mla_attention(p['attn'], x, cfg, yoco, cache=cache,
                                       rt=rt)
     if decode_pos is not None:

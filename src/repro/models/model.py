@@ -369,10 +369,11 @@ def init_paged_cache_tree(cfg, batch: int, *, num_pages: int,
     ``kv_dtype='int8'`` builds the hybrid-precision tier layout
     (``runtime.kv_quant``): per-layer int8 pools + scale leaves and the
     per-layer-broadcast ``hw`` hot-window knob, alongside the fp pools.
+    MLA configs get one latent ``cl`` pool per layer instead of k/v pairs
+    (fp-only — latent-tier int8 raises; see ``attention.init_paged_cache``).
 
     Attention-cache families only: an SSM/hybrid decode state has no
-    position to page behind (ROADMAP open item), and MLA's latent pool is
-    open item #3."""
+    position to page behind (ROADMAP open item)."""
     if cfg.family in ('ssm', 'hybrid') or cfg.hybrid_group:
         raise NotImplementedError(
             f'paged KV cache needs an attention cache; family={cfg.family}')

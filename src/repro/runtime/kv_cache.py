@@ -10,6 +10,13 @@ shared by every request. A request's logical key positions
 scalar-prefetch operands ``kernels.flash_decode.flash_decode_paged``
 consumes, so live keys stay dense no matter how fragmented the pool is.
 
+The pure pool ops below are generic over the per-position payload — they
+only index ``(page, row)`` and carry whatever trailing dims the pool has.
+GQA pools are ``(P, page_size, Hkv, dh)``; MLA latent pools are
+``(P, page_size, r + d_rope)`` (one row = one token's concatenated
+``ckv``/``krope`` latent, consumed by ``flash_decode_paged_mla``). The
+allocator never sees the payload shape at all.
+
 Page 0 is the reserved *garbage page*: it is never allocated, idle slots'
 block tables point at it (all-zero rows), and clamped out-of-range writes
 land there. Reads from it are always masked (idle slots decode at pos=0
@@ -120,9 +127,11 @@ def paged_token_update(pool: jnp.ndarray, t: jnp.ndarray, pos: jnp.ndarray,
                        block_tables: jnp.ndarray) -> jnp.ndarray:
     """Write one decode-step K/V slab into the paged pool.
 
-    pool: (P, page_size, Hkv, dh); t: (B, 1, Hkv, dh); pos: (B,) int32;
-    block_tables: (B, W). Returns the updated pool. Slots whose table rows
-    are all GARBAGE_PAGE write into page 0 (masked on read)."""
+    pool: (P, page_size, ...); t: (B, 1, ...); pos: (B,) int32;
+    block_tables: (B, W). Trailing dims are opaque ((Hkv, dh) for GQA,
+    (r + d_rope,) for the MLA latent pool). Returns the updated pool.
+    Slots whose table rows are all GARBAGE_PAGE write into page 0 (masked
+    on read)."""
     ps = pool.shape[1]
     pos = jnp.asarray(pos, jnp.int32).reshape(-1)
     blk = pos // ps
@@ -134,7 +143,8 @@ def paged_prefill_update(pool: jnp.ndarray, t: jnp.ndarray,
                          block_tables: jnp.ndarray) -> jnp.ndarray:
     """Write a whole prompt's K/V rows into the paged pool.
 
-    pool: (P, page_size, Hkv, dh); t: (B, Sp, Hkv, dh);
+    pool: (P, page_size, ...); t: (B, Sp, ...) (trailing dims opaque, same
+    as :func:`paged_token_update`);
     block_tables: (B, W) with W * page_size >= Sp. Row l of request b goes
     to page block_tables[b, l // page_size] — allocate ceil(Sp/page_size)
     blocks before prefilling (padded tail rows land in owned pages and are

@@ -17,11 +17,12 @@ def test_bench_decode_smoke_writes_parity_checked_json(tmp_path):
     assert on_disk['smoke'] is True
     names = {r['name'] for r in on_disk['rows']}
     assert {'einsum_oracle', 'flash_streamed', 'flash_prefetch',
-            'flash_paged'} <= names
-    # every flash flavour parity-checked against the oracle (run() already
-    # asserts; re-check the artifact so a silent tolerance edit fails here)
+            'flash_paged', 'mla_einsum_oracle', 'mla_flash_paged'} <= names
+    # every flash flavour parity-checked against its family's oracle
+    # (run() already asserts; re-check the artifact so a silent tolerance
+    # edit fails here)
     for row in result['rows']:
-        if row['name'] != 'einsum_oracle':
+        if not row['name'].endswith('einsum_oracle'):
             assert row['max_abs_err_vs_oracle'] < bench_decode.PARITY_ATOL
     # both requested cache lengths present
     assert {r['s_max'] for r in on_disk['rows']} == set(

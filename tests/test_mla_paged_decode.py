@@ -1,0 +1,332 @@
+"""Absorbed MLA flash decode over the paged latent pool
+(kernels/flash_decode.py::flash_decode_paged_mla + the latent-pool cache
+layout): oracle-parity grid, layer/model integration, and the negative
+paths that must fail loudly.
+
+The parity harness is three-way:
+
+  * ``flash_decode_paged_mla`` — the scalar-prefetch Pallas kernel over a
+    deliberately fragmented latent pool;
+  * ``mla_absorbed_attend`` — the absorbed einsum oracle (the production
+    einsum decode path, verbatim);
+  * a *non-absorbed* materialized-attention reference that expands per-head
+    K/V through W_uk/W_uv before attending — algebraically identical to the
+    absorbed form, associated differently.
+
+Documented tolerances (the ``test_kv_quant.py`` convention):
+
+  * kernel vs absorbed oracle: same f32 data path, different accumulation
+    order (online softmax vs one softmax) — rtol/atol 2e-5 on f32 latents.
+  * absorbed vs non-absorbed: the same product associated differently
+    ((q @ W_uk) · ckv vs q · (W_uk^T ckv)); f32 roundoff is amplified by
+    the latent-rank-deep dot products — rtol/atol 1e-3 on smoke shapes.
+  * end-of-model logits, paged tree vs contiguous tree: rtol/atol 2e-2
+    (bf16 pools, matching test_kv_cache.py's model-level bound).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import MLAConfig
+from repro.core.yoco_linear import DEFAULT_YOCO
+from repro.kernels import flash_decode as fd
+from repro.models import attention as A
+from repro.models import model as M
+from repro.models.model import ModelRuntime
+from repro.runtime import kv_cache as kvc
+
+KERNEL_ATOL = 2e-5          # kernel vs absorbed oracle (f32 latents)
+ABSORB_ATOL = 1e-3          # absorbed vs non-absorbed association
+MODEL_ATOL = 2e-2           # end-of-model logits, bf16 paged tree
+
+RT_FLASH = ModelRuntime(attn_impl='flash')
+
+_DEEPSEEK = configs.get('deepseek-v3-671b', smoke=True)
+# second smoke MLA config: different head count and deliberately unequal
+# nope/v head dims so a nope/v (or r/d_rope) index mixup cannot cancel out
+_MLA_NARROW = dataclasses.replace(
+    _DEEPSEEK, name='mla-narrow-smoke', n_heads=2,
+    mla=MLAConfig(kv_lora_rank=24, q_lora_rank=16, rope_head_dim=4,
+                  nope_head_dim=8, v_head_dim=12))
+MLA_CFGS = [_DEEPSEEK, _MLA_NARROW]
+MLA_IDS = [c.name for c in MLA_CFGS]
+
+
+def _shuffled_latent_pool(key, b, w, ps, r, dr, dtype=jnp.float32):
+    """Random dense latents scattered into a fragmented (shuffled,
+    non-contiguous) pool — the layout continuous batching serves from.
+    Returns (pool, bt, ckv_dense, krope_dense)."""
+    s = w * ps
+    ckv = jax.random.normal(jax.random.fold_in(key, 1), (b, s, r))
+    krope = jax.random.normal(jax.random.fold_in(key, 2), (b, s, dr))
+    perm = np.random.RandomState(0).permutation(np.arange(1, b * w + 1))
+    bt = jnp.asarray(perm.reshape(b, w).astype(np.int32))
+    pool = kvc.scatter_pages(jnp.zeros((b * w + 1, ps, r + dr), dtype),
+                             jnp.concatenate([ckv, krope], -1), bt)
+    return pool, bt, ckv, krope
+
+
+def _materialized_mla_decode(q_nope, q_rope, ckv, krope, w_uk, w_uv, pos,
+                             scale):
+    """NON-absorbed reference: expand per-head K/V from the latent through
+    W_uk/W_uv, then attend — the prefill-style data path, run at decode."""
+    k_nope = jnp.einsum('bsr,rhd->bshd', ckv, w_uk)
+    v = jnp.einsum('bsr,rhd->bshd', ckv, w_uv)
+    lo = jnp.einsum('bqhd,bshd->bhqs', q_nope, k_nope)
+    lo += jnp.einsum('bqhd,bsd->bhqs', q_rope, krope)
+    mask = A.decode_mask(pos, ckv.shape[1])
+    if jnp.ndim(pos) != 0:
+        mask = mask[:, None, None, :]
+    probs = jax.nn.softmax(lo * scale + mask, axis=-1)
+    return jnp.einsum('bhqs,bshd->bqhd', probs, v)
+
+
+# ----------------------------------------------------------------------------
+# kernel-level parity grid
+# ----------------------------------------------------------------------------
+# W=4 pages of 8 positions (s_logical=32): every case is multi-tile, so the
+# dead-tile index-map clamp onto the garbage page is load-bearing
+@pytest.mark.parametrize('cfg', MLA_CFGS, ids=MLA_IDS)
+@pytest.mark.parametrize(
+    'name,pos',
+    [
+        # pos=0: only the first latent row is live; 3 of 4 pages are dead
+        ('pos0', [0, 0]),
+        # last position of a page (kpos=7 is the final row of page 0)
+        ('page_end', [7, 15]),
+        # first position of a page (the boundary the clamp must not drop)
+        ('page_boundary', [8, 16]),
+        # mid-page, unaligned to anything
+        ('unaligned', [13, 29]),
+        # ragged extremes in one batch: full cache next to a fresh request
+        ('ragged_full_vs_fresh', [31, 0]),
+    ])
+def test_mla_kernel_parity_grid(cfg, name, pos):
+    """Paged flash kernel vs absorbed einsum oracle vs non-absorbed
+    materialized attention, over ragged per-request positions."""
+    m = cfg.mla
+    r, dr, dn, dv, h = (m.kv_lora_rank, m.rope_head_dim, m.nope_head_dim,
+                        m.v_head_dim, cfg.n_heads)
+    b, w, ps = len(pos), 4, 8
+    key = jax.random.key(len(name))
+    pool, bt, ckv, krope = _shuffled_latent_pool(key, b, w, ps, r, dr)
+    q_nope = jax.random.normal(jax.random.fold_in(key, 3), (b, 1, h, dn))
+    q_rope = jax.random.normal(jax.random.fold_in(key, 4), (b, 1, h, dr))
+    w_uk = jax.random.normal(jax.random.fold_in(key, 5), (r, h, dn)) / r
+    w_uv = jax.random.normal(jax.random.fold_in(key, 6), (r, h, dv)) / r
+    pos = jnp.asarray(pos, jnp.int32)
+    scale = 1.0 / float(dn + dr) ** 0.5
+
+    q_lat = jnp.einsum('bqhd,rhd->bqhr', q_nope, w_uk)
+    o_lat = A.mla_absorbed_attend(q_lat, q_rope, ckv, krope, pos, scale)
+    want = jnp.einsum('bqhr,rhd->bqhd', o_lat, w_uv)
+
+    got_lat = fd.flash_decode_paged_mla(
+        jnp.concatenate([q_lat, q_rope], -1), pool, pos, bt, r=r,
+        scale=scale, interpret=True)
+    # kernel vs absorbed oracle: identical data path, f32 roundoff only
+    np.testing.assert_allclose(np.asarray(got_lat), np.asarray(o_lat),
+                               rtol=KERNEL_ATOL, atol=KERNEL_ATOL)
+    got = jnp.einsum('bqhr,rhd->bqhd', got_lat, w_uv)
+    # W_uv applied outside the loop: full outputs agree the same way
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=KERNEL_ATOL, atol=KERNEL_ATOL)
+    # absorbed vs non-absorbed: same product, different association
+    mat = _materialized_mla_decode(q_nope, q_rope, ckv, krope, w_uk, w_uv,
+                                   pos, scale)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(mat),
+                               rtol=ABSORB_ATOL, atol=ABSORB_ATOL)
+
+
+def test_mla_kernel_scalar_pos_broadcast():
+    """Scalar pos broadcasts over the batch like the GQA wrappers."""
+    m = _DEEPSEEK.mla
+    r, dr, h = m.kv_lora_rank, m.rope_head_dim, _DEEPSEEK.n_heads
+    b, w, ps = 2, 3, 8
+    key = jax.random.key(11)
+    pool, bt, ckv, krope = _shuffled_latent_pool(key, b, w, ps, r, dr)
+    q = jax.random.normal(jax.random.fold_in(key, 3), (b, 1, h, r + dr))
+    scale = 1.0 / float(m.nope_head_dim + dr) ** 0.5
+    got = fd.flash_decode_paged_mla(q, pool, jnp.int32(9), bt, r=r,
+                                    scale=scale, interpret=True)
+    want = A.mla_absorbed_attend(q[..., :r], q[..., r:], ckv, krope,
+                                 jnp.int32(9), scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=KERNEL_ATOL, atol=KERNEL_ATOL)
+
+
+def test_mla_kernel_garbage_page_isolated():
+    """A request whose table row beyond its live blocks points at the
+    garbage page must read only its own latents (poisoned page 0)."""
+    m = _DEEPSEEK.mla
+    r, dr, h = m.kv_lora_rank, m.rope_head_dim, 4
+    b, w, ps = 2, 4, 8
+    key = jax.random.key(12)
+    pool, bt, ckv, krope = _shuffled_latent_pool(key, b, w, ps, r, dr)
+    pool = pool.at[kvc.GARBAGE_PAGE].set(1e9)       # poison page 0
+    # request 1's last two blocks are unallocated (garbage page)
+    bt = bt.at[1, 2:].set(kvc.GARBAGE_PAGE)
+    pos = jnp.array([w * ps - 1, 2 * ps - 1], jnp.int32)
+    q = jax.random.normal(jax.random.fold_in(key, 3), (b, 1, h, r + dr))
+    scale = 1.0 / float(m.nope_head_dim + dr) ** 0.5
+    got = fd.flash_decode_paged_mla(q, pool, pos, bt, r=r, scale=scale,
+                                    interpret=True)
+    want = A.mla_absorbed_attend(q[..., :r], q[..., r:], ckv, krope, pos,
+                                 scale)
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]),
+                               rtol=KERNEL_ATOL, atol=KERNEL_ATOL)
+    assert bool(jnp.all(jnp.isfinite(got)))
+
+
+# ----------------------------------------------------------------------------
+# attention layer: paged latent cache vs contiguous, writes, prefill
+# ----------------------------------------------------------------------------
+@pytest.mark.parametrize('impl', ['einsum', 'flash'])
+@pytest.mark.parametrize('cfg', MLA_CFGS, ids=MLA_IDS)
+def test_mla_attention_decode_paged_matches_contiguous(cfg, impl):
+    """Full MLA layer (projections + rope + absorbed read) over the paged
+    latent pool vs the contiguous latent cache, ragged positions; the
+    decode write must land in the right page rows."""
+    m = cfg.mla
+    p = A.init_mla(jax.random.key(10), cfg)
+    x = jax.random.normal(jax.random.key(11), (3, 9, cfg.d_model))
+    cache = dict(ckv=jnp.zeros((3, 16, m.kv_lora_rank), jnp.float32),
+                 krope=jnp.zeros((3, 16, m.rope_head_dim), jnp.float32))
+    _, cache = A.mla_attention(p, x[:, :8], cfg, DEFAULT_YOCO, cache=cache)
+    kv = kvc.PagedKVCache(num_pages=3 * 4 + 1, page_size=4, max_blocks=4,
+                          slots=3)
+    for s in range(3):
+        assert kv.alloc_blocks(s, 4)
+    paged = A.init_paged_cache(cfg, 3, num_pages=13, page_size=4,
+                               max_blocks=4, dtype=jnp.float32)
+    paged = dict(paged, bt=kv.table_array())
+    # paged prefill through the SAME layer entry point
+    _, paged = A.mla_attention(p, x[:, :8], cfg, DEFAULT_YOCO, cache=paged)
+    pos = jnp.array([8, 5, 3], jnp.int32)
+    y_ref, cc = A.mla_attention_decode(p, x[:, 8:9], cfg, DEFAULT_YOCO,
+                                       cache=cache, pos=pos)
+    y_paged, cp = A.mla_attention_decode(p, x[:, 8:9], cfg, DEFAULT_YOCO,
+                                         cache=paged, pos=pos,
+                                         rt=ModelRuntime(attn_impl=impl))
+    np.testing.assert_allclose(np.asarray(y_paged, np.float32),
+                               np.asarray(y_ref, np.float32), atol=1e-4)
+    assert set(cp) == {'cl', 'bt'}
+    # the decode write landed in the right page rows (both latent halves)
+    dense = kvc.gather_pages(cp['cl'], cp['bt'])[:, :16]
+    np.testing.assert_allclose(np.asarray(dense[..., :m.kv_lora_rank]),
+                               np.asarray(cc['ckv']), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(dense[..., m.kv_lora_rank:]),
+                               np.asarray(cc['krope']), atol=1e-6)
+
+
+def test_mla_paged_decode_vector_pos_matches_scalar():
+    """(B,) pos vector over the paged pool == each request alone at its
+    scalar pos (the heterogeneous-position serving contract)."""
+    cfg = _DEEPSEEK
+    p = A.init_mla(jax.random.key(20), cfg)
+    x = jax.random.normal(jax.random.key(21), (2, 7, cfg.d_model))
+    kv = kvc.PagedKVCache(num_pages=2 * 3 + 1, page_size=4, max_blocks=3,
+                          slots=2)
+    for s in range(2):
+        assert kv.alloc_blocks(s, 3)
+    paged = A.init_paged_cache(cfg, 2, num_pages=7, page_size=4,
+                               max_blocks=3, dtype=jnp.float32)
+    paged = dict(paged, bt=kv.table_array())
+    _, paged = A.mla_attention(p, x[:, :6], cfg, DEFAULT_YOCO, cache=paged)
+    pos = jnp.array([6, 4], jnp.int32)
+    y_vec, _ = A.mla_attention_decode(p, x[:, 6:7], cfg, DEFAULT_YOCO,
+                                      cache=paged, pos=pos, rt=RT_FLASH)
+    for b in range(2):
+        sub = dict(cl=paged['cl'], bt=paged['bt'][b:b + 1])
+        y_b, _ = A.mla_attention_decode(p, x[b:b + 1, 6:7], cfg,
+                                        DEFAULT_YOCO, cache=sub,
+                                        pos=jnp.int32(int(pos[b])),
+                                        rt=RT_FLASH)
+        np.testing.assert_allclose(np.asarray(y_vec[b:b + 1], np.float32),
+                                   np.asarray(y_b, np.float32),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------------------
+# model-level: the scanned deepseek stack over the paged latent tree
+# ----------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize('impl', ['einsum', 'flash'])
+def test_model_decode_step_mla_paged_matches_contiguous(impl):
+    """Full deepseek decode_step (MoE + dense prefix + MLA layers) over
+    the paged latent cache tree vs the contiguous tree: same greedy
+    tokens, logits within the documented bf16 model-level bound."""
+    cfg = _DEEPSEEK
+    params = M.init_params(jax.random.key(0), cfg)
+    b, prompt, ps, w = 2, 8, 4, 4
+    toks = jax.random.randint(jax.random.key(1), (b, prompt), 0,
+                              cfg.vocab_size)
+    kv = kvc.PagedKVCache(num_pages=b * w + 1, page_size=ps, max_blocks=w,
+                          slots=b)
+    for s in range(b):
+        assert kv.alloc_blocks(s, w)
+    ref_cache = M.init_cache_tree(cfg, b, w * ps)
+    paged_cache = M.init_paged_cache_tree(cfg, b, num_pages=b * w + 1,
+                                          page_size=ps, max_blocks=w)
+    paged_cache = kvc.with_block_tables(paged_cache, kv.table_array())
+    lens = jnp.array([prompt, prompt - 3], jnp.int32)
+    rt = ModelRuntime(attn_impl=impl)
+    l_ref, ref_cache = M.prefill(params, dict(inputs=toks), ref_cache, cfg,
+                                 last_pos=lens - 1)
+    l_paged, paged_cache = M.prefill(params, dict(inputs=toks), paged_cache,
+                                     cfg, last_pos=lens - 1)
+    np.testing.assert_allclose(np.asarray(l_paged, np.float32),
+                               np.asarray(l_ref, np.float32),
+                               rtol=MODEL_ATOL, atol=MODEL_ATOL)
+    tok = jnp.array([3, 5], jnp.int32)
+    for step in range(2):
+        pos = lens + step
+        l_ref, ref_cache = M.decode_step(params, tok, pos, ref_cache, cfg)
+        l_paged, paged_cache = M.decode_step(params, tok, pos, paged_cache,
+                                             cfg, rt=rt)
+        np.testing.assert_allclose(np.asarray(l_paged, np.float32),
+                                   np.asarray(l_ref, np.float32),
+                                   rtol=MODEL_ATOL, atol=MODEL_ATOL)
+        tok = jnp.argmax(l_ref, -1).astype(jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(tok), np.asarray(jnp.argmax(l_paged, -1)))
+
+
+# ----------------------------------------------------------------------------
+# negative paths: fail loudly, never silently
+# ----------------------------------------------------------------------------
+def test_mla_paged_cache_rejects_int8_tier():
+    """MLA + kv_dtype='int8' must raise a clear ValueError at every entry
+    point (latent tiering is follow-up work, not silent garbage through
+    the GQA-shaped tier)."""
+    with pytest.raises(ValueError, match='latent-tier int8'):
+        A.init_paged_cache(_DEEPSEEK, 2, num_pages=9, page_size=4,
+                           max_blocks=4, kv_dtype='int8')
+    with pytest.raises(ValueError, match='latent-tier int8'):
+        M.init_paged_cache_tree(_DEEPSEEK, 2, num_pages=9, page_size=4,
+                                max_blocks=4, kv_dtype='int8')
+    # fp spellings still work
+    assert 'cl' in A.init_paged_cache(_DEEPSEEK, 2, num_pages=9,
+                                      page_size=4, max_blocks=4,
+                                      kv_dtype='fp')
+
+
+def test_paged_prefill_overflow_holds_for_latent_layout():
+    """paged_prefill_update's loud-overflow contract is layout-generic:
+    a 3D latent pool rejects prompts beyond the table exactly like the 4D
+    GQA pools (and in-capacity latent prefill round-trips)."""
+    ps, w, b, dk = 4, 2, 1, 12
+    pool = jnp.zeros((4, ps, dk))
+    with pytest.raises(ValueError, match='exceeds the block-table'):
+        kvc.paged_prefill_update(pool, jnp.ones((b, w * ps + 1, dk)),
+                                 jnp.zeros((b, w), jnp.int32))
+    # exactly-at-capacity latent prefill lands row-for-row
+    bt = jnp.array([[2, 1]], jnp.int32)
+    t = jax.random.normal(jax.random.key(0), (b, w * ps, dk))
+    got = kvc.gather_pages(kvc.paged_prefill_update(pool, t, bt), bt)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(t))

@@ -19,13 +19,16 @@ from repro.models.model import ModelRuntime
 from repro.runtime import serve_step as SS
 
 ARCH = 'stablelm-1.6b'
+# the MLA member of the grid: continuous batching over the paged LATENT
+# pool (deepseek-v3 smoke = MLA + MoE + dense prefix)
+MLA_ARCH = 'deepseek-v3-671b'
 
 
-@functools.lru_cache(maxsize=1)
-def _reference_model():
+@functools.lru_cache(maxsize=2)
+def _reference_model(arch=ARCH):
     """Shared across reference decodes: params + jitted steps are identical
     for every request (same cfg, same shapes)."""
-    cfg = configs.get(ARCH, smoke=True)
+    cfg = configs.get(arch, smoke=True)
     yoco, rt = YocoConfig(mode='bf16'), ModelRuntime()
     params = model_mod.init_params(jax.random.key(0), cfg)
     prefill = jax.jit(SS.make_prefill_step(cfg, yoco, rt))
@@ -33,10 +36,10 @@ def _reference_model():
     return cfg, params, prefill, decode
 
 
-def _reference_tokens(req, prompt_len, gen_len):
+def _reference_tokens(req, prompt_len, gen_len, arch=ARCH):
     """Greedy-decode one request alone through the contiguous einsum path:
     the oracle the continuous scheduler must reproduce token-for-token."""
-    cfg, params, prefill, decode = _reference_model()
+    cfg, params, prefill, decode = _reference_model(arch)
     cache = model_mod.init_cache_tree(cfg, 1, prompt_len + gen_len)
     pad = np.zeros((1, prompt_len), np.int32)
     pad[0, :len(req.prompt)] = req.prompt
@@ -52,38 +55,64 @@ def _reference_tokens(req, prompt_len, gen_len):
     return toks
 
 
-def test_continuous_serve_matches_single_request_reference():
-    """5 ragged requests over 2 slots (forced re-admission) with a pool
-    tight enough to queue: every emitted token must equal the request's
-    solo contiguous-decode tokens."""
-    prompt_len, gen_len, n = 16, 8, 5
-    out = SV.serve_continuous(ARCH, slots=2, n_requests=n,
+def _solo_vs_continuous(arch, *, n=5, prompt_len=16, gen_len=8):
+    """Token-for-token solo-vs-continuous parity over a contended stream
+    (slots < requests forces eviction + re-admission waves)."""
+    out = SV.serve_continuous(arch, slots=2, n_requests=n,
                               prompt_len=prompt_len, gen_len=gen_len,
                               page_size=4, attn_impl='einsum', quiet=True)
     assert out['completed'] == n
     assert out['steps'] > gen_len          # slots < requests => multiple waves
     if out['decode_compilations'] is not None:
         assert out['decode_compilations'] == 1   # no retrace across churn
-    cfg = configs.get(ARCH, smoke=True)
+    cfg = configs.get(arch, smoke=True)
     dc = synthetic.for_arch(cfg, global_batch=n, seq_len=prompt_len)
     prompts = np.asarray(synthetic.make_batch(dc, 0)['inputs'])
     for req in SV._ragged_stream(n, prompt_len, gen_len, prompts):
-        want = _reference_tokens(req, prompt_len, gen_len)
+        want = _reference_tokens(req, prompt_len, gen_len, arch)
         assert out['outputs'][req.rid] == want, (req.rid,
                                                  out['outputs'][req.rid],
                                                  want)
 
 
-def test_continuous_serve_preemption_is_lossless():
-    """A pool too small for all lanes preempts-and-requeues; the final
-    token streams must be identical to an uncontended run."""
+def test_continuous_serve_matches_single_request_reference():
+    """5 ragged requests over 2 slots (forced re-admission) with a pool
+    tight enough to queue: every emitted token must equal the request's
+    solo contiguous-decode tokens."""
+    _solo_vs_continuous(ARCH)
+
+
+@pytest.mark.slow
+def test_continuous_serve_matches_single_request_reference_mla():
+    """The same token-for-token contract on the MLA family: deepseek-v3
+    smoke over the paged latent pool (one cl pool per layer, same block
+    tables) must reproduce each request's solo contiguous absorbed
+    decode exactly."""
+    _solo_vs_continuous(MLA_ARCH, n=4, gen_len=6)
+
+
+def _preemption_is_lossless(arch, tight_pages):
     kwargs = dict(slots=3, n_requests=5, prompt_len=16, gen_len=8,
                   page_size=4, attn_impl='einsum', quiet=True)
-    tight = SV.serve_continuous(ARCH, num_pages=9, **kwargs)
-    roomy = SV.serve_continuous(ARCH, num_pages=None, **kwargs)
+    tight = SV.serve_continuous(arch, num_pages=tight_pages, **kwargs)
+    roomy = SV.serve_continuous(arch, num_pages=None, **kwargs)
     assert tight['preempted'] > 0
     assert tight['outputs'] == roomy['outputs']
     assert tight['completed'] == roomy['completed'] == 5
+    return tight
+
+
+def test_continuous_serve_preemption_is_lossless():
+    """A pool too small for all lanes preempts-and-requeues; the final
+    token streams must be identical to an uncontended run."""
+    _preemption_is_lossless(ARCH, 9)
+
+
+@pytest.mark.slow
+def test_continuous_serve_preemption_is_lossless_mla():
+    """Forced preemption + recompute re-admission on the paged LATENT
+    pool: deepseek token streams must survive the churn unchanged."""
+    _preemption_is_lossless(MLA_ARCH, 9)
 
 
 @pytest.mark.slow
@@ -97,9 +126,41 @@ def test_continuous_serve_flash_matches_einsum():
     assert a['outputs'] == b['outputs']
 
 
-def test_continuous_serve_rejects_ssm():
-    with pytest.raises(ValueError):
-        SV.serve_continuous('mamba2-780m', quiet=True)
+@pytest.mark.slow
+def test_continuous_serve_flash_matches_einsum_mla():
+    """flash_decode_paged_mla serves the same deepseek stream with the
+    same tokens as the densified absorbed-einsum oracle."""
+    kwargs = dict(slots=2, n_requests=3, prompt_len=16, gen_len=6,
+                  page_size=4, quiet=True)
+    a = SV.serve_continuous(MLA_ARCH, attn_impl='einsum', **kwargs)
+    b = SV.serve_continuous(MLA_ARCH, attn_impl='flash', **kwargs)
+    assert a['outputs'] == b['outputs']
+
+
+# ----------------------------------------------------------------------------
+# serving-mode routing table (pinned: which families reach which modes)
+# ----------------------------------------------------------------------------
+def test_continuous_serve_routing_table():
+    """--continuous admits every token-input attention-cache family (GQA
+    *and* MLA) and rejects exactly the stateless-position / non-token
+    ones, each with its own message — the gate must not lump MLA in with
+    SSM ever again."""
+    # blocked: no per-position KV cache to page
+    for arch in ('mamba2-780m', 'zamba2-1.2b'):
+        with pytest.raises(ValueError, match='no position to page'):
+            SV.serve_continuous(arch, quiet=True)
+    # blocked: non-token inputs can't requeue through the stub frontend
+    for arch in ('musicgen-large', 'qwen2-vl-72b'):
+        with pytest.raises(ValueError, match='token streams'):
+            SV.serve_continuous(arch, quiet=True)
+    # blocked: MLA + the int8 KV tier (latent tiering is follow-up work)
+    with pytest.raises(ValueError, match='latent-tier int8'):
+        SV.serve_continuous(MLA_ARCH, kv_quant=True, quiet=True)
+    # admitted: GQA and MLA both construct + drain an empty stream
+    for arch in (ARCH, MLA_ARCH):
+        out = SV.serve_continuous(arch, n_requests=0, prompt_len=8,
+                                  gen_len=4, page_size=4, quiet=True)
+        assert out['completed'] == 0
 
 
 # ----------------------------------------------------------------------------
