@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src:.$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test test-fast test-slow test-mla bench bench-smoke serve-demo check
+.PHONY: test test-fast test-slow test-mla test-layouts bench bench-smoke serve-demo check
 
 # tier-1: the full suite (what CI / the driver runs)
 test:
@@ -21,6 +21,12 @@ test-mla:
 	$(PY) -m pytest -q tests/test_mla_paged_decode.py \
 		tests/test_serve_continuous.py
 
+# the cache-layout registry parity grid: every flash kernel entrypoint vs
+# its own layout's densify oracle (incl. the int8 latent tier), the
+# layout-driven tree ops, and kv-quant serving under forced preemption
+test-layouts:
+	$(PY) -m pytest -q -m "layouts" tests/test_layouts.py
+
 bench:
 	$(PY) -m benchmarks.run
 
@@ -33,8 +39,10 @@ bench-smoke:
 	$(PY) -m benchmarks.bench_decode --smoke
 	$(PY) -m benchmarks.bench_kv_quant --smoke
 
-# the pre-push gate: fast tests + parity-asserted smoke benchmarks
-check: test-fast bench-smoke
+# the pre-push gate: fast tests + the layout-parity grid + parity-asserted
+# smoke benchmarks (test-fast already runs the non-slow layouts cells;
+# test-layouts adds the slow ones so the grid is complete pre-push)
+check: test-fast test-layouts bench-smoke
 
 serve-demo:
 	$(PY) examples/serve_decode.py

@@ -47,12 +47,11 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from benchmarks.common import emit, time_call
+from benchmarks import common
+from benchmarks.common import emit
 from repro.kernels import flash_decode as fd
 from repro.models import attention as A
-from repro.runtime import kv_cache as kvc
 
 B, HKV, G, DH = 4, 2, 4, 64
 SEQ_LENS = [8192, 32768]
@@ -69,26 +68,6 @@ DEFAULT_OUT = os.path.join(_ROOT, 'BENCH_decode.json')
 SMOKE_OUT = os.path.join(_ROOT, 'BENCH_decode.smoke.json')
 
 
-def _ragged_pos(s_max: int) -> jnp.ndarray:
-    """Per-request live lengths: one long-context straggler, the rest
-    short — mean ~2k at S_max=32k (the ISSUE's serving mix)."""
-    target_mean = max(s_max // 16, 8)
-    pos = [min(s_max - 1, 4 * target_mean - 3 * target_mean // 2),
-           target_mean, target_mean // 2, target_mean // 2]
-    return jnp.array(pos[:B], jnp.int32)
-
-
-def _paged_from_contiguous(k: jnp.ndarray, page_size: int, seed: int = 0):
-    """Scatter a (B, S, Hkv, dh) cache into a shuffled page pool + block
-    tables — non-contiguous on purpose, to price the real serving layout."""
-    b, s = k.shape[:2]
-    w = s // page_size
-    perm = np.random.RandomState(seed).permutation(np.arange(1, b * w + 1))
-    bt = jnp.asarray(perm.reshape(b, w).astype(np.int32))
-    pool = jnp.zeros((b * w + 1, page_size) + k.shape[2:], k.dtype)
-    return kvc.scatter_pages(pool, k, bt), bt
-
-
 def _bench_one(s_max: int, rows: list, interpret: bool) -> None:
     scale = 1.0 / DH ** 0.5
     key = jax.random.key(s_max)
@@ -99,9 +78,10 @@ def _bench_one(s_max: int, rows: list, interpret: bool) -> None:
                           (B, s_max, HKV, DH), jnp.float32)
     kc = k.astype(jnp.bfloat16)
     vc = v.astype(jnp.bfloat16)
-    pos = _ragged_pos(s_max)
-    kp, bt = _paged_from_contiguous(kc, PAGE_SIZE)
-    vp, _ = _paged_from_contiguous(vc, PAGE_SIZE)
+    pos = common.ragged_mean_positions(s_max, B)
+    bt = common.shuffled_block_tables(B, s_max // PAGE_SIZE)
+    kp = common.paged_pool_from_dense(kc, PAGE_SIZE, bt)
+    vp = common.paged_pool_from_dense(vc, PAGE_SIZE, bt)
 
     # caches are runtime operands, not jit closure constants: baking a
     # 33 MB cache into the executable would let XLA fold/relayout exactly
@@ -127,10 +107,7 @@ def _bench_one(s_max: int, rows: list, interpret: bool) -> None:
     }
     want = impls['einsum_oracle'][0](*impls['einsum_oracle'][1])
     for name, (fn, args) in impls.items():
-        t_us = time_call(fn, *args, n_iter=3)
-        got = fn(*args)
-        err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
-                                    - want.astype(jnp.float32))))
+        t_us, err = common.time_and_err(fn, args, want, n_iter=3)
         row = dict(name=name, s_max=s_max,
                    mean_live=float(jnp.mean(pos + 1)),
                    us_per_call=round(t_us, 2),
@@ -152,8 +129,9 @@ def _bench_mla_one(s_max: int, rows: list, interpret: bool,
     lat = jax.random.normal(jax.random.fold_in(key, 1),
                             (B, s_max, r + dr),
                             jnp.float32).astype(jnp.bfloat16)
-    cp, bt = _paged_from_contiguous(lat, PAGE_SIZE)
-    pos = _ragged_pos(s_max)
+    bt = common.shuffled_block_tables(B, s_max // PAGE_SIZE)
+    cp = common.paged_pool_from_dense(lat, PAGE_SIZE, bt)
+    pos = common.ragged_mean_positions(s_max, B)
 
     impls = {
         'mla_einsum_oracle': (jax.jit(
@@ -167,10 +145,7 @@ def _bench_mla_one(s_max: int, rows: list, interpret: bool,
     }
     want = impls['mla_einsum_oracle'][0](*impls['mla_einsum_oracle'][1])
     for name, (fn, args) in impls.items():
-        t_us = time_call(fn, *args, n_iter=3)
-        got = fn(*args)
-        err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
-                                    - want.astype(jnp.float32))))
+        t_us, err = common.time_and_err(fn, args, want, n_iter=3)
         row = dict(name=name, s_max=s_max,
                    mean_live=float(jnp.mean(pos + 1)),
                    n_heads=h, latent=r + dr,

@@ -1,12 +1,17 @@
-"""Shared benchmark scaffolding: timing helper + CSV row emission."""
+"""Shared benchmark scaffolding: timing, CSV row emission, and the
+shape/parity harness the decode-family benchmarks (``bench_decode``,
+``bench_kv_quant``) used to duplicate — ragged serving positions, shuffled
+paged-pool construction, and the time-and-compare step every impl row goes
+through."""
 
 from __future__ import annotations
 
-import sys
 import time
-from typing import Callable
+from typing import Callable, Tuple
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 ROWS = []
 
@@ -34,3 +39,55 @@ def time_call(fn: Callable, *args, n_warmup: int = 1, n_iter: int = 5,
 
 def header():
     print('name,us_per_call,derived')
+
+
+# ----------------------------------------------------------------------------
+# shared decode-benchmark shape harness
+# ----------------------------------------------------------------------------
+def ragged_mean_positions(s_max: int, b: int) -> jnp.ndarray:
+    """Per-request live lengths: one long-context straggler, the rest
+    short — mean ~2k at S_max=32k (bench_decode's serving mix)."""
+    target_mean = max(s_max // 16, 8)
+    pos = [min(s_max - 1, 4 * target_mean - 3 * target_mean // 2),
+           target_mean, target_mean // 2, target_mean // 2]
+    return jnp.array((pos * (1 + b // 4))[:b], jnp.int32)
+
+
+def straggler_positions(s_max: int, b: int) -> jnp.ndarray:
+    """One near-full-context straggler plus shorter requests
+    (bench_kv_quant's serving mix): the straggler is where a tier split
+    pays off."""
+    pos = [s_max - 1, s_max // 2, s_max // 16, s_max // 16]
+    return jnp.array((pos * (1 + b // 4))[:b], jnp.int32)
+
+
+def shuffled_block_tables(b: int, w: int, seed: int = 0) -> jnp.ndarray:
+    """(B, W) block tables over a (B*W + 1)-page pool, shuffled on purpose
+    (page 0 reserved for garbage) — the fragmented layout continuous
+    batching actually serves from."""
+    perm = np.random.RandomState(seed).permutation(np.arange(1, b * w + 1))
+    return jnp.asarray(perm.reshape(b, w).astype(np.int32))
+
+
+def paged_pool_from_dense(dense: jnp.ndarray, page_size: int,
+                          bt: jnp.ndarray) -> jnp.ndarray:
+    """Scatter a contiguous (B, S, ...) cache into a fresh page pool at
+    ``bt``'s pages. S must be a multiple of ``page_size``."""
+    from repro.runtime import kv_cache as kvc
+    b, s = dense.shape[:2]
+    pool = jnp.zeros((b * (s // page_size) + 1, page_size) + dense.shape[2:],
+                     dense.dtype)
+    return kvc.scatter_pages(pool, dense, bt)
+
+
+def time_and_err(fn: Callable, args: Tuple, want: jnp.ndarray, *,
+                 n_warmup: int = 1, n_iter: int = 3) -> Tuple[float, float]:
+    """One impl row: run once for parity (doubles as compile/warmup when
+    ``n_warmup=0``), time the median call, return (us_per_call,
+    max_abs_err vs ``want``)."""
+    got = jax.block_until_ready(fn(*args))
+    err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                - want.astype(jnp.float32))))
+    t_us = time_call(fn, *args, n_warmup=max(n_warmup - 1, 0),
+                     n_iter=n_iter)
+    return t_us, err

@@ -42,6 +42,11 @@ def main():
         # MLA: the paged LATENT pool (r + d_rope values/token) under the
         # absorbed flash_decode_paged_mla kernel — same scheduler
         ('deepseek-v3-671b', 'MLA paged latent pool', dict()),
+        # MLA + the latent int8 tier: cold cl pages quantize per-page
+        # absmax (before the W_uk/W_uv expansion) and stream through
+        # flash_decode_paged_mla_q8 — the layout registry routes it
+        ('deepseek-v3-671b', 'MLA latent int8 tier, hot_window=2',
+         dict(kv_quant=True, hot_window=2)),
     ]:
         print(f'=== {arch} continuous ({label}) ===')
         out = serve.serve_continuous(

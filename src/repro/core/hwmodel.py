@@ -280,15 +280,30 @@ def decode_kv_traffic(s_live: int, *, n_heads: int, n_kv_heads: int,
     8-bit in-situ multiply (cold tier operands are already int8 — the
     whole point of storing the bulk tier in the array's native precision).
     """
+    return _tiered_traffic(
+        s_live, page_size=page_size, hot_window=hot_window,
+        fp_bytes=fp_bytes, tier=tier,
+        elems_per_block=page_size * n_kv_heads * head_dim * 2,  # K and V
+        cold_scale_bytes_per_block=n_kv_heads * 2 * tier.scale_bytes,
+        ops=4.0 * n_heads * s_live * head_dim)
+
+
+def _tiered_traffic(s_live: int, *, page_size: int, hot_window: int,
+                    fp_bytes: int, tier: KVTierConfig,
+                    elems_per_block: int, cold_scale_bytes_per_block: float,
+                    ops: float) -> Dict[str, float]:
+    """The one tier-pricing core behind :func:`decode_kv_traffic` and
+    :func:`decode_latent_traffic`: hot/cold block split per the hotness
+    rule, bytes per tier, and the memory+compute energy model. Layouts
+    differ only in what one block carries (``elems_per_block``), the cold
+    tier's per-page scale overhead, and the attention op count."""
     n_blocks = math.ceil(s_live / page_size)
     hot_blocks = min(max(hot_window, 1), n_blocks)
     cold_blocks = n_blocks - hot_blocks
-    elems_per_block = page_size * n_kv_heads * head_dim * 2      # K and V
     hot_bytes = hot_blocks * elems_per_block * fp_bytes
     cold_bytes = cold_blocks * elems_per_block * 1 \
-        + cold_blocks * n_kv_heads * 2 * tier.scale_bytes
+        + cold_blocks * cold_scale_bytes_per_block
     baseline_bytes = n_blocks * elems_per_block * fp_bytes
-    ops = 4.0 * n_heads * s_live * head_dim
     # tiered: cold pages stream from the bulk tier, the hot window sits in
     # the precision tier; baseline: everything streams from bulk
     tiered_mem_pj = (cold_bytes * tier.hbm_pj_per_byte
@@ -315,6 +330,35 @@ def decode_kv_traffic(s_live: int, *, n_heads: int, n_kv_heads: int,
         tiered_tops_w=ops / max(tiered_pj, 1e-12),
         baseline_tops_w=ops / max(baseline_pj, 1e-12),
     )
+
+
+def decode_latent_traffic(s_live: int, *, n_heads: int, latent_dim: int,
+                          kv_lora_rank: int, page_size: int,
+                          hot_window: int, fp_bytes: int = 2,
+                          tier: KVTierConfig = DEFAULT_KV_TIER
+                          ) -> Dict[str, float]:
+    """:func:`decode_kv_traffic` for the absorbed-MLA latent pool: bytes
+    and pJ one decode token pays to read its latent cache, fp baseline vs
+    the hybrid int8/fp tier mix (``runtime.layouts.PagedMLAQ8Layout``).
+
+    Counts exactly what the paged MLA flash kernels move: each latent row
+    (``latent_dim = r + d_rope`` values) is fetched ONCE and used twice
+    (keys at full width, values at its first ``kv_lora_rank`` columns), so
+    there is no K-and-V doubling; cold pages add ONE f32 per-page absmax
+    scale (no per-head axis — the latent is shared by every head).
+
+    Attention op count per generated token: the absorbed score is a
+    ``latent_dim``-deep dot and the value reduction an ``r``-deep dot per
+    head per position — ``2 * H * s_live * (latent_dim + r)`` MACs = 2 ops
+    each.
+    """
+    out = _tiered_traffic(
+        s_live, page_size=page_size, hot_window=hot_window,
+        fp_bytes=fp_bytes, tier=tier,
+        elems_per_block=page_size * latent_dim,       # fetched once
+        cold_scale_bytes_per_block=tier.scale_bytes,  # one scale per page
+        ops=2.0 * n_heads * s_live * (latent_dim + kv_lora_rank))
+    return dict(out, latent_dim=latent_dim)
 
 
 def map_architecture(arch_cfg, cfg: CoreConfig = DEFAULT_CORE,

@@ -14,59 +14,58 @@ the kernel takes a per-request ``pos`` vector (and a per-request sliding
 requests' territory — are masked inside the tile, which is what lets one
 jit'd decode step serve heterogeneous-position requests.
 
-Two memory paths share the same online-softmax body:
+One composable core, five memory layouts
+----------------------------------------
+Every public entrypoint runs the SAME harness (:func:`_flash_core`: one
+``pltpu.PrefetchScalarGridSpec`` ``pallas_call`` + one kernel body) and the
+SAME compute path (:func:`_softmax_tile`, the only online-softmax body in
+this module). What differs per layout is a ``(index_maps, loader)`` pair:
 
-* **prefetch** (default): ``pos``/``window`` ride in scalar-prefetch
-  operands (``pltpu.PrefetchScalarGridSpec``) and the K/V ``index_map``s
-  are data-dependent. Grid steps whose tile is fully masked for the
-  request clamp their block index into the live range
-  ``[first_live, last_live]``, so consecutive dead steps re-fetch the
-  previous live block's index — Pallas' pipeline emitter skips the DMA
-  when the block index repeats, and dead tiles generate no new HBM
-  traffic. A request at pos=1k in a 32k cache now moves ~1k positions of
-  K/V instead of 32k.
-* **streamed** (legacy, kept as the benchmark baseline): ``pl.when``
-  skips the compute of masked tiles but every tile is still DMA'd
-  HBM->VMEM.
+* **index maps** decide which physical tile each grid step DMAs. Dead
+  steps (fully-masked tiles) clamp their block index onto the nearest live
+  block — Pallas' pipeline emitter skips the DMA when the block index
+  repeats, so dead tiles generate no HBM traffic. Tiered layouts route
+  each step's DMA to exactly one tier (the untaken tier's map clamps onto
+  the garbage page, repeated index, DMA elided).
+* the **loader** turns the fetched refs into f32 ``(bs, dh)`` K/V tiles —
+  a plain read for fp layouts, an in-VMEM dequantization (rounded through
+  the serving dtype so kernel and einsum oracle agree to f32 roundoff) for
+  the int8 tiers, a fetch-once/use-twice split for the MLA latent pool.
 
-``flash_decode_paged`` runs the same prefetch kernel over a paged KV pool
-``(num_pages, page_size, Hkv, dh)`` shared by all requests: the per-request
-block table (a third scalar-prefetch operand) maps logical key blocks to
-physical pages, so live keys stay dense no matter how fragmented the pool
-is. The block-table width bounds the grid's S dimension — the scheduler
-sizes it to ``ceil(max_live / page_size)``, which is the per-request early
-exit: steps past a request's last live block repeat the previous index (no
-DMA) and skip compute.
+The pairs are what ``runtime/layouts.py``'s :class:`CacheLayout` registry
+hands out — each cache layout owns its kernel entrypoint here, and nothing
+else in the serving stack needs to know which leaves a layout carries.
 
-``flash_decode_paged_mla`` is the absorbed multi-head-latent-attention
-variant of the paged kernel: the pool holds the LATENT cache
-``(num_pages, page_size, r + d_rope)`` — one pool, no separate K/V — and
-the query arrives already absorbed (``q_nope @ W_uk`` concatenated with the
-rope query). Each fetched latent tile is used twice: the full
-``r + d_rope`` width scores against the absorbed query
-(``q_abs · ckv^T + q_rope · krope^T`` collapses to one dot product on the
-concatenated layout) and its first ``r`` columns are the "values" for the
-weighted sum, so attention runs entirely in latent space and the kernel
-moves ``r + d_rope`` values per key position (576 for DeepSeek-V3, vs
-2·Hkv·dh = 32768 for naive GQA). The ``W_uv`` up-projection happens once,
-outside the online-softmax loop, on the normalized (B, H, r) output.
+Layout family notes:
 
-``flash_decode_paged_q8`` is the hybrid-precision tier variant (the
-YOCO ReRAM–SRAM split applied to the KV cache): cold pages stream from an
-int8 pool with per-page, per-head absmax scales (the dense "ReRAM" tier)
-while the last ``hot_window`` pages of each request read from the
-full-precision pool (the "SRAM" tier, where all writes land). Hotness is
-decided per grid step in the index maps — a cold step fetches the int8
-page and clamps the fp fetch onto the garbage page (repeated index, DMA
-elided), a hot step does the reverse — so each tile moves either fp or
-int8 bytes through HBM, never both. Scales ride in a (1, 1) SMEM operand
-indexed by the same page map; dequantization happens in VMEM inside the
-online-softmax loop, exactly once per fetched tile.
+* ``flash_decode`` (contiguous): ``impl='prefetch'`` (default) uses
+  data-dependent index maps; ``impl='streamed'`` (legacy benchmark
+  baseline) uses identity index maps — every tile is still DMA'd, masked
+  tiles only skip compute. Same harness, same body, bitwise-equal outputs.
+* ``flash_decode_paged``: the per-request block table (a third
+  scalar-prefetch operand) maps logical key blocks to physical pages of a
+  pool ``(num_pages, page_size, Hkv, dh)`` shared by all requests. The
+  block-table width bounds the grid's S dimension.
+* ``flash_decode_paged_q8``: the hybrid-precision tier (the YOCO
+  ReRAM–SRAM split applied to the KV cache) — cold pages stream from an
+  int8 pool with per-page, per-head absmax scales, the last ``hot_window``
+  pages read from the fp pool where all writes land.
+* ``flash_decode_paged_mla``: absorbed multi-head-latent-attention over a
+  paged LATENT pool ``(num_pages, page_size, r + d_rope)`` — one pool, no
+  separate K/V. Each fetched latent tile is used twice: full width as the
+  keys (against the absorbed+rope query), first ``r`` columns as the
+  values. ``W_uv`` is applied once, outside the loop, by the caller.
+* ``flash_decode_paged_mla_q8``: the latent pool's hybrid tier — cold
+  ``cl`` pages stream as int8 with ONE per-page absmax scale (the latent
+  is quantized *before* the W_uk/W_uv expansion; see
+  ``runtime/kv_quant.py`` for the error-model discussion), hot pages from
+  the fp latent pool. Same hotness rule, same tier routing in the index
+  maps, same fetch-once/use-twice split as the fp MLA kernel.
 
 Grid: (B, Hkv, S/bs) with S innermost ("arbitrary"); each (b, h) cell
 keeps the GQA query group (G = H // Hkv queries) resident and reduces over
-the key tiles. B and Hkv are parallel. The MLA kernel degenerates the Hkv
-axis to 1 (the latent cache is shared by every head) and keeps all H
+the key tiles. B and Hkv are parallel. The MLA kernels degenerate the Hkv
+axis to 1 (the latent cache is shared by every head) and keep all H
 queries resident in the one cell.
 
 CPU CI runs these same kernel bodies with ``interpret=True``.
@@ -88,7 +87,7 @@ NEG_INF = float('-inf')
 
 
 # ----------------------------------------------------------------------------
-# shared online-softmax tile body
+# the one online-softmax compute body
 # ----------------------------------------------------------------------------
 def _live_block_range(pos, win, bs: int):
     """[first, last] inclusive range of key blocks with any valid key for a
@@ -100,21 +99,14 @@ def _live_block_range(pos, win, bs: int):
     return first, last
 
 
-def _ref_loader(k_ref, v_ref):
-    """Default K/V tile loader: read the fp refs into f32. The q8 kernel
-    substitutes a loader that dequantizes the int8 tile / selects the tier."""
-    return lambda: (k_ref[0, :, 0, :].astype(jnp.float32),
-                    v_ref[0, :, 0, :].astype(jnp.float32))
-
-
 def _softmax_tile(pos, win, s, q_ref, load_kv, o_ref,
                   acc_ref, m_ref, l_ref, *, bs: int, s_steps: int,
                   scale: float):
-    """One online-softmax step over key tile ``s`` (shared by the streamed,
-    prefetch, paged, and quantized-paged kernels; only the scalar plumbing
-    and the K/V tile loader differ). ``load_kv() -> (k, v)`` f32 (bs, dh)
-    tiles; it runs under the live-tile predicate so dead steps skip both
-    the load and the compute."""
+    """One online-softmax step over key tile ``s`` — THE compute path every
+    flash-decode entrypoint reduces through; only the scalar plumbing and
+    the K/V tile loader differ per layout. ``load_kv() -> (k, v)`` f32
+    (bs, dh) tiles; it runs under the live-tile predicate so dead steps
+    skip both the load and the compute."""
     @pl.when(s == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -153,140 +145,64 @@ def _softmax_tile(pos, win, s, q_ref, load_kv, o_ref,
 
 
 # ----------------------------------------------------------------------------
-# streamed kernel (legacy: every tile is DMA'd, masked tiles skip compute)
+# the one harness: scalar-prefetch grid, layout-parameterized (maps, loader)
 # ----------------------------------------------------------------------------
-def _flash_decode_kernel(pos_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
-                         acc_ref, m_ref, l_ref, *, bs: int, s_steps: int,
-                         scale: float):
+def _core_kernel(*refs, ns: int, nt: int, loader, bs: int, s_steps: int,
+                 scale: float):
+    """The single kernel body behind every entrypoint. Argument layout (the
+    PrefetchScalarGridSpec convention): ``ns`` scalar-prefetch refs
+    (pos, window, then layout extras such as block tables / hot window),
+    the query ref, ``nt`` layout tensor refs, the output ref, and the three
+    online-softmax scratch refs."""
+    scalars = refs[:ns]
+    q_ref = refs[ns]
+    t_refs = refs[ns + 1:ns + 1 + nt]
+    o_ref, acc_ref, m_ref, l_ref = refs[ns + 1 + nt:]
+    b = pl.program_id(0)
     s = pl.program_id(2)
-    _softmax_tile(pos_ref[0, 0], win_ref[0, 0], s, q_ref,
-                  _ref_loader(k_ref, v_ref), o_ref, acc_ref, m_ref, l_ref,
+    pos, win = scalars[0][b], scalars[1][b]
+    load_kv = loader(scalars, t_refs, b, s, pos, win)
+    _softmax_tile(pos, win, s, q_ref, load_kv, o_ref, acc_ref, m_ref, l_ref,
                   bs=bs, s_steps=s_steps, scale=scale)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=('scale', 'bs', 'interpret'))
-def flash_decode_gqa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-                     pos: jnp.ndarray, window: jnp.ndarray, *,
-                     scale: float, bs: int = DEFAULT_BS,
-                     interpret: bool = False) -> jnp.ndarray:
-    """Single-token GQA decode attention over a length-masked KV cache,
-    streaming every key tile (the pre-prefetch baseline).
+def _flash_core(q: jnp.ndarray, scalars, tensors, tensor_specs, *, loader,
+                out_width: int, bs: int, s_steps: int, scale: float,
+                interpret: bool) -> jnp.ndarray:
+    """Run the flash-decode grid over ``q`` (B, Hgrid, G, dk) with a
+    layout-supplied ``(index_maps, loader)`` pair: ``tensor_specs`` carry
+    the layout's data-dependent index maps (one BlockSpec per tensor
+    operand), ``loader`` turns the fetched refs into f32 K/V tiles.
+    ``scalars`` ride in scalar-prefetch operands (pos and window first —
+    the core reads those itself). Returns (B, Hgrid, G, out_width) f32."""
+    b, hgrid, g, dk = q.shape
+    grid = (b, hgrid, s_steps)
 
-    q:      (B, Hkv, G, dh) — query heads grouped by their KV head
-    k, v:   (B, S, Hkv, dh) — cache; S % bs == 0 (pad in the wrapper)
-    pos:    (B, 1) int32    — per-request absolute position; keys at
-                              kpos <= pos[b] are attended
-    window: (B, 1) int32    — per-request sliding window (>= S+1 disables)
+    def qo_map(bb, h, s, *sr):
+        del s, sr
+        return (bb, h, 0, 0)
 
-    Returns (B, Hkv, G, dh) f32.
-    """
-    b, hkv, g, dh = q.shape
-    s_max = k.shape[1]
-    assert k.shape == (b, s_max, hkv, dh) and v.shape == k.shape, \
-        (q.shape, k.shape, v.shape)
-    assert s_max % bs == 0, (s_max, bs)
-    assert pos.shape == (b, 1) and window.shape == (b, 1)
-    s_steps = s_max // bs
-    grid = (b, hkv, s_steps)
-    return pl.pallas_call(
-        functools.partial(_flash_decode_kernel, bs=bs, s_steps=s_steps,
-                          scale=scale),
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(scalars),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda bb, h, s: (bb, 0),
-                         memory_space=pltpu.SMEM),           # pos
-            pl.BlockSpec((1, 1), lambda bb, h, s: (bb, 0),
-                         memory_space=pltpu.SMEM),           # window
-            pl.BlockSpec((1, 1, g, dh), lambda bb, h, s: (bb, h, 0, 0)),
-            pl.BlockSpec((1, bs, 1, dh), lambda bb, h, s: (bb, s, h, 0)),
-            pl.BlockSpec((1, bs, 1, dh), lambda bb, h, s: (bb, s, h, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, g, dh), lambda bb, h, s: (bb, h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), jnp.float32),
+        in_specs=[pl.BlockSpec((1, 1, g, dk), qo_map)] + list(tensor_specs),
+        out_specs=pl.BlockSpec((1, 1, g, out_width), qo_map),
         scratch_shapes=[
-            pltpu.VMEM((g, dh), jnp.float32),    # unnormalized output
-            pltpu.VMEM((g, 1), jnp.float32),     # running max
-            pltpu.VMEM((g, 1), jnp.float32),     # running sum
+            pltpu.VMEM((g, out_width), jnp.float32),  # unnormalized output
+            pltpu.VMEM((g, 1), jnp.float32),          # running max
+            pltpu.VMEM((g, 1), jnp.float32),          # running sum
         ],
+    )
+    return pl.pallas_call(
+        functools.partial(_core_kernel, ns=len(scalars), nt=len(tensors),
+                          loader=loader, bs=bs, s_steps=s_steps, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hgrid, g, out_width), jnp.float32),
         compiler_params=compat.tpu_compiler_params(
             dimension_semantics=('parallel', 'parallel', 'arbitrary'),
         ),
         interpret=interpret,
-    )(pos.astype(jnp.int32), window.astype(jnp.int32), q, k, v)
-
-
-# ----------------------------------------------------------------------------
-# scalar-prefetch kernel: dead tiles generate no HBM traffic
-# ----------------------------------------------------------------------------
-def _flash_prefetch_kernel(pos_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
-                           acc_ref, m_ref, l_ref, *, bs: int, s_steps: int,
-                           scale: float):
-    b = pl.program_id(0)
-    s = pl.program_id(2)
-    _softmax_tile(pos_ref[b], win_ref[b], s, q_ref,
-                  _ref_loader(k_ref, v_ref), o_ref, acc_ref, m_ref, l_ref,
-                  bs=bs, s_steps=s_steps, scale=scale)
-
-
-def _flash_paged_kernel(pos_ref, win_ref, bt_ref, q_ref, k_ref, v_ref,
-                        o_ref, acc_ref, m_ref, l_ref, *, bs: int,
-                        s_steps: int, scale: float):
-    del bt_ref                       # consumed by the index maps only
-    b = pl.program_id(0)
-    s = pl.program_id(2)
-    _softmax_tile(pos_ref[b], win_ref[b], s, q_ref,
-                  _ref_loader(k_ref, v_ref), o_ref, acc_ref, m_ref, l_ref,
-                  bs=bs, s_steps=s_steps, scale=scale)
-
-
-def _flash_paged_mla_kernel(pos_ref, win_ref, bt_ref, q_ref, c_ref, o_ref,
-                            acc_ref, m_ref, l_ref, *, bs: int, s_steps: int,
-                            scale: float, r: int):
-    """Absorbed-MLA tile body: one latent tile (bs, r + d_rope) serves as
-    both the keys (full width, against the absorbed+rope query) and the
-    values (first ``r`` columns) — fetched once, used twice."""
-    del bt_ref                       # consumed by the index maps only
-    b = pl.program_id(0)
-    s = pl.program_id(2)
-
-    def load_kv():
-        lat = c_ref[0].astype(jnp.float32)             # (bs, r + d_rope)
-        return lat, lat[:, :r]
-
-    _softmax_tile(pos_ref[b], win_ref[b], s, q_ref, load_kv, o_ref,
-                  acc_ref, m_ref, l_ref, bs=bs, s_steps=s_steps, scale=scale)
-
-
-def _flash_paged_q8_kernel(pos_ref, win_ref, bt_ref, hw_ref, q_ref,
-                           k_ref, v_ref, kq_ref, vq_ref, ks_ref, vs_ref,
-                           o_ref, acc_ref, m_ref, l_ref, *, bs: int,
-                           s_steps: int, scale: float):
-    """Hybrid-tier tile body: the index maps have already routed the DMA
-    (hot step -> fp page, cold step -> int8 page + its SMEM scale); here we
-    just pick the tier that was actually fetched and dequantize in VMEM."""
-    del bt_ref
-    b = pl.program_id(0)
-    s = pl.program_id(2)
-    pos, win = pos_ref[b], win_ref[b]
-    first, last = _live_block_range(pos, win, bs)
-    hot = jnp.clip(s, first, last) > last - hw_ref[0]
-
-    def load_kv():
-        k_fp = k_ref[0, :, 0, :].astype(jnp.float32)
-        v_fp = v_ref[0, :, 0, :].astype(jnp.float32)
-        # the one dequantization per fetched tile (scales are per-page,
-        # per-head, so one scalar covers the whole (bs, dh) tile); round
-        # through the serving dtype so the tier mix is bit-identical with
-        # the dequant_gather einsum oracle
-        k_q8 = (kq_ref[0, :, 0, :].astype(jnp.float32) * ks_ref[0, 0]) \
-            .astype(k_ref.dtype).astype(jnp.float32)
-        v_q8 = (vq_ref[0, :, 0, :].astype(jnp.float32) * vs_ref[0, 0]) \
-            .astype(v_ref.dtype).astype(jnp.float32)
-        return (jnp.where(hot, k_fp, k_q8), jnp.where(hot, v_fp, v_q8))
-
-    _softmax_tile(pos, win, s, q_ref, load_kv, o_ref, acc_ref, m_ref,
-                  l_ref, bs=bs, s_steps=s_steps, scale=scale)
+    )(*scalars, q, *tensors)
 
 
 def _clamped_block(s, pos_ref, win_ref, b, bs: int):
@@ -296,18 +212,38 @@ def _clamped_block(s, pos_ref, win_ref, b, bs: int):
     return jnp.clip(s, first, last)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=('scale', 'bs', 'interpret'))
-def flash_decode_gqa_prefetch(q: jnp.ndarray, k: jnp.ndarray,
-                              v: jnp.ndarray, pos: jnp.ndarray,
-                              window: jnp.ndarray, *, scale: float,
-                              bs: int = DEFAULT_BS,
-                              interpret: bool = False) -> jnp.ndarray:
-    """:func:`flash_decode_gqa` with scalar-prefetch block skipping: K/V
-    index maps read ``pos``/``window`` and clamp dead grid steps onto the
-    previous live block, so fully-masked tiles are never fetched.
+def _fp_loader(t_refs):
+    """Plain fp K/V loader (contiguous and paged layouts): read the two
+    fetched refs into f32."""
+    k_ref, v_ref = t_refs
+    return lambda: (k_ref[0, :, 0, :].astype(jnp.float32),
+                    v_ref[0, :, 0, :].astype(jnp.float32))
 
-    Same contract as :func:`flash_decode_gqa` except pos/window are (B,).
+
+# ----------------------------------------------------------------------------
+# contiguous layouts: streamed (legacy baseline) and prefetch
+# ----------------------------------------------------------------------------
+@functools.partial(jax.jit,
+                   static_argnames=('scale', 'bs', 'prefetch', 'interpret'))
+def flash_decode_gqa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     pos: jnp.ndarray, window: jnp.ndarray, *,
+                     scale: float, bs: int = DEFAULT_BS,
+                     prefetch: bool = True,
+                     interpret: bool = False) -> jnp.ndarray:
+    """Single-token GQA decode attention over a length-masked contiguous
+    KV cache.
+
+    q:      (B, Hkv, G, dh) — query heads grouped by their KV head
+    k, v:   (B, S, Hkv, dh) — cache; S % bs == 0 (pad in the wrapper)
+    pos:    (B,) int32      — per-request absolute position; keys at
+                              kpos <= pos[b] are attended
+    window: (B,) int32      — per-request sliding window (>= S+1 disables)
+    prefetch: data-dependent index maps (dead tiles never fetched). False
+              is the legacy streamed baseline: identity maps, every tile
+              DMA'd, masked tiles skip compute only. Same harness, same
+              body — the outputs are bitwise equal.
+
+    Returns (B, Hkv, G, dh) f32.
     """
     b, hkv, g, dh = q.shape
     s_max = k.shape[1]
@@ -316,42 +252,29 @@ def flash_decode_gqa_prefetch(q: jnp.ndarray, k: jnp.ndarray,
     assert s_max % bs == 0, (s_max, bs)
     assert pos.shape == (b,) and window.shape == (b,)
     s_steps = s_max // bs
-    grid = (b, hkv, s_steps)
 
-    def qo_map(bb, h, s, pos_ref, win_ref):
-        del s, pos_ref, win_ref
-        return (bb, h, 0, 0)
+    if prefetch:
+        def kv_map(bb, h, s, pos_ref, win_ref):
+            return (bb, _clamped_block(s, pos_ref, win_ref, bb, bs), h, 0)
+    else:
+        def kv_map(bb, h, s, pos_ref, win_ref):
+            del pos_ref, win_ref
+            return (bb, s, h, 0)
 
-    def kv_map(bb, h, s, pos_ref, win_ref):
-        return (bb, _clamped_block(s, pos_ref, win_ref, bb, bs), h, 0)
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, g, dh), qo_map),
-            pl.BlockSpec((1, bs, 1, dh), kv_map),
-            pl.BlockSpec((1, bs, 1, dh), kv_map),
-        ],
-        out_specs=pl.BlockSpec((1, 1, g, dh), qo_map),
-        scratch_shapes=[
-            pltpu.VMEM((g, dh), jnp.float32),    # unnormalized output
-            pltpu.VMEM((g, 1), jnp.float32),     # running max
-            pltpu.VMEM((g, 1), jnp.float32),     # running sum
-        ],
-    )
-    return pl.pallas_call(
-        functools.partial(_flash_prefetch_kernel, bs=bs, s_steps=s_steps,
-                          scale=scale),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), jnp.float32),
-        compiler_params=compat.tpu_compiler_params(
-            dimension_semantics=('parallel', 'parallel', 'arbitrary'),
-        ),
-        interpret=interpret,
-    )(pos.astype(jnp.int32), window.astype(jnp.int32), q, k, v)
+    return _flash_core(
+        q,
+        scalars=(pos.astype(jnp.int32), window.astype(jnp.int32)),
+        tensors=(k, v),
+        tensor_specs=[pl.BlockSpec((1, bs, 1, dh), kv_map),
+                      pl.BlockSpec((1, bs, 1, dh), kv_map)],
+        loader=lambda scalars, t_refs, bb, s, pos_, win_: _fp_loader(t_refs),
+        out_width=dh, bs=bs, s_steps=s_steps, scale=scale,
+        interpret=interpret)
 
 
+# ----------------------------------------------------------------------------
+# paged GQA layout
+# ----------------------------------------------------------------------------
 @functools.partial(jax.jit,
                    static_argnames=('scale', 'interpret'))
 def flash_decode_gqa_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
@@ -378,44 +301,26 @@ def flash_decode_gqa_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
     assert pos.shape == (b,) and window.shape == (b,)
     assert block_tables.ndim == 2 and block_tables.shape[0] == b
     s_steps = block_tables.shape[1]
-    grid = (b, hkv, s_steps)
-
-    def qo_map(bb, h, s, pos_ref, win_ref, bt_ref):
-        del s, pos_ref, win_ref, bt_ref
-        return (bb, h, 0, 0)
 
     def kv_map(bb, h, s, pos_ref, win_ref, bt_ref):
         blk = _clamped_block(s, pos_ref, win_ref, bb, page_size)
         return (bt_ref[bb, blk], 0, h, 0)
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, g, dh), qo_map),
-            pl.BlockSpec((1, page_size, 1, dh), kv_map),
-            pl.BlockSpec((1, page_size, 1, dh), kv_map),
-        ],
-        out_specs=pl.BlockSpec((1, 1, g, dh), qo_map),
-        scratch_shapes=[
-            pltpu.VMEM((g, dh), jnp.float32),    # unnormalized output
-            pltpu.VMEM((g, 1), jnp.float32),     # running max
-            pltpu.VMEM((g, 1), jnp.float32),     # running sum
-        ],
-    )
-    return pl.pallas_call(
-        functools.partial(_flash_paged_kernel, bs=page_size,
-                          s_steps=s_steps, scale=scale),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), jnp.float32),
-        compiler_params=compat.tpu_compiler_params(
-            dimension_semantics=('parallel', 'parallel', 'arbitrary'),
-        ),
-        interpret=interpret,
-    )(pos.astype(jnp.int32), window.astype(jnp.int32),
-      block_tables.astype(jnp.int32), q, k_pages, v_pages)
+    return _flash_core(
+        q,
+        scalars=(pos.astype(jnp.int32), window.astype(jnp.int32),
+                 block_tables.astype(jnp.int32)),
+        tensors=(k_pages, v_pages),
+        tensor_specs=[pl.BlockSpec((1, page_size, 1, dh), kv_map),
+                      pl.BlockSpec((1, page_size, 1, dh), kv_map)],
+        loader=lambda scalars, t_refs, bb, s, pos_, win_: _fp_loader(t_refs),
+        out_width=dh, bs=page_size, s_steps=s_steps, scale=scale,
+        interpret=interpret)
 
 
+# ----------------------------------------------------------------------------
+# paged MLA latent layout
+# ----------------------------------------------------------------------------
 @functools.partial(jax.jit,
                    static_argnames=('scale', 'r', 'interpret'))
 def flash_decode_mla_paged(q: jnp.ndarray, c_pages: jnp.ndarray,
@@ -435,8 +340,7 @@ def flash_decode_mla_paged(q: jnp.ndarray, c_pages: jnp.ndarray,
     pos:          (B,) int32 per-request absolute position
     window:       (B,) int32 per-request sliding window (>= S+1 disables;
                   MLA archs here never window — the operand exists so the
-                  kernel shares ``_live_block_range``/``_softmax_tile``
-                  with the GQA family verbatim)
+                  kernel shares the core with the GQA family verbatim)
     block_tables: (B, W) int32 — same contract as
                   :func:`flash_decode_gqa_paged`; dead steps clamp onto the
                   nearest live block so their DMA is elided
@@ -453,42 +357,64 @@ def flash_decode_mla_paged(q: jnp.ndarray, c_pages: jnp.ndarray,
     assert pos.shape == (b,) and window.shape == (b,)
     assert block_tables.ndim == 2 and block_tables.shape[0] == b
     s_steps = block_tables.shape[1]
-    grid = (b, 1, s_steps)           # degenerate Hkv axis: one latent cache
-
-    def qo_map(bb, g_, s, pos_ref, win_ref, bt_ref):
-        del g_, s, pos_ref, win_ref, bt_ref
-        return (bb, 0, 0, 0)
 
     def c_map(bb, g_, s, pos_ref, win_ref, bt_ref):
         del g_
         blk = _clamped_block(s, pos_ref, win_ref, bb, page_size)
         return (bt_ref[bb, blk], 0, 0)
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, h, dk), qo_map),
-            pl.BlockSpec((1, page_size, dk), c_map),
-        ],
-        out_specs=pl.BlockSpec((1, 1, h, r), qo_map),
-        scratch_shapes=[
-            pltpu.VMEM((h, r), jnp.float32),     # unnormalized latent out
-            pltpu.VMEM((h, 1), jnp.float32),     # running max
-            pltpu.VMEM((h, 1), jnp.float32),     # running sum
-        ],
-    )
-    return pl.pallas_call(
-        functools.partial(_flash_paged_mla_kernel, bs=page_size,
-                          s_steps=s_steps, scale=scale, r=r),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, 1, h, r), jnp.float32),
-        compiler_params=compat.tpu_compiler_params(
-            dimension_semantics=('parallel', 'parallel', 'arbitrary'),
-        ),
-        interpret=interpret,
-    )(pos.astype(jnp.int32), window.astype(jnp.int32),
-      block_tables.astype(jnp.int32), q, c_pages)
+    def mla_loader(scalars, t_refs, bb, s, pos_, win_):
+        c_ref, = t_refs
+
+        def load():
+            # fetch once, use twice: full width = keys, first r cols = values
+            lat = c_ref[0].astype(jnp.float32)         # (bs, r + d_rope)
+            return lat, lat[:, :r]
+        return load
+
+    return _flash_core(
+        q,
+        scalars=(pos.astype(jnp.int32), window.astype(jnp.int32),
+                 block_tables.astype(jnp.int32)),
+        tensors=(c_pages,),
+        tensor_specs=[pl.BlockSpec((1, page_size, dk), c_map)],
+        loader=mla_loader,
+        out_width=r, bs=page_size, s_steps=s_steps, scale=scale,
+        interpret=interpret)
+
+
+# ----------------------------------------------------------------------------
+# hybrid-precision tiers: hot/cold routing shared by the q8 layouts
+# ----------------------------------------------------------------------------
+def _blk_hot(bb, s, pos_ref, win_ref, hw_ref, bs: int):
+    """(clamped block, is-hot) for grid step ``s`` — the ONE hotness rule
+    (shared with ``runtime.kv_quant``): block ``s`` of a request at ``pos``
+    is hot iff ``s > pos // page_size - hw``."""
+    first, last = _live_block_range(pos_ref[bb], win_ref[bb], bs)
+    blk = jnp.clip(s, first, last)
+    return blk, blk > last - hw_ref[0]
+
+
+def _tier_maps(page_size: int):
+    """(fp_map, q8_map, scale_map) index-map factories for a paged
+    hot/cold tier pair: a hot step fetches the fp page and parks the int8
+    fetch on the garbage page (repeated index, DMA elided); a cold step
+    does the reverse. ``scale_map`` follows the cold tier with a trailing
+    per-page axis (the head axis for GQA, the single absmax column for
+    MLA)."""
+    def fp_map(bb, h, s, pos_ref, win_ref, bt_ref, hw_ref):
+        blk, hot = _blk_hot(bb, s, pos_ref, win_ref, hw_ref, page_size)
+        return (jnp.where(hot, bt_ref[bb, blk], 0), 0, h, 0)
+
+    def q8_map(bb, h, s, pos_ref, win_ref, bt_ref, hw_ref):
+        blk, hot = _blk_hot(bb, s, pos_ref, win_ref, hw_ref, page_size)
+        return (jnp.where(hot, 0, bt_ref[bb, blk]), 0, h, 0)
+
+    def scale_map(bb, h, s, pos_ref, win_ref, bt_ref, hw_ref):
+        blk, hot = _blk_hot(bb, s, pos_ref, win_ref, hw_ref, page_size)
+        return (jnp.where(hot, 0, bt_ref[bb, blk]), h)
+
+    return fp_map, q8_map, scale_map
 
 
 @functools.partial(jax.jit,
@@ -529,67 +455,132 @@ def flash_decode_gqa_paged_q8(q: jnp.ndarray, k_pages: jnp.ndarray,
     assert block_tables.ndim == 2 and block_tables.shape[0] == b
     assert hot_window.shape == (1,)
     s_steps = block_tables.shape[1]
-    grid = (b, hkv, s_steps)
+    fp_map, q8_map, scale_map = _tier_maps(page_size)
 
-    def qo_map(bb, h, s, pos_ref, win_ref, bt_ref, hw_ref):
-        del s, pos_ref, win_ref, bt_ref, hw_ref
-        return (bb, h, 0, 0)
+    def q8_loader(scalars, t_refs, bb, s, pos_, win_):
+        k_ref, v_ref, kq_ref, vq_ref, ks_ref, vs_ref = t_refs
+        hw_ref = scalars[3]
+        first, last = _live_block_range(pos_, win_, page_size)
+        hot = jnp.clip(s, first, last) > last - hw_ref[0]
 
-    def _blk_hot(bb, s, pos_ref, win_ref, hw_ref):
-        first, last = _live_block_range(pos_ref[bb], win_ref[bb], page_size)
-        blk = jnp.clip(s, first, last)
-        return blk, blk > last - hw_ref[0]
+        def load():
+            k_fp = k_ref[0, :, 0, :].astype(jnp.float32)
+            v_fp = v_ref[0, :, 0, :].astype(jnp.float32)
+            # the one dequantization per fetched tile (scales are per-page,
+            # per-head, so one scalar covers the whole (bs, dh) tile);
+            # round through the serving dtype so the tier mix is
+            # bit-identical with the dequant_gather einsum oracle
+            k_q8 = (kq_ref[0, :, 0, :].astype(jnp.float32) * ks_ref[0, 0]) \
+                .astype(k_ref.dtype).astype(jnp.float32)
+            v_q8 = (vq_ref[0, :, 0, :].astype(jnp.float32) * vs_ref[0, 0]) \
+                .astype(v_ref.dtype).astype(jnp.float32)
+            return (jnp.where(hot, k_fp, k_q8), jnp.where(hot, v_fp, v_q8))
+        return load
 
-    def kv_fp_map(bb, h, s, pos_ref, win_ref, bt_ref, hw_ref):
-        blk, hot = _blk_hot(bb, s, pos_ref, win_ref, hw_ref)
-        # cold steps park the fp fetch on the garbage page: the repeated
-        # block index elides the DMA, so cold tiles move no fp bytes
-        return (jnp.where(hot, bt_ref[bb, blk], 0), 0, h, 0)
-
-    def kv_q8_map(bb, h, s, pos_ref, win_ref, bt_ref, hw_ref):
-        blk, hot = _blk_hot(bb, s, pos_ref, win_ref, hw_ref)
-        return (jnp.where(hot, 0, bt_ref[bb, blk]), 0, h, 0)
-
-    def scale_map(bb, h, s, pos_ref, win_ref, bt_ref, hw_ref):
-        blk, hot = _blk_hot(bb, s, pos_ref, win_ref, hw_ref)
-        return (jnp.where(hot, 0, bt_ref[bb, blk]), h)
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, g, dh), qo_map),
-            pl.BlockSpec((1, page_size, 1, dh), kv_fp_map),
-            pl.BlockSpec((1, page_size, 1, dh), kv_fp_map),
-            pl.BlockSpec((1, page_size, 1, dh), kv_q8_map),
-            pl.BlockSpec((1, page_size, 1, dh), kv_q8_map),
+    kv_block = (1, page_size, 1, dh)
+    return _flash_core(
+        q,
+        scalars=(pos.astype(jnp.int32), window.astype(jnp.int32),
+                 block_tables.astype(jnp.int32),
+                 hot_window.astype(jnp.int32)),
+        tensors=(k_pages, v_pages, kq_pages, vq_pages,
+                 k_scales.astype(jnp.float32), v_scales.astype(jnp.float32)),
+        tensor_specs=[
+            pl.BlockSpec(kv_block, fp_map),
+            pl.BlockSpec(kv_block, fp_map),
+            pl.BlockSpec(kv_block, q8_map),
+            pl.BlockSpec(kv_block, q8_map),
             pl.BlockSpec((1, 1), scale_map, memory_space=pltpu.SMEM),
             pl.BlockSpec((1, 1), scale_map, memory_space=pltpu.SMEM),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, dh), qo_map),
-        scratch_shapes=[
-            pltpu.VMEM((g, dh), jnp.float32),    # unnormalized output
-            pltpu.VMEM((g, 1), jnp.float32),     # running max
-            pltpu.VMEM((g, 1), jnp.float32),     # running sum
+        loader=q8_loader,
+        out_width=dh, bs=page_size, s_steps=s_steps, scale=scale,
+        interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=('scale', 'r', 'interpret'))
+def flash_decode_mla_paged_q8(q: jnp.ndarray, c_pages: jnp.ndarray,
+                              cq_pages: jnp.ndarray, c_scales: jnp.ndarray,
+                              pos: jnp.ndarray, window: jnp.ndarray,
+                              block_tables: jnp.ndarray,
+                              hot_window: jnp.ndarray, *, scale: float,
+                              r: int, interpret: bool = False) -> jnp.ndarray:
+    """:func:`flash_decode_mla_paged` over a hybrid-precision latent pool.
+
+    c_pages:   (P, page_size, r + d_rope) fp latent pool — the hot tier;
+               all writes (prefill + decode) land here
+    cq_pages:  (P, page_size, r + d_rope) int8 — the cold tier: aged-out
+               latent pages quantized with ONE per-page absmax scale,
+               *before* the W_uk/W_uv expansion
+    c_scales:  (P, 1) f32 per-page absmax scales
+    hot_window: (1,) int32, in pages, >= 1; >= W never reads the int8 tier
+               (bit-exact with :func:`flash_decode_mla_paged`)
+
+    Same hotness rule and tier routing as :func:`flash_decode_gqa_paged_q8`
+    (one tier's DMA per tile, dequant in VMEM rounded through the serving
+    dtype), same fetch-once/use-twice latent split as the fp MLA kernel.
+
+    Returns (B, 1, H, r) f32: the latent-space attention output.
+    """
+    b, one, h, dk = q.shape
+    assert one == 1, q.shape
+    _, page_size, dk_c = c_pages.shape
+    assert dk_c == dk, (q.shape, c_pages.shape)
+    assert 0 < r < dk, (r, dk)
+    assert cq_pages.shape == c_pages.shape and cq_pages.dtype == jnp.int8
+    assert c_scales.shape == c_pages.shape[:1] + (1,), c_scales.shape
+    assert pos.shape == (b,) and window.shape == (b,)
+    assert block_tables.ndim == 2 and block_tables.shape[0] == b
+    assert hot_window.shape == (1,)
+    s_steps = block_tables.shape[1]
+    fp_map4, q8_map4, scale_map = _tier_maps(page_size)
+
+    # latent pools are rank-3: drop the degenerate head axis of the shared
+    # tier maps (h is always 0 on the MLA grid)
+    def c_fp_map(bb, g_, s, *sr):
+        p, _, _, _ = fp_map4(bb, 0, s, *sr)
+        return (p, 0, 0)
+
+    def c_q8_map(bb, g_, s, *sr):
+        p, _, _, _ = q8_map4(bb, 0, s, *sr)
+        return (p, 0, 0)
+
+    def cs_map(bb, g_, s, *sr):
+        return scale_map(bb, 0, s, *sr)
+
+    def mla_q8_loader(scalars, t_refs, bb, s, pos_, win_):
+        c_ref, cq_ref, cs_ref = t_refs
+        hw_ref = scalars[3]
+        first, last = _live_block_range(pos_, win_, page_size)
+        hot = jnp.clip(s, first, last) > last - hw_ref[0]
+
+        def load():
+            lat_fp = c_ref[0].astype(jnp.float32)      # (bs, r + d_rope)
+            lat_q8 = (cq_ref[0].astype(jnp.float32) * cs_ref[0, 0]) \
+                .astype(c_ref.dtype).astype(jnp.float32)
+            lat = jnp.where(hot, lat_fp, lat_q8)
+            return lat, lat[:, :r]
+        return load
+
+    return _flash_core(
+        q,
+        scalars=(pos.astype(jnp.int32), window.astype(jnp.int32),
+                 block_tables.astype(jnp.int32),
+                 hot_window.astype(jnp.int32)),
+        tensors=(c_pages, cq_pages, c_scales.astype(jnp.float32)),
+        tensor_specs=[
+            pl.BlockSpec((1, page_size, dk), c_fp_map),
+            pl.BlockSpec((1, page_size, dk), c_q8_map),
+            pl.BlockSpec((1, 1), cs_map, memory_space=pltpu.SMEM),
         ],
-    )
-    return pl.pallas_call(
-        functools.partial(_flash_paged_q8_kernel, bs=page_size,
-                          s_steps=s_steps, scale=scale),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), jnp.float32),
-        compiler_params=compat.tpu_compiler_params(
-            dimension_semantics=('parallel', 'parallel', 'arbitrary'),
-        ),
-        interpret=interpret,
-    )(pos.astype(jnp.int32), window.astype(jnp.int32),
-      block_tables.astype(jnp.int32), hot_window.astype(jnp.int32),
-      q, k_pages, v_pages, kq_pages, vq_pages,
-      k_scales.astype(jnp.float32), v_scales.astype(jnp.float32))
+        loader=mla_q8_loader,
+        out_width=r, bs=page_size, s_steps=s_steps, scale=scale,
+        interpret=interpret)
 
 
 # ----------------------------------------------------------------------------
-# shape-flexible wrappers
+# shape-flexible wrappers (the five public entrypoints)
 # ----------------------------------------------------------------------------
 def _pick_bs(s_max: int, bs: int) -> int:
     """Key-tile length: the largest tile <= ``bs`` (halving down to 128)
@@ -621,11 +612,18 @@ def _norm_scalar_vec(x, b: int, fill=None) -> jnp.ndarray:
     return jnp.broadcast_to(x.reshape(-1) if x.ndim else x, (b,))
 
 
+def _interpret_default(interpret):
+    if interpret is None:
+        from repro.kernels import ops
+        return ops._interpret()
+    return interpret
+
+
 def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                  pos: jnp.ndarray, *, scale: float,
                  window=None, bs: int = DEFAULT_BS,
                  interpret=None, impl: str = 'prefetch') -> jnp.ndarray:
-    """Shape-flexible wrapper around the flash-decode kernels.
+    """Shape-flexible wrapper around the contiguous flash-decode kernel.
 
     q:   (B, 1, H, dh) or (B, H, dh) — the single decode-step query
     k,v: (B, S_max, Hkv, dh) KV cache, any dtype (bf16 serving layout)
@@ -654,15 +652,9 @@ def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     if pad:
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    if interpret is None:
-        from repro.kernels import ops
-        interpret = ops._interpret()
-    if impl == 'prefetch':
-        out = flash_decode_gqa_prefetch(qg, k, v, pos, win, scale=scale,
-                                        bs=bs_eff, interpret=interpret)
-    else:
-        out = flash_decode_gqa(qg, k, v, pos[:, None], win[:, None],
-                               scale=scale, bs=bs_eff, interpret=interpret)
+    out = flash_decode_gqa(qg, k, v, pos, win, scale=scale, bs=bs_eff,
+                           prefetch=(impl == 'prefetch'),
+                           interpret=_interpret_default(interpret))
     out = out.reshape(b, h, dh).astype(v.dtype)
     return out[:, None] if squeeze else out
 
@@ -689,12 +681,9 @@ def flash_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
     s_logical = block_tables.shape[1] * k_pages.shape[1]
     pos = _norm_scalar_vec(pos, b)
     win = _norm_scalar_vec(window, b, fill=s_logical + 1)
-    if interpret is None:
-        from repro.kernels import ops
-        interpret = ops._interpret()
     out = flash_decode_gqa_paged(qg, k_pages, v_pages, pos, win,
                                  block_tables, scale=scale,
-                                 interpret=interpret)
+                                 interpret=_interpret_default(interpret))
     out = out.reshape(b, h, dh).astype(v_pages.dtype)
     return out[:, None] if squeeze else out
 
@@ -722,11 +711,9 @@ def flash_decode_paged_mla(q: jnp.ndarray, c_pages: jnp.ndarray,
     s_logical = block_tables.shape[1] * c_pages.shape[1]
     pos = _norm_scalar_vec(pos, b)
     win = _norm_scalar_vec(window, b, fill=s_logical + 1)
-    if interpret is None:
-        from repro.kernels import ops
-        interpret = ops._interpret()
     out = flash_decode_mla_paged(q, c_pages, pos, win, block_tables,
-                                 scale=scale, r=r, interpret=interpret)
+                                 scale=scale, r=r,
+                                 interpret=_interpret_default(interpret))
     return out if had_q_axis else out[:, 0]
 
 
@@ -757,12 +744,42 @@ def flash_decode_paged_q8(q: jnp.ndarray, k_pages: jnp.ndarray,
     pos = _norm_scalar_vec(pos, b)
     win = _norm_scalar_vec(window, b, fill=s_logical + 1)
     hw = jnp.asarray(hot_window, jnp.int32).reshape(-1)[:1]
-    if interpret is None:
-        from repro.kernels import ops
-        interpret = ops._interpret()
     out = flash_decode_gqa_paged_q8(qg, k_pages, v_pages, kq_pages,
                                     vq_pages, k_scales, v_scales, pos, win,
                                     block_tables, hw, scale=scale,
-                                    interpret=interpret)
+                                    interpret=_interpret_default(interpret))
     out = out.reshape(b, h, dh).astype(v_pages.dtype)
     return out[:, None] if squeeze else out
+
+
+def flash_decode_paged_mla_q8(q: jnp.ndarray, c_pages: jnp.ndarray,
+                              cq_pages: jnp.ndarray, c_scales: jnp.ndarray,
+                              pos: jnp.ndarray, block_tables: jnp.ndarray,
+                              hot_window: jnp.ndarray, *, r: int,
+                              scale: float, window=None,
+                              interpret=None) -> jnp.ndarray:
+    """Shape-flexible wrapper around :func:`flash_decode_mla_paged_q8`.
+
+    q: (B, 1, H, r + d_rope) or (B, H, r + d_rope); c_pages fp +
+    cq_pages int8: (P, page_size, r + d_rope); c_scales: (P, 1) or (P,);
+    pos: scalar or (B,); block_tables: (B, W) int32; hot_window: int or
+    (1,) int32; ``r``: static latent rank.
+
+    Returns the latent-space attention output shaped like q with last dim
+    ``r``, in f32 (the caller applies ``W_uv`` once and converts).
+    """
+    had_q_axis = q.ndim == 4
+    if had_q_axis:
+        assert q.shape[1] == 1, q.shape
+    else:
+        q = q[:, None]
+    b = q.shape[0]
+    s_logical = block_tables.shape[1] * c_pages.shape[1]
+    pos = _norm_scalar_vec(pos, b)
+    win = _norm_scalar_vec(window, b, fill=s_logical + 1)
+    hw = jnp.asarray(hot_window, jnp.int32).reshape(-1)[:1]
+    cs = jnp.asarray(c_scales, jnp.float32).reshape(c_pages.shape[0], 1)
+    out = flash_decode_mla_paged_q8(q, c_pages, cq_pages, cs, pos, win,
+                                    block_tables, hw, scale=scale, r=r,
+                                    interpret=_interpret_default(interpret))
+    return out if had_q_axis else out[:, 0]

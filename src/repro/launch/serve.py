@@ -22,7 +22,11 @@ einsum oracle; under ``--continuous`` this is the scalar-prefetch paged
 kernel, so dead cache tiles are neither computed nor fetched. MLA archs
 (deepseek-v3) serve ``--continuous`` through the paged *latent* pool
 (r + d_rope per token) and the absorbed ``flash_decode_paged_mla`` kernel;
-``--kv-quant`` stays GQA-only (latent-tier int8 is follow-up work).
+with ``--kv-quant`` cold latent pages stream as int8 through
+``flash_decode_paged_mla_q8`` (quantized per-page absmax before the
+W_uk/W_uv expansion). Which kernel serves which cache is the
+``runtime/layouts.py`` registry's call — this driver never inspects cache
+leaves.
 
 ``--sample`` (with ``--temperature`` / ``--top-k``) replaces greedy argmax
 with temperature/top-k sampling.
@@ -385,10 +389,6 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
                          f'has input_kind={cfg.input_kind} (the stubbed '
                          f'frontend cannot requeue/re-prefill non-token '
                          f'prompts)')
-    if kv_quant and cfg.mla is not None:
-        raise ValueError(f'--kv-quant covers the GQA k/v pools; {arch} uses '
-                         f'MLA and latent-tier int8 is follow-up work '
-                         f'(serve it with the fp latent pool)')
     yoco = YocoConfig(mode=mode)
     rt = ModelRuntime(attn_impl=attn_impl)
     max_seq = prompt_len + gen_len

@@ -15,31 +15,17 @@ requests at heterogeneous positions.
 
 Cache layouts
 -------------
-GQA:  dict(k=(B, S_max, Hkv, dh), v=(B, S_max, Hkv, dh), pos=())
-MLA:  dict(ckv=(B, S_max, r), krope=(B, S_max, d_rope), pos=())
-      — the latent cache; decode absorbs W_uk/W_uv so attention runs in
-      latent space (r + d_rope per token instead of 2*H*dh).
-Paged GQA: dict(k=(P, page_size, Hkv, dh), v=(P, page_size, Hkv, dh),
-      bt=(B, W) int32) — pool + block tables (``runtime.kv_cache``). The
-      ``bt`` key is the layout discriminator: caches carrying it route
-      writes through the paged scatter and decode reads through
-      ``flash_decode_paged`` (or the densified einsum oracle).
-Paged MLA: dict(cl=(P, page_size, r + d_rope), bt=(B, W) int32) — ONE
-      latent pool per layer (``ckv`` in the first r columns, ``krope`` in
-      the last d_rope; they are written together and scored together, so
-      splitting them would double the page bookkeeping for nothing). Same
-      ``bt`` discriminator and the exact same block-table contract as the
-      GQA pools; decode reads through ``flash_decode_paged_mla`` (or the
-      densified absorbed-einsum oracle). fp-only: latent-tier int8
-      (``kv_dtype='int8'``) is follow-up work and raises.
-Quantized paged GQA: the paged layout plus int8 pools ``kq``/``vq``,
-      per-page per-head scales ``ks``/``vs`` (P, Hkv) and the hot-window
-      knob ``hw`` (1,) — ``runtime.kv_quant``'s hybrid ReRAM–SRAM tier
-      split. The ``ks`` leaf is the second-level discriminator: caches
-      carrying it decode through ``flash_decode_paged_q8`` (or the
-      tier-mixing ``dequant_gather`` einsum oracle). Writes still land in
-      the fp ``k``/``v`` pools; the scheduler quantizes pages as they age
-      out of the hot window.
+Cache dicts are classified by ``runtime.layouts``'s :class:`CacheLayout`
+registry — the ONE place allowed to inspect cache leaves. This module
+asks the registry for the layout once per call and goes through its write
+ops / densify oracle / kernel entrypoint; it never tests leaf names
+itself. The six layouts and their leaf schemas (contiguous GQA/MLA, paged
+GQA/MLA, and the two int8-tiered paged layouts) are documented in
+``runtime/layouts.py``; :func:`init_paged_cache` below builds the paged
+ones. The MLA latent tier (``kv_dtype='int8'`` on an MLA config)
+quantizes cold ``cl`` pages per-page absmax *before* the W_uk/W_uv
+expansion — its own error model, validated in tests/test_layouts.py
+against the tier-mixing absorbed einsum oracle.
 """
 
 from __future__ import annotations
@@ -129,46 +115,45 @@ def init_paged_cache(cfg, batch: int, *, num_pages: int, page_size: int,
     tier). ``dtype`` stays the hot/fp tier's dtype.
 
     MLA configs get the latent layout instead: one ``cl`` pool of width
-    ``r + d_rope`` per layer (same block tables). The int8 tier does not
-    apply — ``kv_quant``'s hotness plumbing and scales are keyed to the
-    (Hkv, dh) K/V layout, and quantizing the latent would round *before*
-    the W_uk/W_uv expansion, a different error model that needs its own
-    validation — so ``kv_dtype='int8'`` raises rather than writing silent
-    garbage through the GQA-shaped tier."""
+    ``r + d_rope`` per layer (same block tables). Their int8 tier
+    (``runtime.layouts.PagedMLAQ8Layout``) quantizes cold latent pages
+    with ONE per-page absmax scale — the rounding happens *before* the
+    W_uk/W_uv expansion, a different error model from the GQA tier (see
+    ``runtime/kv_quant.py``)."""
+    if kv_dtype not in (None, 'fp', 'int8'):
+        raise ValueError(f'kv_dtype must be None/"fp"/"int8", got {kv_dtype!r}')
+    tiered = kv_dtype == 'int8'
+    if tiered and hot_window < 1:
+        raise ValueError('hot_window must be >= 1: the page being written '
+                         'is always full-precision')
     if cfg.mla is not None:
-        if kv_dtype not in (None, 'fp'):
-            raise ValueError(
-                f'kv_dtype={kv_dtype!r} is not supported for MLA paged '
-                f'caches: the int8 KV tier quantizes (Hkv, dh) K/V pages; '
-                f'latent-tier int8 (quantizing the (r + d_rope) latent '
-                f'before the W_uk/W_uv expansion) is follow-up work — '
-                f'serve MLA with the fp latent pool')
         m = cfg.mla
-        return dict(
-            cl=jnp.zeros((num_pages, page_size,
-                          m.kv_lora_rank + m.rope_head_dim), dtype),
+        dk = m.kv_lora_rank + m.rope_head_dim
+        cache = dict(
+            cl=jnp.zeros((num_pages, page_size, dk), dtype),
             bt=jnp.zeros((batch, max_blocks), jnp.int32),
         )
+        if tiered:
+            cache.update(
+                clq=jnp.zeros((num_pages, page_size, dk), jnp.int8),
+                cs=jnp.zeros((num_pages, 1), jnp.float32),
+                hw=jnp.full((1,), hot_window, jnp.int32),
+            )
+        return cache
     hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
     cache = dict(
         k=jnp.zeros((num_pages, page_size, hkv, dh), dtype),
         v=jnp.zeros((num_pages, page_size, hkv, dh), dtype),
         bt=jnp.zeros((batch, max_blocks), jnp.int32),
     )
-    if kv_dtype is None or kv_dtype == 'fp':
-        return cache
-    if kv_dtype != 'int8':
-        raise ValueError(f'kv_dtype must be None/"fp"/"int8", got {kv_dtype!r}')
-    if hot_window < 1:
-        raise ValueError('hot_window must be >= 1: the page being written '
-                         'is always full-precision')
-    cache.update(
-        kq=jnp.zeros((num_pages, page_size, hkv, dh), jnp.int8),
-        vq=jnp.zeros((num_pages, page_size, hkv, dh), jnp.int8),
-        ks=jnp.zeros((num_pages, hkv), jnp.float32),
-        vs=jnp.zeros((num_pages, hkv), jnp.float32),
-        hw=jnp.full((1,), hot_window, jnp.int32),
-    )
+    if tiered:
+        cache.update(
+            kq=jnp.zeros((num_pages, page_size, hkv, dh), jnp.int8),
+            vq=jnp.zeros((num_pages, page_size, hkv, dh), jnp.int8),
+            ks=jnp.zeros((num_pages, hkv), jnp.float32),
+            vs=jnp.zeros((num_pages, hkv), jnp.float32),
+            hw=jnp.full((1,), hot_window, jnp.int32),
+        )
     return cache
 
 
@@ -211,18 +196,12 @@ def decode_mask(pos: jnp.ndarray, smax: int,
 
 
 def _cache_update(c: jnp.ndarray, t: jnp.ndarray, pos) -> jnp.ndarray:
-    """Write the step's K/V slab ``t`` (B, 1, ...) into cache ``c``
-    (B, S_max, ...) at absolute position ``pos`` (scalar, or (B,) for
-    heterogeneous-position batches)."""
-    t = t.astype(c.dtype)
-    if jnp.ndim(pos) == 0:
-        return jax.lax.dynamic_update_slice(
-            c, t, (0, pos) + (0,) * (c.ndim - 2))
-
-    def one(cb, tb, pb):
-        return jax.lax.dynamic_update_slice(
-            cb, tb, (pb,) + (0,) * (cb.ndim - 1))
-    return jax.vmap(one)(c, t, jnp.asarray(pos, jnp.int32))
+    """Write the step's K/V slab ``t`` (B, 1, ...) into a contiguous cache
+    ``c`` (B, S_max, ...) at absolute position ``pos`` (scalar, or (B,)
+    for heterogeneous-position batches). Thin alias of the registry's
+    dense write op (the layouts own all cache-writing discipline)."""
+    from repro.runtime import layouts
+    return layouts.dense_token_update(c, t, pos)
 
 
 # ----------------------------------------------------------------------------
@@ -307,23 +286,13 @@ def attention(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
         positions = rope_mod.default_positions(b, s)
     q, k, v = _project_qkv(p, x, cfg, yoco, positions, theta)
     new_cache = None
-    if cache is not None and 'bt' in cache:
-        from repro.runtime import kv_cache as kvc
+    if cache is not None:
+        from repro.runtime import layouts
         # quantized layouts prefill the fp (hot) pools too — the scheduler
-        # quantizes aged-out pages after admission; extra tier leaves
-        # (kq/vq/ks/vs/hw) pass through untouched
-        new_cache = dict(
-            cache,
-            k=kvc.paged_prefill_update(cache['k'], k, cache['bt']),
-            v=kvc.paged_prefill_update(cache['v'], v, cache['bt']),
-        )
-    elif cache is not None:
-        new_cache = dict(
-            k=jax.lax.dynamic_update_slice(
-                cache['k'], k.astype(cache['k'].dtype), (0, 0, 0, 0)),
-            v=jax.lax.dynamic_update_slice(
-                cache['v'], v.astype(cache['v'].dtype), (0, 0, 0, 0)),
-        )
+        # quantizes aged-out pages after admission; tier leaves pass
+        # through untouched (the layout owns that discipline)
+        new_cache = layouts.get_layout(cache).write_prefill(
+            cache, dict(k=k, v=v))
     mask = causal_mask(s, s, 0, window)
     out = _sdpa(q, k, v, mask, 1.0 / jnp.sqrt(dh).astype(jnp.float32))
     out = yoco_linear.linear(out.reshape(b, s, -1), p['wo'], cfg=yoco)
@@ -354,43 +323,21 @@ def attention_decode(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
     scale = 1.0 / float(dh) ** 0.5
     use_flash = (rt is not None
                  and getattr(rt, 'attn_impl', 'einsum') == 'flash')
-    if 'bt' in cache:
-        from repro.kernels import flash_decode as fd
-        from repro.runtime import kv_cache as kvc
-        posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
-        # writes always land in the fp (hot-tier) pools, quantized or not
-        ck = kvc.paged_token_update(cache['k'], k, posv, cache['bt'])
-        cv = kvc.paged_token_update(cache['v'], v, posv, cache['bt'])
-        new_cache = dict(cache, k=ck, v=cv)
-        if 'ks' in cache:              # hybrid-precision tier (kv_quant)
-            from repro.runtime import kv_quant as kvq
-            if use_flash:
-                out = fd.flash_decode_paged_q8(
-                    q, ck, cv, cache['kq'], cache['vq'], cache['ks'],
-                    cache['vs'], posv, cache['bt'], cache['hw'],
-                    scale=scale, window=window)
-            else:
-                kd, vd = kvq.dequant_gather(new_cache, posv)
-                out = sdpa_decode(q, kd, vd, posv, scale, window)
-        elif use_flash:
-            out = fd.flash_decode_paged(q, ck, cv, posv, cache['bt'],
-                                        scale=scale, window=window)
-        else:
-            # einsum oracle on the paged layout: densify, then sdpa
-            out = sdpa_decode(q, kvc.gather_pages(ck, cache['bt']),
-                              kvc.gather_pages(cv, cache['bt']),
-                              posv, scale, window)
-        out = yoco_linear.linear(out.reshape(b, 1, -1), p['wo'], cfg=yoco)
-        return out, new_cache
-    ck = _cache_update(cache['k'], k, pos)
-    cv = _cache_update(cache['v'], v, pos)
+    from repro.runtime import layouts
+    layout = layouts.get_layout(cache)
+    posr = (jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+            if layout.paged else pos)
+    # writes always land in the fp (hot-tier) pools, quantized or not
+    new_cache = layout.write_token(cache, dict(k=k, v=v), posr)
     if use_flash:
-        from repro.kernels import flash_decode as fd
-        out = fd.flash_decode(q, ck, cv, pos, scale=scale, window=window)
+        out = layout.flash_decode(q, new_cache, posr, scale=scale,
+                                  window=window)
     else:
-        out = sdpa_decode(q, ck, cv, pos, scale, window)
+        # einsum oracle on the layout's densified (tier-mixing) view
+        kd, vd = layout.gather(new_cache, posr)
+        out = sdpa_decode(q, kd, vd, posr, scale, window)
     out = yoco_linear.linear(out.reshape(b, 1, -1), p['wo'], cfg=yoco)
-    return out, dict(k=ck, v=cv)
+    return out, new_cache
 
 
 # ----------------------------------------------------------------------------
@@ -460,22 +407,12 @@ def mla_attention(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
     q_nope, q_rope, k_nope, krope, v, ckv = _mla_qkv_full(
         p, x, cfg, yoco, positions)
     new_cache = None
-    if cache is not None and 'bt' in cache:
-        from repro.runtime import kv_cache as kvc
-        # paged latent prefill: ckv and krope scatter as ONE row per token
-        new_cache = dict(
-            cache,
-            cl=kvc.paged_prefill_update(
-                cache['cl'], jnp.concatenate([ckv, krope], axis=-1),
-                cache['bt']),
-        )
-    elif cache is not None:
-        new_cache = dict(
-            ckv=jax.lax.dynamic_update_slice(
-                cache['ckv'], ckv.astype(cache['ckv'].dtype), (0, 0, 0)),
-            krope=jax.lax.dynamic_update_slice(
-                cache['krope'], krope.astype(cache['krope'].dtype), (0, 0, 0)),
-        )
+    if cache is not None:
+        from repro.runtime import layouts
+        # paged latent layouts scatter ckv ‖ krope as ONE row per token;
+        # the registry owns that concatenation discipline
+        new_cache = layouts.get_layout(cache).write_prefill(
+            cache, dict(ckv=ckv, krope=krope))
     scale = 1.0 / jnp.sqrt(float(m.nope_head_dim + m.rope_head_dim))
     mask = causal_mask(s, s)
     lo = jnp.einsum('bqhd,bshd->bhqs', q_nope, k_nope,
@@ -569,11 +506,13 @@ def mla_attention_decode(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
 
     ``pos``: scalar int or (B,) vector of per-request absolute positions.
 
-    Caches carrying ``bt`` use the paged latent layout (one ``cl`` pool);
-    ``rt.attn_impl == 'flash'`` then routes the read through
-    ``flash_decode_paged_mla`` (dead latent tiles neither computed nor
-    fetched), otherwise the densified :func:`mla_absorbed_attend` oracle
-    runs. Either way W_uv is applied once, outside the softmax loop."""
+    The cache's :class:`~repro.runtime.layouts.CacheLayout` routes the
+    read: paged latent layouts under ``rt.attn_impl == 'flash'`` go
+    through their kernel entrypoint (``flash_decode_paged_mla`` /
+    ``_mla_q8`` — dead latent tiles neither computed nor fetched),
+    everything else through the densified :func:`mla_absorbed_attend`
+    oracle (tier-mixing for the quantized layout). Either way W_uv is
+    applied once, outside the softmax loop."""
     m = cfg.mla
     b = x.shape[0]
     h = cfg.n_heads
@@ -605,29 +544,24 @@ def mla_attention_decode(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
     use_flash = (rt is not None
                  and getattr(rt, 'attn_impl', 'einsum') == 'flash')
 
-    if 'bt' in cache:
-        from repro.kernels import flash_decode as fd
-        from repro.runtime import kv_cache as kvc
-        r = m.kv_lora_rank
-        posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
-        cl = kvc.paged_token_update(
-            cache['cl'], jnp.concatenate([ckv_t, krope_t], axis=-1), posv,
-            cache['bt'])
-        new_cache = dict(cache, cl=cl)
-        if use_flash:
-            o_lat = fd.flash_decode_paged_mla(
-                jnp.concatenate([q_lat, q_rope.astype(jnp.float32)], -1),
-                cl, posv, cache['bt'], r=r, scale=scale)
-        else:
-            # absorbed einsum oracle on the paged layout: densify, attend
-            dense = kvc.gather_pages(cl, cache['bt'])
-            o_lat = mla_absorbed_attend(q_lat, q_rope, dense[..., :r],
-                                        dense[..., r:], posv, scale)
+    from repro.runtime import layouts
+    layout = layouts.get_layout(cache)
+    r = m.kv_lora_rank
+    posr = (jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+            if layout.paged else pos)
+    # writes always land in the fp latent pool, quantized layout or not
+    new_cache = layout.write_token(cache, dict(ckv=ckv_t, krope=krope_t),
+                                   posr)
+    if use_flash and layout.paged:
+        o_lat = layout.flash_decode(
+            jnp.concatenate([q_lat, q_rope.astype(jnp.float32)], -1),
+            new_cache, posr, scale=scale, r=r)
     else:
-        ckv = _cache_update(cache['ckv'], ckv_t, pos)
-        krope = _cache_update(cache['krope'], krope_t, pos)
-        new_cache = dict(ckv=ckv, krope=krope)
-        o_lat = mla_absorbed_attend(q_lat, q_rope, ckv, krope, pos, scale)
+        # absorbed einsum oracle on the layout's densified (tier-mixing)
+        # latent view (the MLA flash kernels are paged-only)
+        ckv_d, krope_d = layout.gather(new_cache, posr, r=r)
+        o_lat = mla_absorbed_attend(q_lat, q_rope, ckv_d, krope_d, posr,
+                                    scale)
 
     out = jnp.einsum('bqhr,rhd->bqhd', o_lat, w_uv.astype(jnp.float32))
     out = out.reshape(b, 1, -1).astype(x.dtype)

@@ -366,11 +366,12 @@ def init_paged_cache_tree(cfg, batch: int, *, num_pages: int,
     the layer scan slices it for free; ``runtime.kv_cache.with_block_tables``
     refreshes every copy when the scheduler reassigns pages).
 
-    ``kv_dtype='int8'`` builds the hybrid-precision tier layout
-    (``runtime.kv_quant``): per-layer int8 pools + scale leaves and the
-    per-layer-broadcast ``hw`` hot-window knob, alongside the fp pools.
-    MLA configs get one latent ``cl`` pool per layer instead of k/v pairs
-    (fp-only — latent-tier int8 raises; see ``attention.init_paged_cache``).
+    ``kv_dtype='int8'`` builds the hybrid-precision tier layouts
+    (``runtime.layouts.PagedQ8Layout`` / ``PagedMLAQ8Layout``): per-layer
+    int8 pools + scale leaves and the per-layer-broadcast ``hw``
+    hot-window knob, alongside the fp pools. MLA configs get one latent
+    ``cl`` pool per layer instead of k/v pairs; their int8 tier quantizes
+    the latent per-page absmax before the W_uk/W_uv expansion.
 
     Attention-cache families only: an SSM/hybrid decode state has no
     position to page behind (ROADMAP open item)."""

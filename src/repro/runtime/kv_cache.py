@@ -29,9 +29,10 @@ Split of responsibilities:
   ``launch/serve.py`` drives it; the device never sees the free list.
 * pure jittable array ops (``paged_token_update`` / ``paged_prefill_update``
   / ``gather_pages`` / ``with_block_tables``) — everything that runs inside
-  the jit'd serve steps. ``models.attention`` calls these; this module
-  deliberately imports nothing from ``models`` so the dependency stays
-  one-way.
+  the jit'd serve steps. ``runtime.layouts``'s :class:`CacheLayout`
+  registry routes the model's cache dicts onto these ops (this module
+  never inspects cache leaves itself); ``models.attention`` talks to the
+  registry, so the dependency stays one-way.
 """
 
 from __future__ import annotations
@@ -191,23 +192,15 @@ def scatter_pages(pool: jnp.ndarray, dense: jnp.ndarray,
         blocks.astype(pool.dtype))
 
 
-def with_block_tables(cache_tree, tables: jnp.ndarray):
-    """Replace every ``bt`` leaf in a (possibly layer-stacked) cache tree
-    with ``tables`` broadcast over the leaf's leading layer dim. The
-    scheduler calls this each time admissions/evictions change the tables;
-    pools pass through by reference (no copy)."""
-    tables = jnp.asarray(tables, jnp.int32)
-
-    def walk(node):
-        if isinstance(node, dict):
-            out = {}
-            for key, val in node.items():
-                if key == 'bt':
-                    out[key] = jnp.broadcast_to(
-                        tables[None], (val.shape[0],) + tables.shape)
-                else:
-                    out[key] = walk(val)
-            return out
-        return node
-
-    return walk(cache_tree)
+def with_block_tables(cache_tree, tables: jnp.ndarray, hot_window=None):
+    """Refresh every paged layout's block-table leaves in a (possibly
+    layer-stacked) cache tree with ``tables``, broadcast over each leaf's
+    leading layer dim (``hot_window`` additionally rewrites the tiered
+    layouts' ``hw`` copies). The scheduler calls this each time
+    admissions/evictions change the tables; pools pass through by
+    reference (no copy). Layout-driven: ``runtime.layouts``'s registry
+    decides which leaves are table copies — kept here as the public name
+    the scheduler uses."""
+    from repro.runtime import layouts
+    return layouts.with_block_tables(cache_tree, tables,
+                                     hot_window=hot_window)

@@ -7,31 +7,41 @@ precision tier (SRAM) for the data still being worked on. The serving-side
 twin of that split is the KV cache: the last ``hot_window`` pages of every
 request — the ones the decode head is actively writing and re-reading —
 stay full-precision, while pages that age out of the window are quantized
-once to int8 with per-page, per-head absmax scales and stream from the
-cheap tier forever after. Cold pages are never written again (writes only
-land at the decode head, which is always inside the hot window), so one
-quantization per page is exact bookkeeping, not an approximation loop.
+once to int8 and stream from the cheap tier forever after. Cold pages are
+never written again (writes only land at the decode head, which is always
+inside the hot window), so one quantization per page is exact bookkeeping,
+not an approximation loop.
 
-Quantized-layer cache layout (the ``ks`` leaf is the layout discriminator,
-the way ``bt`` discriminates paged from contiguous):
+Two tiered layouts share the machinery (leaf schemas and routing live in
+``runtime/layouts.py``'s :class:`CacheLayout` registry):
 
-    k, v    (P, page_size, Hkv, dh)  fp pool — the "SRAM" tier; all
-                                     writes (prefill + decode) land here
-    kq, vq  (P, page_size, Hkv, dh)  int8 pool — the "ReRAM" tier
-    ks, vs  (P, Hkv) f32             per-page, per-head absmax scales
-    bt      (B, W) int32             block tables (shared with the fp path)
-    hw      (1,) int32               hot window, in pages (>= 1)
+* **GQA** (:class:`~repro.runtime.layouts.PagedQ8Layout`): int8 ``kq``/
+  ``vq`` pools + per-page, per-head absmax scales ``ks``/``vs`` (P, Hkv)
+  alongside the fp ``k``/``v`` pools. The quantized operands are the
+  attention inputs themselves, so the per-head scale granularity matches
+  the per-channel discipline of ``core/quant``.
+* **MLA latent** (:class:`~repro.runtime.layouts.PagedMLAQ8Layout`): int8
+  ``clq`` pool + ONE per-page absmax scale ``cs`` (P, 1) alongside the fp
+  ``cl`` latent pool. This is a genuinely different error model from the
+  GQA tier: the latent is quantized *before* the W_uk/W_uv expansion, so
+  the rounding error passes through the up-projections and lands on every
+  head's keys AND values at once (there is no per-head axis to scale
+  against — the latent is shared by all heads, which is also why one
+  scalar per page is the natural granularity). It is validated against
+  the tier-mixing absorbed einsum oracle (:func:`dequant_gather_mla` +
+  ``attention.mla_absorbed_attend``), not the GQA tier's oracle.
 
-Hotness rule (shared by the Pallas kernel's index maps, the einsum oracle
-in :func:`dequant_gather`, and the scheduler's aging bookkeeping): block
-``s`` of a request at position ``pos`` is HOT iff
-``s > pos // page_size - hw``. The block containing ``pos`` is therefore
-always hot — hw=1 is the leanest legal setting, hw >= W disables the int8
-tier entirely (bit-exact with the fp paged path).
+Hotness rule (shared by the Pallas kernels' index maps, the einsum oracles
+here, and the scheduler's aging bookkeeping): block ``s`` of a request at
+position ``pos`` is HOT iff ``s > pos // page_size - hw``. The block
+containing ``pos`` is therefore always hot — hw=1 is the leanest legal
+setting, hw >= W disables the int8 tier entirely (bit-exact with the fp
+paged path, both layouts).
 
 Both pools are resident in this emulation — this models a tiered memory's
-*traffic*, not its capacity; ``core.hwmodel.decode_kv_traffic`` prices the
-bytes each tier actually moves per decode step.
+*traffic*, not its capacity; ``core.hwmodel.decode_kv_traffic`` /
+``decode_latent_traffic`` price the bytes each tier actually moves per
+decode step.
 
 Quantization reuses ``core.quant``'s absmax primitives (the digital
 contract of the YOCO array); nothing here re-derives rounding.
@@ -41,7 +51,6 @@ from __future__ import annotations
 
 from typing import List
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import quant
@@ -52,11 +61,12 @@ from repro.runtime import kv_cache as kvc
 # pure device-side ops (jittable)
 # ----------------------------------------------------------------------------
 def quantize_pages_layer(c: dict, pages: jnp.ndarray) -> dict:
-    """Quantize physical pages ``pages`` of ONE quantized-layer cache dict
-    from the fp pool into the int8 pool + scales. Idempotent, and padding
-    the index vector with the garbage page 0 is harmless (page 0 is always
-    masked on read) — the scheduler pads its aged-out page lists with 0 so
-    the op keeps one jit'd shape per chunk width.
+    """Quantize physical pages ``pages`` of ONE quantized-layer GQA cache
+    dict from the fp pools into the int8 pools + per-page/per-head scales.
+    Idempotent, and padding the index vector with the garbage page 0 is
+    harmless (page 0 is always masked on read) — the scheduler pads its
+    aged-out page lists with 0 so the op keeps one jit'd shape per chunk
+    width.
     """
     pages = jnp.asarray(pages, jnp.int32).reshape(-1)
     out = dict(c)
@@ -69,56 +79,52 @@ def quantize_pages_layer(c: dict, pages: jnp.ndarray) -> dict:
     return out
 
 
-def quantize_tree_pages(cache_tree, pages: jnp.ndarray):
-    """Apply :func:`quantize_pages_layer` to every quantized layer dict in
-    a (possibly layer-stacked) cache tree. Page indices are physical, so
-    one vector covers every layer (each layer owns its own pool but the
-    block tables — and therefore the page numbering discipline — are
-    shared). Non-quantized subtrees pass through untouched."""
+def quantize_latent_pages_layer(c: dict, pages: jnp.ndarray) -> dict:
+    """Quantize physical pages ``pages`` of ONE quantized-layer MLA latent
+    cache dict from the fp ``cl`` pool into the int8 ``clq`` pool + ONE
+    per-page absmax scale each (``cs`` (P, 1)) — the latent is quantized
+    *before* the W_uk/W_uv expansion and is shared by every head, so there
+    is no per-head scale axis. Same idempotence / garbage-page-padding
+    contract as :func:`quantize_pages_layer`."""
     pages = jnp.asarray(pages, jnp.int32).reshape(-1)
+    tiles = c['cl'][pages].astype(jnp.float32)          # (N, ps, r+d_rope)
+    scale = quant.absmax_scale(tiles, axis=0)           # (N, 1, 1)
+    q8 = quant.quantize(tiles, scale)
+    return dict(c,
+                clq=c['clq'].at[pages].set(q8),
+                cs=c['cs'].at[pages].set(scale[:, 0, :]))
 
-    def quant_stack(node):
-        keys = ('k', 'v', 'kq', 'vq', 'ks', 'vs')
-        if node['ks'].ndim == 2:           # single layer dict
-            return quantize_pages_layer(node, pages)
 
-        def one(*leaves):
-            d = quantize_pages_layer(dict(zip(keys, leaves)), pages)
-            return tuple(d[k] for k in keys)
+def quantize_tree_pages(cache_tree, pages: jnp.ndarray):
+    """Quantize pages in every quantized layer dict of a (possibly
+    layer-stacked) cache tree — GQA and MLA latent tiers alike. Page
+    indices are physical, so one vector covers every layer (each layer
+    owns its own pool but the block tables — and therefore the page
+    numbering discipline — are shared). Non-quantized subtrees pass
+    through untouched.
 
-        stacked = jax.vmap(one)(*(node[k] for k in keys))
-        return dict(node, **dict(zip(keys, stacked)))
-
-    def walk(node):
-        if isinstance(node, dict):
-            if 'ks' in node:
-                return quant_stack(node)
-            return {k: walk(v) for k, v in node.items()}
-        return node
-
-    return walk(cache_tree)
+    The walk is layout-driven: ``runtime.layouts`` detects each dict
+    node's :class:`~repro.runtime.layouts.CacheLayout` and applies that
+    layout's quantize op (vmapped over stacked layers). Kept here as the
+    public name the scheduler jits; the registry owns the routing."""
+    from repro.runtime import layouts
+    return layouts.quantize_tree_pages(cache_tree, pages)
 
 
 def dequant_gather(c: dict, pos: jnp.ndarray):
-    """Densify ONE quantized-layer cache into contiguous (B, W*ps, Hkv, dh)
-    K/V views in the fp pool's dtype, mixing tiers per the hotness rule —
-    the einsum-oracle path for the quantized layout (and the debugging lens
-    on tier state). Returning the pool dtype keeps the full-hot-window case
-    bit-identical with the fp paged oracle; the q8 kernel rounds its
-    in-VMEM dequant through the same serving dtype, so the cold tiers
-    agree exactly too.
+    """Densify ONE quantized-layer GQA cache into contiguous
+    (B, W*ps, Hkv, dh) K/V views in the fp pool's dtype, mixing tiers per
+    the hotness rule — the einsum-oracle path for the quantized layout
+    (and the debugging lens on tier state). Returning the pool dtype keeps
+    the full-hot-window case bit-identical with the fp paged oracle; the
+    q8 kernel rounds its in-VMEM dequant through the same serving dtype,
+    so the cold tiers agree exactly too.
 
     ``pos``: (B,) int32 per-request positions (the decode step's write
     positions; hotness is evaluated against them exactly as the kernel's
     index maps do)."""
+    hot = _hot_mask(c, pos)[:, :, None, None]            # (B, W*ps, 1, 1)
     bt = c['bt']
-    ps = c['k'].shape[1]
-    w = bt.shape[1]
-    pos = jnp.asarray(pos, jnp.int32).reshape(-1)
-    last = pos // ps
-    hot_blk = jnp.arange(w, dtype=jnp.int32)[None, :] > \
-        (last[:, None] - c['hw'][0])                        # (B, W)
-    hot = jnp.repeat(hot_blk, ps, axis=1)[:, :, None, None]  # (B, W*ps,1,1)
 
     def densify(pool, qpool, sc):
         fp = kvc.gather_pages(pool, bt)
@@ -130,13 +136,44 @@ def dequant_gather(c: dict, pos: jnp.ndarray):
     return densify(c['k'], 'kq', 'ks'), densify(c['v'], 'vq', 'vs')
 
 
+def dequant_gather_mla(c: dict, pos: jnp.ndarray) -> jnp.ndarray:
+    """Densify ONE quantized-layer MLA latent cache into the contiguous
+    (B, W*ps, r + d_rope) latent view in the fp pool's dtype, mixing tiers
+    per the hotness rule — the absorbed-einsum-oracle path for the
+    quantized latent layout (the caller splits ckv/krope at ``r``). Same
+    dtype-rounding contract as :func:`dequant_gather`, so the MLA q8
+    kernel agrees with ``mla_absorbed_attend`` over this view to f32
+    roundoff."""
+    hot = _hot_mask(c, pos, pool_key='cl')[:, :, None]   # (B, W*ps, 1)
+    bt = c['bt']
+    fp = kvc.gather_pages(c['cl'], bt)
+    q_pages = c['clq'][bt].astype(jnp.float32)           # (B, W, ps, dk)
+    scales = c['cs'][bt][:, :, None, :]                  # (B, W, 1, 1)
+    cold = (q_pages * scales).reshape(fp.shape).astype(c['cl'].dtype)
+    return jnp.where(hot, fp, cold)
+
+
+def _hot_mask(c: dict, pos: jnp.ndarray, pool_key: str = 'k') -> jnp.ndarray:
+    """(B, W*page_size) bool hot mask for a quantized-layer cache dict at
+    per-request ``pos`` — THE hotness rule, evaluated exactly as the
+    kernels' index maps do."""
+    bt = c['bt']
+    ps = c[pool_key].shape[1]
+    w = bt.shape[1]
+    pos = jnp.asarray(pos, jnp.int32).reshape(-1)
+    last = pos // ps
+    hot_blk = jnp.arange(w, dtype=jnp.int32)[None, :] > \
+        (last[:, None] - c['hw'][0])                        # (B, W)
+    return jnp.repeat(hot_blk, ps, axis=1)                  # (B, W*ps)
+
+
 # ----------------------------------------------------------------------------
 # host-side tier bookkeeping (drives the jit'd quantize op)
 # ----------------------------------------------------------------------------
 def cold_block_count(pos: int, page_size: int, hot_window: int) -> int:
     """Number of leading blocks outside the hot window for a request about
-    to write at ``pos`` — THE hotness rule's host-side form (the kernel's
-    index maps and :func:`dequant_gather` evaluate its complement
+    to write at ``pos`` — THE hotness rule's host-side form (the kernels'
+    index maps and the dequant oracles evaluate its complement
     ``s > pos // page_size - hw`` per block)."""
     return max(0, pos // page_size + 1 - hot_window)
 
@@ -158,11 +195,12 @@ def cold_page_list(tables, pos, page_size: int, hot_window: int):
 
 class KVTierTracker:
     """Tracks, per slot, how many leading blocks have aged out of the hot
-    window and been quantized — the host-side mirror of the hotness rule.
-    The continuous scheduler owns one of these and calls :meth:`aged_out`
-    each step; released/preempted slots call :meth:`reset` (their pages
-    return to the free list and will be re-quantized by their next owner
-    once they age out again)."""
+    window and been quantized — the host-side mirror of the hotness rule
+    (layout-agnostic: physical page indices work for GQA and MLA latent
+    pools alike). The continuous scheduler owns one of these and calls
+    :meth:`aged_out` each step; released/preempted slots call :meth:`reset`
+    (their pages return to the free list and will be re-quantized by their
+    next owner once they age out again)."""
 
     def __init__(self, hot_window: int, page_size: int):
         assert hot_window >= 1, \

@@ -1,0 +1,480 @@
+"""The cache-layout registry: every KV-cache layout the serving stack
+knows, as one typed :class:`CacheLayout` each — the single place that is
+allowed to look at a cache dict's leaves.
+
+Before this module, the decode stack dispatched layouts by sniffing magic
+dict leaves (``'bt' in cache``, ``'ks' in cache``) at every call site, and
+each layout grew its own near-duplicate kernel body. The registry inverts
+that: a cache dict is classified ONCE (:func:`get_layout`, by leaf
+schema), and the returned layout owns everything the serving stack needs —
+
+* **leaf schema**: which pool / table / tier leaves the layout carries
+  (documented per class; ``model.init_paged_cache_tree`` builds them);
+* **write ops**: where a decode token / a prefill slab lands (always the
+  fp pools — tiered layouts quantize pages only as they age out);
+* **gather / densify oracle**: the contiguous view the einsum reference
+  attends over (tier-mixing for the quantized layouts);
+* **kernel entrypoint**: which ``kernels.flash_decode`` wrapper serves the
+  layout (each wrapper hands the shared ``_flash_core`` harness the
+  layout's ``(index_maps, loader)`` pair);
+* **quantize op** (tiered layouts): how aged-out pages move to the int8
+  tier.
+
+Tree-level helpers (:func:`with_block_tables`, :func:`quantize_tree_pages`)
+walk a (possibly layer-stacked) cache tree, classify each dict node, and
+apply the matched layout's op — ``runtime.kv_cache`` and
+``runtime.kv_quant`` re-export them under their historical names.
+
+Layout schemas (single layer; layer stacks prepend an (L,) dim to every
+leaf):
+
+==================  =========================================================
+ContiguousLayout    ``k``/``v`` (B, S_max, Hkv, dh)
+ContiguousMLALayout ``ckv`` (B, S_max, r), ``krope`` (B, S_max, d_rope)
+PagedLayout         ``k``/``v`` (P, ps, Hkv, dh), ``bt`` (B, W) int32
+PagedQ8Layout       PagedLayout + ``kq``/``vq`` (P, ps, Hkv, dh) int8,
+                    ``ks``/``vs`` (P, Hkv) f32, ``hw`` (1,) int32
+PagedMLALayout      ``cl`` (P, ps, r + d_rope), ``bt`` (B, W) int32
+PagedMLAQ8Layout    PagedMLALayout + ``clq`` (P, ps, r + d_rope) int8,
+                    ``cs`` (P, 1) f32, ``hw`` (1,) int32
+==================  =========================================================
+
+``bt`` rows follow the ``runtime.kv_cache`` block-table contract (page 0 =
+garbage page); ``hw`` is the hot window in pages (>= 1; >= W disables the
+int8 tier, bit-exact with the fp layout).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime import kv_cache as kvc
+from repro.runtime import kv_quant as kvq
+
+_REGISTRY: List[Type['CacheLayout']] = []
+
+
+def _register(cls):
+    """Most-specific-first registry: classes registered earlier win ties
+    (the q8 layouts carry supersets of their fp twins' leaves)."""
+    _REGISTRY.append(cls)
+    return cls
+
+
+def get_layout(cache: dict) -> Type['CacheLayout']:
+    """Classify a cache dict by its leaf schema. Raises KeyError for a
+    dict no registered layout matches (a malformed cache must fail loudly,
+    not fall through to the wrong kernel)."""
+    lay = match_layout(cache)
+    if lay is None:
+        raise KeyError(f'no registered cache layout matches leaves '
+                       f'{sorted(cache)}; known layouts: '
+                       f'{[c.name for c in _REGISTRY]}')
+    return lay
+
+
+def match_layout(cache: dict) -> Optional[Type['CacheLayout']]:
+    """:func:`get_layout` that returns None instead of raising — the tree
+    walkers use it to skip non-cache dict nodes (e.g. {'layers': ...})."""
+    keys = set(cache)
+    for cls in _REGISTRY:
+        if cls.required <= keys:
+            return cls
+    return None
+
+
+def dense_token_update(c: jnp.ndarray, t: jnp.ndarray, pos) -> jnp.ndarray:
+    """Write the step's slab ``t`` (B, 1, ...) into a contiguous cache
+    ``c`` (B, S_max, ...) at absolute position ``pos`` (scalar, or (B,)
+    for heterogeneous-position batches)."""
+    t = t.astype(c.dtype)
+    if jnp.ndim(pos) == 0:
+        return jax.lax.dynamic_update_slice(
+            c, t, (0, pos) + (0,) * (c.ndim - 2))
+
+    def one(cb, tb, pb):
+        return jax.lax.dynamic_update_slice(
+            cb, tb, (pb,) + (0,) * (cb.ndim - 1))
+    return jax.vmap(one)(c, t, jnp.asarray(pos, jnp.int32))
+
+
+def _pos_vec(pos, b: int) -> jnp.ndarray:
+    return jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+
+
+def _latent_row(updates: dict) -> jnp.ndarray:
+    """MLA write slab: ckv ‖ krope concatenated into the one-pool row the
+    latent layouts store (written together, scored together)."""
+    return jnp.concatenate([updates['ckv'], updates['krope']], axis=-1)
+
+
+# ----------------------------------------------------------------------------
+# the layouts
+# ----------------------------------------------------------------------------
+class CacheLayout:
+    """One cache layout: leaf schema + write ops + densify oracle + kernel
+    entrypoint. All methods are classmethods over plain cache dicts — the
+    layout carries no instance state (the cache dict IS the state)."""
+
+    name: str = ''
+    required: frozenset = frozenset()   # leaf schema that identifies it
+    paged: bool = False                 # carries block tables
+    quantized: bool = False             # carries an int8 tier
+    mla: bool = False                   # latent pool (vs K/V pools)
+    table_leaves: Tuple[str, ...] = ()  # refreshed by with_block_tables
+    quant_leaves: Tuple[str, ...] = ()  # vmapped by quantize_tree_pages
+    quant_probe: str = ''               # leaf whose ndim detects stacking
+    quant_probe_ndim: int = 0           # single-layer ndim of quant_probe
+
+    # -- write ops ----------------------------------------------------------
+    @classmethod
+    def write_token(cls, cache: dict, updates: dict, pos) -> dict:
+        raise NotImplementedError
+
+    @classmethod
+    def write_prefill(cls, cache: dict, updates: dict) -> dict:
+        raise NotImplementedError
+
+    # -- densify oracle / kernel entrypoint ---------------------------------
+    @classmethod
+    def gather(cls, cache: dict, pos, r: Optional[int] = None):
+        """Contiguous views for the einsum oracle: (k, v) for K/V layouts,
+        (ckv, krope) for MLA layouts (``r`` is the static latent rank the
+        paged latent pool splits at). ``pos`` only matters to the tiered
+        layouts (hotness)."""
+        raise NotImplementedError
+
+    @classmethod
+    def flash_decode(cls, q, cache: dict, pos, *, scale, window=None,
+                     interpret=None, r: Optional[int] = None):
+        """Route the decode read through this layout's Pallas kernel
+        (``r`` is the static latent rank, MLA layouts only)."""
+        raise NotImplementedError
+
+    # -- tier ops (quantized layouts only) ----------------------------------
+    @classmethod
+    def quantize_pages(cls, cache: dict, pages) -> dict:
+        raise NotImplementedError(
+            f'{cls.name} has no int8 tier to quantize into')
+
+
+@_register
+class PagedMLAQ8Layout(CacheLayout):
+    """Paged MLA latent pool + int8 cold tier: ``cl``/``clq``/``cs``/
+    ``bt``/``hw``. Writes land in the fp ``cl`` pool; aged-out pages are
+    quantized per-page absmax *before* the W_uk/W_uv expansion (see
+    ``runtime.kv_quant`` for the error model)."""
+    name = 'paged_mla_q8'
+    required = frozenset({'cl', 'clq', 'cs', 'bt', 'hw'})
+    paged = True
+    quantized = True
+    mla = True
+    table_leaves = ('bt',)
+    quant_leaves = ('cl', 'clq', 'cs')
+    quant_probe = 'cs'
+    quant_probe_ndim = 2
+
+    @classmethod
+    def write_token(cls, cache, updates, pos):
+        lat = _latent_row(updates)
+        posv = _pos_vec(pos, lat.shape[0])
+        return dict(cache, cl=kvc.paged_token_update(cache['cl'], lat, posv,
+                                                     cache['bt']))
+
+    @classmethod
+    def write_prefill(cls, cache, updates):
+        return dict(cache, cl=kvc.paged_prefill_update(
+            cache['cl'], _latent_row(updates), cache['bt']))
+
+    @classmethod
+    def gather(cls, cache, pos, r=None):
+        assert r is not None, 'MLA gathers need the static latent rank r'
+        dense = kvq.dequant_gather_mla(
+            cache, _pos_vec(pos, cache['bt'].shape[0]))
+        return dense[..., :r], dense[..., r:]
+
+    @classmethod
+    def flash_decode(cls, q, cache, pos, *, scale, window=None,
+                     interpret=None, r=None):
+        from repro.kernels import flash_decode as fd
+        return fd.flash_decode_paged_mla_q8(
+            q, cache['cl'], cache['clq'], cache['cs'], pos, cache['bt'],
+            cache['hw'], r=r, scale=scale, window=window,
+            interpret=interpret)
+
+    @classmethod
+    def quantize_pages(cls, cache, pages):
+        return kvq.quantize_latent_pages_layer(cache, pages)
+
+
+@_register
+class PagedMLALayout(CacheLayout):
+    """Paged MLA latent pool: one ``cl`` pool (ckv ‖ krope per row) +
+    shared ``bt`` block tables. fp-only; the q8 twin adds the cold tier."""
+    name = 'paged_mla'
+    required = frozenset({'cl', 'bt'})
+    paged = True
+    mla = True
+    table_leaves = ('bt',)
+
+    @classmethod
+    def write_token(cls, cache, updates, pos):
+        lat = _latent_row(updates)
+        posv = _pos_vec(pos, lat.shape[0])
+        return dict(cache, cl=kvc.paged_token_update(cache['cl'], lat, posv,
+                                                     cache['bt']))
+
+    @classmethod
+    def write_prefill(cls, cache, updates):
+        return dict(cache, cl=kvc.paged_prefill_update(
+            cache['cl'], _latent_row(updates), cache['bt']))
+
+    @classmethod
+    def gather(cls, cache, pos, r=None):
+        del pos
+        assert r is not None, 'MLA gathers need the static latent rank r'
+        dense = kvc.gather_pages(cache['cl'], cache['bt'])
+        return dense[..., :r], dense[..., r:]
+
+    @classmethod
+    def flash_decode(cls, q, cache, pos, *, scale, window=None,
+                     interpret=None, r=None):
+        from repro.kernels import flash_decode as fd
+        return fd.flash_decode_paged_mla(q, cache['cl'], pos, cache['bt'],
+                                         r=r, scale=scale, window=window,
+                                         interpret=interpret)
+
+
+@_register
+class PagedQ8Layout(CacheLayout):
+    """Paged GQA pools + int8 cold tier: ``k``/``v``/``kq``/``vq``/``ks``/
+    ``vs``/``bt``/``hw``. Writes land in the fp pools; aged-out pages are
+    quantized per-page, per-head absmax."""
+    name = 'paged_q8'
+    required = frozenset({'k', 'v', 'kq', 'vq', 'ks', 'vs', 'bt', 'hw'})
+    paged = True
+    quantized = True
+    table_leaves = ('bt',)
+    quant_leaves = ('k', 'v', 'kq', 'vq', 'ks', 'vs')
+    quant_probe = 'ks'
+    quant_probe_ndim = 2
+
+    @classmethod
+    def write_token(cls, cache, updates, pos):
+        posv = _pos_vec(pos, updates['k'].shape[0])
+        return dict(
+            cache,
+            k=kvc.paged_token_update(cache['k'], updates['k'], posv,
+                                     cache['bt']),
+            v=kvc.paged_token_update(cache['v'], updates['v'], posv,
+                                     cache['bt']))
+
+    @classmethod
+    def write_prefill(cls, cache, updates):
+        return dict(
+            cache,
+            k=kvc.paged_prefill_update(cache['k'], updates['k'],
+                                       cache['bt']),
+            v=kvc.paged_prefill_update(cache['v'], updates['v'],
+                                       cache['bt']))
+
+    @classmethod
+    def gather(cls, cache, pos, r=None):
+        del r
+        return kvq.dequant_gather(cache, _pos_vec(pos,
+                                                  cache['bt'].shape[0]))
+
+    @classmethod
+    def flash_decode(cls, q, cache, pos, *, scale, window=None,
+                     interpret=None, r=None):
+        del r
+        from repro.kernels import flash_decode as fd
+        return fd.flash_decode_paged_q8(
+            q, cache['k'], cache['v'], cache['kq'], cache['vq'],
+            cache['ks'], cache['vs'], pos, cache['bt'], cache['hw'],
+            scale=scale, window=window, interpret=interpret)
+
+    @classmethod
+    def quantize_pages(cls, cache, pages):
+        return kvq.quantize_pages_layer(cache, pages)
+
+
+@_register
+class PagedLayout(CacheLayout):
+    """Paged GQA pools: ``k``/``v`` pools + shared ``bt`` block tables."""
+    name = 'paged'
+    required = frozenset({'k', 'v', 'bt'})
+    paged = True
+    table_leaves = ('bt',)
+
+    @classmethod
+    def write_token(cls, cache, updates, pos):
+        posv = _pos_vec(pos, updates['k'].shape[0])
+        return dict(
+            cache,
+            k=kvc.paged_token_update(cache['k'], updates['k'], posv,
+                                     cache['bt']),
+            v=kvc.paged_token_update(cache['v'], updates['v'], posv,
+                                     cache['bt']))
+
+    @classmethod
+    def write_prefill(cls, cache, updates):
+        return dict(
+            cache,
+            k=kvc.paged_prefill_update(cache['k'], updates['k'],
+                                       cache['bt']),
+            v=kvc.paged_prefill_update(cache['v'], updates['v'],
+                                       cache['bt']))
+
+    @classmethod
+    def gather(cls, cache, pos, r=None):
+        del pos, r
+        return (kvc.gather_pages(cache['k'], cache['bt']),
+                kvc.gather_pages(cache['v'], cache['bt']))
+
+    @classmethod
+    def flash_decode(cls, q, cache, pos, *, scale, window=None,
+                     interpret=None, r=None):
+        del r
+        from repro.kernels import flash_decode as fd
+        return fd.flash_decode_paged(q, cache['k'], cache['v'], pos,
+                                     cache['bt'], scale=scale,
+                                     window=window, interpret=interpret)
+
+
+@_register
+class ContiguousMLALayout(CacheLayout):
+    """Contiguous MLA latent cache: ``ckv``/``krope`` (B, S_max, ·). The
+    einsum-only decode layout (the MLA flash kernels are paged — serve
+    long contexts through ``--continuous``)."""
+    name = 'contiguous_mla'
+    required = frozenset({'ckv', 'krope'})
+    mla = True
+
+    @classmethod
+    def write_token(cls, cache, updates, pos):
+        return dict(cache,
+                    ckv=dense_token_update(cache['ckv'], updates['ckv'],
+                                           pos),
+                    krope=dense_token_update(cache['krope'],
+                                             updates['krope'], pos))
+
+    @classmethod
+    def write_prefill(cls, cache, updates):
+        return dict(
+            cache,
+            ckv=jax.lax.dynamic_update_slice(
+                cache['ckv'], updates['ckv'].astype(cache['ckv'].dtype),
+                (0, 0, 0)),
+            krope=jax.lax.dynamic_update_slice(
+                cache['krope'],
+                updates['krope'].astype(cache['krope'].dtype), (0, 0, 0)))
+
+    @classmethod
+    def gather(cls, cache, pos, r=None):
+        del pos, r
+        return cache['ckv'], cache['krope']
+
+
+@_register
+class ContiguousLayout(CacheLayout):
+    """Contiguous GQA cache: ``k``/``v`` (B, S_max, Hkv, dh)."""
+    name = 'contiguous'
+    required = frozenset({'k', 'v'})
+
+    @classmethod
+    def write_token(cls, cache, updates, pos):
+        return dict(cache,
+                    k=dense_token_update(cache['k'], updates['k'], pos),
+                    v=dense_token_update(cache['v'], updates['v'], pos))
+
+    @classmethod
+    def write_prefill(cls, cache, updates):
+        return dict(
+            cache,
+            k=jax.lax.dynamic_update_slice(
+                cache['k'], updates['k'].astype(cache['k'].dtype),
+                (0, 0, 0, 0)),
+            v=jax.lax.dynamic_update_slice(
+                cache['v'], updates['v'].astype(cache['v'].dtype),
+                (0, 0, 0, 0)))
+
+    @classmethod
+    def gather(cls, cache, pos, r=None):
+        del pos, r
+        return cache['k'], cache['v']
+
+    @classmethod
+    def flash_decode(cls, q, cache, pos, *, scale, window=None,
+                     interpret=None, r=None):
+        del r
+        from repro.kernels import flash_decode as fd
+        return fd.flash_decode(q, cache['k'], cache['v'], pos, scale=scale,
+                               window=window, interpret=interpret)
+
+
+# ----------------------------------------------------------------------------
+# tree walkers (layer-stacked cache trees)
+# ----------------------------------------------------------------------------
+def with_block_tables(cache_tree, tables: jnp.ndarray, hot_window=None):
+    """Refresh every paged layout's table leaves in a (possibly
+    layer-stacked) cache tree with ``tables``, broadcast over each leaf's
+    leading layer dim. The scheduler calls this each time admissions /
+    evictions change the tables; pools pass through by reference (no
+    copy). ``hot_window`` (optional int) additionally rewrites every
+    ``hw`` copy of the tiered layouts — the same broadcast discipline, so
+    a retuned hot window reaches every layer's copy at once."""
+    tables = jnp.asarray(tables, jnp.int32)
+
+    def walk(node):
+        if isinstance(node, dict):
+            lay = match_layout(node)
+            out = {}
+            for key, val in node.items():
+                if lay is not None and key in lay.table_leaves:
+                    out[key] = jnp.broadcast_to(
+                        tables[None], (val.shape[0],) + tables.shape)
+                elif (lay is not None and lay.quantized and key == 'hw'
+                        and hot_window is not None):
+                    out[key] = jnp.broadcast_to(
+                        jnp.asarray([hot_window], jnp.int32)[None],
+                        (val.shape[0], 1))
+                else:
+                    out[key] = walk(val)
+            return out
+        return node
+
+    return walk(cache_tree)
+
+
+def quantize_tree_pages(cache_tree, pages: jnp.ndarray):
+    """Apply each quantized layout's :meth:`~CacheLayout.quantize_pages`
+    to every matching dict node of a (possibly layer-stacked) cache tree.
+    Page indices are physical, so one vector covers every layer.
+    Non-quantized subtrees pass through untouched."""
+    pages = jnp.asarray(pages, jnp.int32).reshape(-1)
+
+    def quant_stack(lay, node):
+        keys = lay.quant_leaves
+        if node[lay.quant_probe].ndim == lay.quant_probe_ndim:
+            return lay.quantize_pages(node, pages)   # single layer dict
+
+        def one(*leaves):
+            d = lay.quantize_pages(dict(zip(keys, leaves)), pages)
+            return tuple(d[k] for k in keys)
+
+        stacked = jax.vmap(one)(*(node[k] for k in keys))
+        return dict(node, **dict(zip(keys, stacked)))
+
+    def walk(node):
+        if isinstance(node, dict):
+            lay = match_layout(node)
+            if lay is not None and lay.quantized:
+                return quant_stack(lay, node)
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    return walk(cache_tree)

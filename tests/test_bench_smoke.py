@@ -30,8 +30,9 @@ def test_bench_decode_smoke_writes_parity_checked_json(tmp_path):
 
 
 def test_bench_kv_quant_smoke_asserts_quantized_path(tmp_path):
-    """The hybrid-tier benchmark in the fast tier: q8 kernel + tier-mixing
-    oracle parity-gated against the f32 oracle, traffic model emitted."""
+    """The hybrid-tier benchmark in the fast tier: the GQA q8 kernel, the
+    MLA latent-tier kernel, and their tier-mixing oracles parity-gated
+    against the f32 oracles, traffic models emitted for both families."""
     out = tmp_path / 'BENCH_kv_quant.json'
     result = bench_kv_quant.run(smoke=True, out_path=str(out))
     assert out.exists()
@@ -39,17 +40,18 @@ def test_bench_kv_quant_smoke_asserts_quantized_path(tmp_path):
     assert on_disk['smoke'] is True
     names = {r['name'] for r in on_disk['rows']}
     assert {'einsum_oracle_f32', 'flash_paged_fp', 'einsum_q8_tier',
-            'flash_paged_q8'} <= names
+            'flash_paged_q8', 'mla_einsum_oracle_f32', 'mla_flash_paged_fp',
+            'mla_einsum_q8_tier', 'mla_flash_paged_q8'} <= names
     for row in result['rows']:
-        if row['name'] == 'einsum_oracle_f32':
+        if 'oracle' in row['name']:
             continue
-        atol = bench_kv_quant.FP_PARITY_ATOL \
-            if row['name'] == 'flash_paged_fp' \
-            else bench_kv_quant.Q8_PARITY_ATOL
-        assert row['max_abs_err_vs_oracle'] < atol
+        assert row['max_abs_err_vs_oracle'] < \
+            bench_kv_quant.parity_atol_for(row['name'])
     # traffic rows carry the hwmodel energy breakdown for both baselines
-    baselines = {t['baseline'] for t in on_disk['traffic']}
-    assert baselines == {'f32_oracle', 'bf16_pool'}
+    # and both cache families (GQA K/V pools + MLA latent pool)
+    assert {(t['family'], t['baseline']) for t in on_disk['traffic']} == \
+        {('gqa', 'f32_oracle'), ('gqa', 'bf16_pool'),
+         ('mla', 'f32_oracle'), ('mla', 'bf16_pool')}
     for t in on_disk['traffic']:
         assert t['tiered_bytes_per_token'] <= t['baseline_bytes_per_token']
         assert 'tiered_pj_per_token' in t and 'tiered_tops_w' in t

@@ -200,7 +200,7 @@ def test_q8_kernel_vs_fp_oracle_within_documented_tolerance():
 # ----------------------------------------------------------------------------
 @pytest.mark.parametrize('impl', ['einsum', 'flash'])
 def test_attention_decode_quantized_paged(impl):
-    """The 'ks' discriminator routes decode through the tier mix; writes
+    """The PagedQ8Layout schema routes decode through the tier mix; writes
     land in the fp pool; tier leaves survive the cache round-trip."""
     cfg = configs.get('stablelm-12b', smoke=True)
     p = A.init_attention(jax.random.key(10), cfg)

@@ -1,0 +1,502 @@
+"""Cache-layout registry (runtime/layouts.py) + the MLA int8 latent tier
+it unblocks: layout classification, the layout-parity grid every paged
+kernel entrypoint is held to (flash vs the layout's own densify oracle),
+layout-driven tree ops (with_block_tables / quantize_tree_pages), and the
+latent-tier error model.
+
+The whole file carries the ``layouts`` marker — ``make test-layouts`` runs
+exactly this grid (wired into ``make check``).
+
+Documented tolerances (the test_kv_quant.py convention):
+
+  * any flash kernel vs ITS OWN layout's densify oracle (same data path,
+    different accumulation order): 2e-5 on f32 pools — including the
+    tiered kernels vs their tier-mixing oracles.
+  * MLA int8 latent tier vs the fp latent oracle: 1e-1 on smoke shapes.
+    The latent is quantized per-page absmax BEFORE the W_uk/W_uv
+    expansion, so the rounding error passes through the up-projections
+    onto every head's keys and values at once — a looser bound than the
+    GQA tier's per-head-scaled 5e-2 is expected, not a regression.
+  * ``hw >= W`` never reads the int8 tier: bit-exact vs the fp paged
+    kernel, both tiered layouts.
+  * end-of-model deepseek logits, int8 latent tree vs fp paged tree:
+    exact with a covering hot window, rtol/atol 2e-1 with hw=1.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import quant
+from repro.core.yoco_linear import DEFAULT_YOCO
+from repro.kernels import flash_decode as fd
+from repro.launch import serve as SV
+from repro.models import attention as A
+from repro.models import model as M
+from repro.models.model import ModelRuntime
+from repro.runtime import kv_cache as kvc
+from repro.runtime import kv_quant as kvq
+from repro.runtime import layouts as L
+
+pytestmark = pytest.mark.layouts
+
+KERNEL_ATOL = 2e-5          # kernel vs its own layout's densify oracle
+Q8_LAT_ATOL = 1e-1          # int8 latent tier vs the fp latent oracle
+MODEL_ATOL = 2e-1           # end-of-model logits, int8 latent tree, hw=1
+
+ARCH = 'stablelm-1.6b'
+MLA_ARCH = 'deepseek-v3-671b'
+_DEEPSEEK = configs.get(MLA_ARCH, smoke=True)
+
+# W=4 pages of 8 positions: every case is multi-tile, and the grid hits a
+# page end, a page boundary, an unaligned mid-page position, and the
+# ragged full-vs-fresh extreme — the same cells the fp MLA kernel's parity
+# grid (test_mla_paged_decode.py) is held to
+POS_GRID = [
+    ('pos0', [0, 0]),
+    ('page_end', [7, 15]),
+    ('page_boundary', [8, 16]),
+    ('unaligned', [13, 29]),
+    ('ragged_full_vs_fresh', [31, 0]),
+]
+
+
+# ----------------------------------------------------------------------------
+# registry classification
+# ----------------------------------------------------------------------------
+def test_registry_classifies_every_init_path():
+    gqa = configs.get('stablelm-12b', smoke=True)
+    assert L.get_layout(A.init_cache(gqa, 2, 8)) is L.ContiguousLayout
+    assert L.get_layout(A.init_cache(_DEEPSEEK, 2, 8)) \
+        is L.ContiguousMLALayout
+    assert L.get_layout(A.init_paged_cache(
+        gqa, 2, num_pages=9, page_size=4, max_blocks=4)) is L.PagedLayout
+    assert L.get_layout(A.init_paged_cache(
+        gqa, 2, num_pages=9, page_size=4, max_blocks=4,
+        kv_dtype='int8')) is L.PagedQ8Layout
+    assert L.get_layout(A.init_paged_cache(
+        _DEEPSEEK, 2, num_pages=9, page_size=4,
+        max_blocks=4)) is L.PagedMLALayout
+    assert L.get_layout(A.init_paged_cache(
+        _DEEPSEEK, 2, num_pages=9, page_size=4, max_blocks=4,
+        kv_dtype='int8')) is L.PagedMLAQ8Layout
+
+
+def test_registry_rejects_unknown_schema():
+    with pytest.raises(KeyError, match='no registered cache layout'):
+        L.get_layout(dict(foo=jnp.zeros((2, 2))))
+    assert L.match_layout(dict(layers=object())) is None
+
+
+def test_registry_owns_all_leaf_sniffing():
+    """The acceptance gate in code: no call site outside runtime/layouts.py
+    (and this test) may test ``'bt' in cache`` / ``'ks' in cache``."""
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parent.parent / 'src'
+    offenders = []
+    for path in root.rglob('*.py'):
+        if path.name == 'layouts.py':
+            continue
+        text = path.read_text()
+        for needle in ("'bt' in ", '"bt" in ', "'ks' in ", '"ks" in ',
+                       "'cl' in ", "'cs' in "):
+            if needle in text:
+                offenders.append((str(path), needle))
+    assert not offenders, offenders
+
+
+# ----------------------------------------------------------------------------
+# tier construction helpers
+# ----------------------------------------------------------------------------
+def _mla_q8_cache(key, b, w, ps, r, dr, hot_window, pos,
+                  dtype=jnp.float32):
+    """Random dense latents scattered into a shuffled quantized-latent
+    pool with every page outside each request's hot window quantized — the
+    state the continuous scheduler maintains. Returns (cache, ckv, krope)."""
+    s = w * ps
+    ckv = jax.random.normal(jax.random.fold_in(key, 1), (b, s, r))
+    krope = jax.random.normal(jax.random.fold_in(key, 2), (b, s, dr))
+    perm = np.random.RandomState(0).permutation(np.arange(1, b * w + 1))
+    bt = jnp.asarray(perm.reshape(b, w).astype(np.int32))
+    shape = (b * w + 1, ps, r + dr)
+    cache = dict(
+        cl=kvc.scatter_pages(jnp.zeros(shape, dtype),
+                             jnp.concatenate([ckv, krope], -1), bt),
+        clq=jnp.zeros(shape, jnp.int8),
+        cs=jnp.zeros((b * w + 1, 1), jnp.float32),
+        bt=bt, hw=jnp.full((1,), hot_window, jnp.int32),
+    )
+    pages = kvq.cold_page_list(bt, pos, ps, hot_window)
+    if pages:
+        cache = kvq.quantize_latent_pages_layer(
+            cache, jnp.asarray(pages, jnp.int32))
+    return cache, ckv, krope
+
+
+# ----------------------------------------------------------------------------
+# MLA latent tier: pure ops
+# ----------------------------------------------------------------------------
+def test_quantize_latent_pages_roundtrip_error_bound():
+    """Dequantized latent pages stay within half an LSB of the per-page
+    absmax (the error model's first link: rounding before expansion)."""
+    key = jax.random.key(0)
+    b, w, ps, r, dr = 2, 3, 4, 16, 4
+    pos = [w * ps - 1] * b
+    cache, _, _ = _mla_q8_cache(key, b, w, ps, r, dr, 1, pos)
+    pages = np.unique(np.asarray(cache['bt'][:, :w - 1]))
+    pages = pages[pages != kvc.GARBAGE_PAGE]
+    deq = cache['clq'][pages].astype(jnp.float32) \
+        * cache['cs'][pages][:, None, :]
+    ref = cache['cl'][pages].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(ref), axis=(1, 2), keepdims=True)
+    bound = amax * quant.quant_error_bound() + 1e-6
+    assert float(jnp.max(jnp.abs(deq - ref) - bound)) <= 0.0
+
+
+def test_quantize_latent_pages_idempotent_and_garbage_pad_harmless():
+    key = jax.random.key(1)
+    cache, _, _ = _mla_q8_cache(key, 2, 3, 4, 16, 4, 1, [11, 11])
+    cold = np.unique(np.asarray(cache['bt'][:, :2])).tolist()
+    pages = jnp.asarray([0, 0] + cold, jnp.int32)
+    again = kvq.quantize_latent_pages_layer(cache, pages)
+    np.testing.assert_array_equal(np.asarray(again['clq']),
+                                  np.asarray(cache['clq']))
+    np.testing.assert_allclose(np.asarray(again['cs']),
+                               np.asarray(cache['cs']), atol=1e-9)
+
+
+def test_dequant_gather_mla_mixes_tiers_by_hotness():
+    """Hot latent rows come back exact; cold rows through int8 (close but
+    not equal)."""
+    key = jax.random.key(2)
+    b, w, ps, r, dr, hw = 2, 4, 4, 16, 4, 2
+    pos = jnp.array([w * ps - 1, 2 * ps], jnp.int32)
+    cache, ckv, krope = _mla_q8_cache(key, b, w, ps, r, dr, hw, pos)
+    dense = jnp.concatenate([ckv, krope], -1)
+    ckv_d, krope_d = L.PagedMLAQ8Layout.gather(cache, pos, r=r)
+    got = np.asarray(jnp.concatenate([ckv_d, krope_d], -1))
+    for bb in range(b):
+        last = int(pos[bb]) // ps
+        hot_lo = (last - hw + 1) * ps
+        np.testing.assert_array_equal(got[bb, hot_lo:],
+                                      np.asarray(dense[bb, hot_lo:]))
+        cold = got[bb, :max(hot_lo, 0)]
+        ref = np.asarray(dense[bb, :max(hot_lo, 0)])
+        if cold.size:
+            assert np.max(np.abs(cold - ref)) > 0       # went through int8
+            np.testing.assert_allclose(cold, ref, atol=5e-2)
+
+
+# ----------------------------------------------------------------------------
+# the layout-parity grid: every paged kernel vs its own densify oracle
+# ----------------------------------------------------------------------------
+def _gqa_q8_cache(key, b, w, ps, hkv, dh, hot_window, pos):
+    s = w * ps
+    kd = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, dh))
+    vd = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, dh))
+    perm = np.random.RandomState(0).permutation(np.arange(1, b * w + 1))
+    bt = jnp.asarray(perm.reshape(b, w).astype(np.int32))
+    shape = (b * w + 1, ps, hkv, dh)
+    cache = dict(
+        k=kvc.scatter_pages(jnp.zeros(shape), kd, bt),
+        v=kvc.scatter_pages(jnp.zeros(shape), vd, bt),
+        kq=jnp.zeros(shape, jnp.int8), vq=jnp.zeros(shape, jnp.int8),
+        ks=jnp.zeros((b * w + 1, hkv)), vs=jnp.zeros((b * w + 1, hkv)),
+        bt=bt, hw=jnp.full((1,), hot_window, jnp.int32),
+    )
+    pages = kvq.cold_page_list(bt, pos, ps, hot_window)
+    if pages:
+        cache = kvq.quantize_pages_layer(cache,
+                                         jnp.asarray(pages, jnp.int32))
+    return cache
+
+
+@pytest.mark.parametrize('name,pos', POS_GRID)
+@pytest.mark.parametrize('layout', ['paged', 'paged_q8'])
+def test_layout_parity_gqa(layout, name, pos):
+    """flash kernel vs the SAME layout's gather + sdpa oracle — identical
+    data path (tier mix included), f32-roundoff agreement."""
+    b, w, ps, hkv, g, dh, hw = len(pos), 4, 8, 2, 2, 16, 2
+    key = jax.random.key(len(name))
+    pos = jnp.asarray(pos, jnp.int32)
+    cache = _gqa_q8_cache(key, b, w, ps, hkv, dh, hw, pos)
+    if layout == 'paged':
+        cache = {k: cache[k] for k in ('k', 'v', 'bt')}
+    lay = L.get_layout(cache)
+    assert lay.name == layout
+    q = jax.random.normal(key, (b, 1, hkv * g, dh), jnp.float32)
+    scale = 1.0 / dh ** 0.5
+    kd, vd = lay.gather(cache, pos)
+    want = A.sdpa_decode(q, kd, vd, pos, scale)
+    got = lay.flash_decode(q, cache, pos, scale=scale, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=KERNEL_ATOL, atol=KERNEL_ATOL)
+
+
+@pytest.mark.parametrize('name,pos', POS_GRID)
+@pytest.mark.parametrize('layout', ['paged_mla', 'paged_mla_q8'])
+def test_layout_parity_mla(layout, name, pos):
+    """MLA flash kernels vs the absorbed einsum oracle over the SAME
+    layout's densified latent view — the tier-mixing oracle for the q8
+    layout (the acceptance grid: page-end / page-boundary / unaligned /
+    ragged positions)."""
+    b, w, ps, r, dr, h, hw = len(pos), 4, 8, 24, 4, 4, 2
+    key = jax.random.key(len(name))
+    pos = jnp.asarray(pos, jnp.int32)
+    cache, _, _ = _mla_q8_cache(key, b, w, ps, r, dr, hw, pos)
+    if layout == 'paged_mla':
+        cache = {k: cache[k] for k in ('cl', 'bt')}
+    lay = L.get_layout(cache)
+    assert lay.name == layout
+    q = jax.random.normal(jax.random.fold_in(key, 3), (b, 1, h, r + dr))
+    scale = 1.0 / float(r + dr) ** 0.5
+    ckv_d, krope_d = lay.gather(cache, pos, r=r)
+    want = A.mla_absorbed_attend(q[..., :r], q[..., r:], ckv_d, krope_d,
+                                 pos, scale)
+    got = lay.flash_decode(q, cache, pos, scale=scale, r=r, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=KERNEL_ATOL, atol=KERNEL_ATOL)
+
+
+def test_mla_q8_vs_fp_oracle_within_documented_tolerance():
+    """The latent tier's error model: int8-per-page latents (rounded
+    BEFORE the W_uk/W_uv expansion) stay within the documented bound of
+    the fp latent oracle at the leanest hot window."""
+    b, w, ps, r, dr, h = 3, 6, 4, 24, 4, 4
+    key = jax.random.key(5)
+    pos = jnp.array([w * ps - 1, 13, 4], jnp.int32)
+    cache, ckv, krope = _mla_q8_cache(key, b, w, ps, r, dr, 1, pos)
+    q = jax.random.normal(jax.random.fold_in(key, 3), (b, 1, h, r + dr))
+    scale = 1.0 / float(r + dr) ** 0.5
+    want = A.mla_absorbed_attend(q[..., :r], q[..., r:], ckv, krope, pos,
+                                 scale)
+    got = fd.flash_decode_paged_mla_q8(
+        q, cache['cl'], cache['clq'], cache['cs'], pos, cache['bt'],
+        cache['hw'], r=r, scale=scale, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=Q8_LAT_ATOL)
+
+
+def test_mla_q8_exact_when_hot_window_covers_cache():
+    """hw >= W never reads the int8 latent tier: bit-identical with the fp
+    MLA paged kernel even over a poisoned int8 pool."""
+    b, w, ps, r, dr, h = 2, 4, 4, 24, 4, 4
+    key = jax.random.key(6)
+    pos = jnp.array([w * ps - 1, 5], jnp.int32)
+    cache, _, _ = _mla_q8_cache(key, b, w, ps, r, dr, w, pos)
+    cache = dict(cache,
+                 clq=jnp.full_like(cache['clq'], 127),
+                 cs=jnp.ones_like(cache['cs']) * 1e6)
+    q = jax.random.normal(key, (b, 1, h, r + dr))
+    scale = 1.0 / float(r + dr) ** 0.5
+    fp = fd.flash_decode_paged_mla(q, cache['cl'], pos, cache['bt'], r=r,
+                                   scale=scale, interpret=True)
+    q8 = fd.flash_decode_paged_mla_q8(
+        q, cache['cl'], cache['clq'], cache['cs'], pos, cache['bt'],
+        cache['hw'], r=r, scale=scale, interpret=True)
+    np.testing.assert_array_equal(np.asarray(q8), np.asarray(fp))
+
+
+# ----------------------------------------------------------------------------
+# layout-driven tree ops
+# ----------------------------------------------------------------------------
+@pytest.mark.parametrize('arch,kv_dtype', [
+    (ARCH, None), (ARCH, 'int8'),           # GQA fp + quantized stacks
+    (MLA_ARCH, None), (MLA_ARCH, 'int8'),   # MLA latent fp + quantized
+], ids=['gqa_fp', 'gqa_q8', 'mla_fp', 'mla_q8'])
+def test_with_block_tables_refreshes_every_layer_copy(arch, kv_dtype):
+    """with_block_tables is layout-driven: every ``bt`` copy of every
+    layer stack is refreshed (quantized and MLA trees included), every
+    ``hw`` copy follows when a hot window is passed, and pools pass
+    through by reference."""
+    cfg = configs.get(arch, smoke=True)
+    tree = M.init_paged_cache_tree(cfg, 2, num_pages=9, page_size=4,
+                                   max_blocks=4, kv_dtype=kv_dtype,
+                                   hot_window=2)
+    new_bt = jnp.arange(8, dtype=jnp.int32).reshape(2, 4)
+    out = kvc.with_block_tables(tree, new_bt)
+    pool_leaf = 'cl' if cfg.mla is not None else 'k'
+    n_stacks = 0
+    for sub in out.values():
+        n_stacks += 1
+        bt = sub['bt']
+        assert bt.shape[1:] == new_bt.shape
+        for lidx in range(bt.shape[0]):
+            np.testing.assert_array_equal(np.asarray(bt[lidx]),
+                                          np.asarray(new_bt))
+    assert n_stacks >= 1
+    # pools pass through by reference (no copy)
+    first = next(iter(out))
+    assert out[first][pool_leaf] is tree[first][pool_leaf]
+    if kv_dtype == 'int8':
+        # hw untouched without the knob, refreshed per layer with it
+        np.testing.assert_array_equal(np.asarray(out[first]['hw']),
+                                      np.asarray(tree[first]['hw']))
+        out2 = kvc.with_block_tables(tree, new_bt, hot_window=3)
+        for sub in out2.values():
+            assert sub['hw'].shape == (sub['bt'].shape[0], 1)
+            assert (np.asarray(sub['hw']) == 3).all()
+
+
+def test_quantize_tree_pages_walks_mla_latent_stacks():
+    """quantize_tree_pages routes each stack through its layout's quantize
+    op: deepseek's dense-prefix and MoE stacks both quantize their latent
+    pools per layer."""
+    tree = M.init_paged_cache_tree(_DEEPSEEK, 2, num_pages=9, page_size=4,
+                                   max_blocks=4, kv_dtype='int8',
+                                   hot_window=2)
+    seeded = {}
+    for sub, node in tree.items():
+        seeded[sub] = dict(node, cl=jax.random.normal(
+            jax.random.key(len(sub)), node['cl'].shape,
+            dtype=node['cl'].dtype))
+    out = kvq.quantize_tree_pages(seeded, jnp.asarray([1, 2], jnp.int32))
+    for sub, node in out.items():
+        assert float(jnp.max(jnp.abs(node['cs'][:, 1:3]))) > 0
+        assert float(jnp.max(jnp.abs(node['cs'][:, 3:]))) == 0
+        if node['clq'].shape[0] > 1:    # deepseek's dense prefix is 1 layer
+            l0 = np.asarray(node['clq'][0, 1])
+            l1 = np.asarray(node['clq'][1, 1])
+            assert (l0 != l1).any()  # every layer quantized independently
+
+
+# ----------------------------------------------------------------------------
+# attention layer + model level through the registry
+# ----------------------------------------------------------------------------
+@pytest.mark.parametrize('impl', ['einsum', 'flash'])
+def test_mla_attention_decode_quantized_paged(impl):
+    """Full MLA layer over the quantized latent layout: decode write lands
+    in the fp pool, tier leaves survive the round-trip, output within the
+    latent-tier tolerance of the contiguous fp reference."""
+    cfg = _DEEPSEEK
+    m = cfg.mla
+    p = A.init_mla(jax.random.key(10), cfg)
+    x = jax.random.normal(jax.random.key(11), (3, 9, cfg.d_model))
+    cache = dict(ckv=jnp.zeros((3, 16, m.kv_lora_rank), jnp.float32),
+                 krope=jnp.zeros((3, 16, m.rope_head_dim), jnp.float32))
+    _, cache = A.mla_attention(p, x[:, :8], cfg, DEFAULT_YOCO, cache=cache)
+    kv = kvc.PagedKVCache(num_pages=3 * 4 + 1, page_size=4, max_blocks=4,
+                          slots=3)
+    for s in range(3):
+        assert kv.alloc_blocks(s, 4)
+    paged = A.init_paged_cache(cfg, 3, num_pages=13, page_size=4,
+                               max_blocks=4, dtype=jnp.float32,
+                               kv_dtype='int8', hot_window=2)
+    paged = dict(paged, bt=kv.table_array())
+    _, paged = A.mla_attention(p, x[:, :8], cfg, DEFAULT_YOCO, cache=paged)
+    pos = jnp.array([8, 5, 3], jnp.int32)
+    pages = kvq.cold_page_list(kv.tables, pos, 4, 2)
+    if pages:
+        paged = kvq.quantize_latent_pages_layer(
+            paged, jnp.asarray(pages, jnp.int32))
+    y_ref, cc = A.mla_attention_decode(p, x[:, 8:9], cfg, DEFAULT_YOCO,
+                                       cache=cache, pos=pos)
+    y_q, cq = A.mla_attention_decode(p, x[:, 8:9], cfg, DEFAULT_YOCO,
+                                     cache=paged, pos=pos,
+                                     rt=ModelRuntime(attn_impl=impl))
+    np.testing.assert_allclose(np.asarray(y_q, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=Q8_LAT_ATOL)
+    assert set(cq) == set(paged)                 # tier leaves preserved
+    # the decode write landed in the fp latent pool rows
+    dense = kvc.gather_pages(cq['cl'], cq['bt'])[:, :16]
+    np.testing.assert_allclose(np.asarray(dense[..., :m.kv_lora_rank]),
+                               np.asarray(cc['ckv']), atol=1e-6)
+
+
+@pytest.mark.slow
+def test_model_decode_step_mla_quantized_tree_parity():
+    """Full deepseek decode_step over the scanned stack: int8-latent tree
+    vs the fp paged tree — exact with a covering hot window, within the
+    documented logits tolerance with a 1-page window."""
+    cfg = _DEEPSEEK
+    params = M.init_params(jax.random.key(0), cfg)
+    b, prompt, ps, w = 2, 8, 4, 4
+    toks = jax.random.randint(jax.random.key(1), (b, prompt), 0,
+                              cfg.vocab_size)
+    kv = kvc.PagedKVCache(num_pages=b * w + 1, page_size=ps, max_blocks=w,
+                          slots=b)
+    for s in range(b):
+        assert kv.alloc_blocks(s, w)
+    lens = jnp.array([prompt, prompt - 3], jnp.int32)
+
+    def run(kv_dtype, hot_window):
+        cache = M.init_paged_cache_tree(cfg, b, num_pages=b * w + 1,
+                                        page_size=ps, max_blocks=w,
+                                        kv_dtype=kv_dtype,
+                                        hot_window=hot_window)
+        cache = kvc.with_block_tables(cache, kv.table_array())
+        logits, cache = M.prefill(params, dict(inputs=toks), cache, cfg,
+                                  last_pos=lens - 1)
+        if kv_dtype == 'int8':
+            pages = kvq.cold_page_list(kv.tables, lens, ps, hot_window)
+            if pages:
+                cache = kvq.quantize_tree_pages(
+                    cache, jnp.asarray(pages, jnp.int32))
+        out = [logits]
+        tok = jnp.array([3, 5], jnp.int32)
+        for step in range(2):
+            logits, cache = M.decode_step(params, tok, lens + step, cache,
+                                          cfg)
+            out.append(logits)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return out
+
+    ref = run(None, 1)
+    exact = run('int8', w + 1)          # covering hot window: never int8
+    for a, e in zip(ref, exact):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(e))
+    lossy = run('int8', 1)
+    for a, l in zip(ref, lossy):
+        np.testing.assert_allclose(np.asarray(l, np.float32),
+                                   np.asarray(a, np.float32),
+                                   rtol=MODEL_ATOL, atol=MODEL_ATOL)
+
+
+# ----------------------------------------------------------------------------
+# continuous serving: kv-quant under forced preemption
+# ----------------------------------------------------------------------------
+@pytest.mark.parametrize('arch', [ARCH, MLA_ARCH], ids=['gqa', 'mla'])
+def test_continuous_serve_kv_quant_preemption_is_lossless(arch):
+    """A pool too small for all lanes preempts-and-requeues WITH the int8
+    tier on: the preempted slot's KVTierTracker resets and the next owner
+    re-quantizes on its own schedule, so the token streams must equal an
+    uncontended kv-quant run's exactly (quantization depends only on each
+    request's own positions, which recompute preemption replays)."""
+    kwargs = dict(slots=3, n_requests=5, prompt_len=16, gen_len=8,
+                  page_size=4, attn_impl='einsum', kv_quant=True,
+                  hot_window=1, quiet=True)
+    tight = SV.serve_continuous(arch, num_pages=9, **kwargs)
+    roomy = SV.serve_continuous(arch, num_pages=None, **kwargs)
+    assert tight['preempted'] > 0
+    assert tight['pages_quantized'] > roomy['pages_quantized'] > 0
+    assert tight['outputs'] == roomy['outputs']
+    assert tight['completed'] == roomy['completed'] == 5
+
+
+def test_continuous_serve_kv_quant_preempted_covering_window_matches_solo():
+    """Token-parity anchor for the preemption path: with a covering hot
+    window the tier is configured but never read, so a preempting kv-quant
+    run must reproduce the plain fp preempting run token-for-token (which
+    test_serve_continuous pins to solo decode)."""
+    kwargs = dict(slots=3, n_requests=5, prompt_len=16, gen_len=8,
+                  page_size=4, attn_impl='einsum', num_pages=9, quiet=True)
+    fp = SV.serve_continuous(ARCH, **kwargs)
+    q8 = SV.serve_continuous(ARCH, kv_quant=True, hot_window=64, **kwargs)
+    assert fp['preempted'] > 0 and q8['preempted'] > 0
+    assert q8['pages_quantized'] == 0
+    assert fp['outputs'] == q8['outputs']
+
+
+@pytest.mark.slow
+def test_continuous_serve_mla_kv_quant_flash_matches_einsum():
+    """The MLA q8 Pallas kernel serves the same deepseek stream with the
+    same tokens as the tier-mixing absorbed einsum oracle."""
+    kwargs = dict(slots=2, n_requests=3, prompt_len=16, gen_len=6,
+                  page_size=4, kv_quant=True, hot_window=1, quiet=True)
+    a = SV.serve_continuous(MLA_ARCH, attn_impl='einsum', **kwargs)
+    b = SV.serve_continuous(MLA_ARCH, attn_impl='flash', **kwargs)
+    assert a['outputs'] == b['outputs']

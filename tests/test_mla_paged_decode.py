@@ -300,20 +300,34 @@ def test_model_decode_step_mla_paged_matches_contiguous(impl):
 # ----------------------------------------------------------------------------
 # negative paths: fail loudly, never silently
 # ----------------------------------------------------------------------------
-def test_mla_paged_cache_rejects_int8_tier():
-    """MLA + kv_dtype='int8' must raise a clear ValueError at every entry
-    point (latent tiering is follow-up work, not silent garbage through
-    the GQA-shaped tier)."""
-    with pytest.raises(ValueError, match='latent-tier int8'):
+def test_mla_paged_cache_int8_builds_latent_tier():
+    """MLA + kv_dtype='int8' builds the PagedMLAQ8 layout (int8 latent
+    pool + ONE per-page absmax scale + hot window) at every entry point;
+    malformed kv_dtype strings still fail loudly."""
+    from repro.runtime import layouts
+    m = _DEEPSEEK.mla
+    dk = m.kv_lora_rank + m.rope_head_dim
+    c = A.init_paged_cache(_DEEPSEEK, 2, num_pages=9, page_size=4,
+                           max_blocks=4, kv_dtype='int8', hot_window=2)
+    assert layouts.get_layout(c) is layouts.PagedMLAQ8Layout
+    assert c['clq'].shape == (9, 4, dk) and c['clq'].dtype == jnp.int8
+    assert c['cs'].shape == (9, 1)
+    assert int(c['hw'][0]) == 2
+    tree = M.init_paged_cache_tree(_DEEPSEEK, 2, num_pages=9, page_size=4,
+                                   max_blocks=4, kv_dtype='int8',
+                                   hot_window=2)
+    for sub in ('prefix', 'moe'):       # deepseek: dense prefix + MoE stack
+        assert sub in tree and tree[sub]['clq'].dtype == jnp.int8
+    with pytest.raises(ValueError, match='kv_dtype'):
         A.init_paged_cache(_DEEPSEEK, 2, num_pages=9, page_size=4,
-                           max_blocks=4, kv_dtype='int8')
-    with pytest.raises(ValueError, match='latent-tier int8'):
-        M.init_paged_cache_tree(_DEEPSEEK, 2, num_pages=9, page_size=4,
-                                max_blocks=4, kv_dtype='int8')
-    # fp spellings still work
-    assert 'cl' in A.init_paged_cache(_DEEPSEEK, 2, num_pages=9,
-                                      page_size=4, max_blocks=4,
-                                      kv_dtype='fp')
+                           max_blocks=4, kv_dtype='int4')
+    with pytest.raises(ValueError, match='hot_window'):
+        A.init_paged_cache(_DEEPSEEK, 2, num_pages=9, page_size=4,
+                           max_blocks=4, kv_dtype='int8', hot_window=0)
+    # fp spellings keep the plain latent layout
+    fp = A.init_paged_cache(_DEEPSEEK, 2, num_pages=9, page_size=4,
+                            max_blocks=4, kv_dtype='fp')
+    assert layouts.get_layout(fp) is layouts.PagedMLALayout
 
 
 def test_paged_prefill_overflow_holds_for_latent_layout():

@@ -142,9 +142,9 @@ def test_continuous_serve_flash_matches_einsum_mla():
 # ----------------------------------------------------------------------------
 def test_continuous_serve_routing_table():
     """--continuous admits every token-input attention-cache family (GQA
-    *and* MLA) and rejects exactly the stateless-position / non-token
-    ones, each with its own message — the gate must not lump MLA in with
-    SSM ever again."""
+    *and* MLA, with or without the int8 tier) and rejects exactly the
+    stateless-position / non-token ones, each with its own message — the
+    gate must not lump MLA in with SSM ever again."""
     # blocked: no per-position KV cache to page
     for arch in ('mamba2-780m', 'zamba2-1.2b'):
         with pytest.raises(ValueError, match='no position to page'):
@@ -153,14 +153,15 @@ def test_continuous_serve_routing_table():
     for arch in ('musicgen-large', 'qwen2-vl-72b'):
         with pytest.raises(ValueError, match='token streams'):
             SV.serve_continuous(arch, quiet=True)
-    # blocked: MLA + the int8 KV tier (latent tiering is follow-up work)
-    with pytest.raises(ValueError, match='latent-tier int8'):
-        SV.serve_continuous(MLA_ARCH, kv_quant=True, quiet=True)
-    # admitted: GQA and MLA both construct + drain an empty stream
+    # admitted: GQA and MLA both construct + drain an empty stream, fp
+    # and int8-tiered alike (the MLA latent tier shipped with the layout
+    # registry — the gate must not regress to a blanket MLA block)
     for arch in (ARCH, MLA_ARCH):
-        out = SV.serve_continuous(arch, n_requests=0, prompt_len=8,
-                                  gen_len=4, page_size=4, quiet=True)
-        assert out['completed'] == 0
+        for kv_quant in (False, True):
+            out = SV.serve_continuous(arch, n_requests=0, prompt_len=8,
+                                      gen_len=4, page_size=4,
+                                      kv_quant=kv_quant, quiet=True)
+            assert out['completed'] == 0
 
 
 # ----------------------------------------------------------------------------
