@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src:.$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test test-fast test-slow test-mla test-layouts bench bench-smoke serve-demo check
+.PHONY: test test-fast test-slow test-mla test-layouts test-ssm-serve bench bench-smoke serve-demo check
 
 # tier-1: the full suite (what CI / the driver runs)
 test:
@@ -27,6 +27,12 @@ test-mla:
 test-layouts:
 	$(PY) -m pytest -q -m "layouts" tests/test_layouts.py
 
+# the SSM/hybrid serving surface: masked padded prefill, solo-vs-
+# continuous token parity for mamba2/zamba2, and preemption with state
+# recompute on re-admission (the RecurrentLayout slot ops end-to-end)
+test-ssm-serve:
+	$(PY) -m pytest -q -m "ssm_serve" tests/test_ssm_serve.py
+
 bench:
 	$(PY) -m benchmarks.run
 
@@ -39,10 +45,11 @@ bench-smoke:
 	$(PY) -m benchmarks.bench_decode --smoke
 	$(PY) -m benchmarks.bench_kv_quant --smoke
 
-# the pre-push gate: fast tests + the layout-parity grid + parity-asserted
-# smoke benchmarks (test-fast already runs the non-slow layouts cells;
-# test-layouts adds the slow ones so the grid is complete pre-push)
-check: test-fast test-layouts bench-smoke
+# the pre-push gate: fast tests + the layout-parity grid + the SSM/hybrid
+# serving parity suite + parity-asserted smoke benchmarks (test-fast
+# already runs the non-slow cells of both grids; the dedicated targets add
+# the slow ones so each surface is complete pre-push)
+check: test-fast test-layouts test-ssm-serve bench-smoke
 
 serve-demo:
 	$(PY) examples/serve_decode.py

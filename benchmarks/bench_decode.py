@@ -26,6 +26,12 @@ values/token vs 2·Hkv·dh for GQA); head count is trimmed to keep the
 CPU-interpret timing tractable (per-key bytes, the quantity the latent
 layout changes, don't depend on H).
 
+The ssm/hybrid section serves mamba2/zamba2 end-to-end (solo lock-step vs
+``--continuous`` over the RecurrentLayout slot ops) and prices the
+constant per-token recurrent-state traffic via
+``hwmodel.decode_state_traffic`` — the contrast column to the KV
+sections' context-proportional bytes.
+
 Reports tokens/sec per decode-attention call (B requests, each at its own
 position, one attention layer) plus each impl's max abs delta vs the
 oracle, and writes the whole table to ``BENCH_decode.json`` at the repo
@@ -157,6 +163,64 @@ def _bench_mla_one(s_max: int, rows: list, interpret: bool,
              f'tok_per_s={row["tok_per_s"]},max_abs_err={err:.2e}')
 
 
+STATE_ARCHS = {'ssm': 'mamba2-780m', 'hybrid': 'zamba2-1.2b'}
+
+
+def _bench_state_families(rows: list, smoke: bool) -> None:
+    """End-to-end serving for the recurrent families: solo lock-step vs
+    --continuous (RecurrentLayout slot ops over the shared scheduler),
+    plus the constant per-token state traffic priced by
+    ``hwmodel.decode_state_traffic`` — the number the KV sections' per-
+    position bytes are contrasted against (recurrent state does not grow
+    with context)."""
+    from repro.configs import get as get_cfg
+    from repro.core import hwmodel
+    from repro.launch import serve as SV
+    from repro.models.ssm import dims as ssm_dims
+
+    n_req, plen, glen = (4, 16, 8) if smoke else (8, 32, 16)
+    for fam, arch in STATE_ARCHS.items():
+        cfg = get_cfg(arch, smoke=True)
+        s = cfg.ssm
+        dm = ssm_dims(cfg)
+        n_mamba = (cfg.n_layers if cfg.family == 'ssm'
+                   else cfg.n_layers - cfg.n_layers // cfg.hybrid_group)
+        traffic = hwmodel.decode_state_traffic(
+            conv_elems=(s.conv_width - 1) * dm['conv_dim'],
+            ssm_elems=dm['n_heads'] * s.head_dim * s.d_state,
+            n_heads=dm['n_heads'], n_layers=n_mamba)
+
+        solo = SV.serve(arch, batch=2, prompt_len=plen, gen_len=glen,
+                        attn_impl='einsum', quiet=True)
+        cont = SV.serve_continuous(arch, slots=2, n_requests=n_req,
+                                   prompt_len=plen, gen_len=glen,
+                                   page_size=4, attn_impl='einsum',
+                                   quiet=True)
+        for mode, res in (('solo', solo), ('continuous', cont)):
+            done = (res.get('completed', n_req) == n_req
+                    if mode == 'continuous' else True)
+            row = dict(name=f'{fam}_serve_{mode}', arch=arch,
+                       s_max=plen + glen,
+                       tok_per_s=res['tokens_per_s'],
+                       state_bytes_per_token=round(
+                           traffic['baseline_bytes_per_token']),
+                       state_bytes_resident=round(
+                           traffic['state_bytes_resident']),
+                       state_tier_bytes_reduction=round(
+                           traffic['bytes_reduction'], 3),
+                       # the gate field: a continuous run that drops
+                       # requests must not overwrite the artifact
+                       max_abs_err_vs_oracle=0.0 if done else 1.0)
+            if mode == 'continuous':
+                row.update(completed=res['completed'],
+                           decode_compilations=res['decode_compilations'],
+                           slot_utilization=res['slot_utilization'])
+            rows.append(row)
+            emit(f'decode.{row["name"]}', 0.0,
+                 f'tok_per_s={row["tok_per_s"]},'
+                 f'state_B_per_tok={row["state_bytes_per_token"]}')
+
+
 def run(smoke: bool = False, out_path: Optional[str] = None) -> dict:
     if out_path is None:
         out_path = SMOKE_OUT if smoke else DEFAULT_OUT
@@ -165,6 +229,7 @@ def run(smoke: bool = False, out_path: Optional[str] = None) -> dict:
     for s_max in (SMOKE_SEQ_LENS if smoke else SEQ_LENS):
         _bench_one(s_max, rows, interpret)
         _bench_mla_one(s_max, rows, interpret, smoke)
+    _bench_state_families(rows, smoke)
     result = dict(
         bench='decode',
         backend=jax.default_backend(),

@@ -5,7 +5,10 @@ heterogeneous-position path (ragged prompts decoded in one jit'd step
 through the fused Pallas flash-decode kernel), and finally continuous
 batching over the paged KV cache, with and without the hybrid-precision
 KV tier (int8 cold pages + full-precision hot window — the paper's
-ReRAM–SRAM split applied to the cache).
+ReRAM–SRAM split applied to the cache). The last two continuous rows are
+the SSM/hybrid families: mamba2/zamba2 recurrent state rides the same
+scheduler as per-slot RecurrentLayout rows (reset on admit/evict/preempt,
+recomputed on re-admission).
 
 Usage:  PYTHONPATH=src python examples/serve_decode.py
 """
@@ -47,12 +50,21 @@ def main():
         # flash_decode_paged_mla_q8 — the layout registry routes it
         ('deepseek-v3-671b', 'MLA latent int8 tier, hot_window=2',
          dict(kv_quant=True, hot_window=2)),
+        # SSM: recurrent state as a CacheLayout — per-slot (conv, ssd)
+        # rows reset on admit/evict/preempt, recomputed on re-admission;
+        # the page allocator does virtual length accounting only
+        ('mamba2-780m', 'recurrent state, virtual pages',
+         dict(attn_impl='einsum')),
+        # hybrid: zamba2 mixes recurrent mamba leaves with paged
+        # attention-site pools under one HybridLayout tree
+        ('zamba2-1.2b', 'hybrid recurrent + paged attention sites',
+         dict(attn_impl='einsum')),
     ]:
         print(f'=== {arch} continuous ({label}) ===')
         out = serve.serve_continuous(
             arch, slots=3, n_requests=6, prompt_len=32,
-            gen_len=16, page_size=8, attn_impl='flash', quiet=True,
-            **kwargs)
+            gen_len=16, page_size=8, quiet=True,
+            **dict(dict(attn_impl='flash'), **kwargs))
         print(f'  {out["completed"]}/{out["requests"]} done in '
               f'{out["steps"]} steps, {out["tokens_per_s"]} tok/s, '
               f'slot_util={out["slot_utilization"]}, '

@@ -7,14 +7,21 @@ Three serving shapes:
   * lock-step (default): every request at the same position, scalar ``pos``;
   * ragged (``--ragged``): per-request prompt lengths, a (B,) ``pos``
     vector, per-request last-logit gather at prefill — one jit'd decode
-    step serving requests at heterogeneous positions. Attention families
-    only (an SSM state has no position to mask behind);
+    step serving requests at heterogeneous positions. SSM/hybrid configs
+    ride the same padded prefill: mamba layers mask the padded steps' dt
+    to 0 (``models/ssm.py``), so the recurrent state snapshot equals the
+    unpadded prompt's;
   * continuous (``--continuous``): a stream of heterogeneous-length
     requests over a fixed number of decode *slots* backed by a paged KV
     cache (``runtime/kv_cache.py``) — admit-on-release, per-slot pos,
     page-granular cache growth, eviction on EOS/length, preempt-and-requeue
     when the pool runs dry. One jit'd prefill (admission) and one jit'd
     decode step serve the whole stream with no recompilation across steps.
+    SSM/hybrid configs serve through the same loop: their per-slot
+    recurrent state (``runtime.layouts.RecurrentLayout``) is reset on
+    admit/evict/preempt and recomputed on re-admission, while the page
+    allocator keeps doing virtual sequence-length accounting (admission
+    control, preemption) even when no attention pool exists.
 
 ``--attn-impl flash`` routes the decode cache read through the fused
 Pallas flash-decode kernel (``kernels/flash_decode.py``) instead of the
@@ -64,6 +71,7 @@ from repro.models import model as model_mod
 from repro.models.model import ModelRuntime
 from repro.runtime import kv_cache as kvc
 from repro.runtime import kv_quant as kvq
+from repro.runtime import layouts as layouts_mod
 from repro.runtime import serve_step as SS
 
 
@@ -81,13 +89,12 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
           greedy: bool = True, temperature: float = 1.0, top_k: int = 0,
           quiet: bool = False) -> dict:
     cfg = configs.get(arch, smoke=smoke)
-    if ragged and cfg.family in ('ssm', 'hybrid'):
-        raise ValueError(f'--ragged needs an attention KV cache; '
-                         f'{arch} is family={cfg.family}')
     if attn_impl == 'flash' and (cfg.mla is not None or cfg.family == 'ssm'):
         kind = 'MLA' if cfg.mla is not None else 'SSM'
         hint = ('MLA flash decode is the paged kernel — serve it with '
-                '--continuous' if cfg.mla is not None else 'see ROADMAP.md')
+                '--continuous' if cfg.mla is not None
+                else 'a pure-SSM decode has no attention cache to '
+                     'flash-read; drop --attn-impl')
         raise ValueError(f'--attn-impl flash covers GQA decode on the '
                          f'contiguous cache; {arch} uses {kind} layers '
                          f'({hint})')
@@ -204,6 +211,12 @@ class ContinuousScheduler:
     * idle slots decode at ``pos=0`` against the garbage page and their
       outputs are discarded — the decode step's shapes never change, so
       nothing recompiles across steps.
+    * **recurrent state** (SSM/hybrid configs): evict and preempt mark the
+      slot in :attr:`dirty_slots`; the driver zeroes those rows
+      (``runtime.layouts.reset_state_slots``) before the next decode step,
+      so idle lanes decode against zeroed state, and admission resets the
+      slot again before the prefill seeds it (recompute-style preemption —
+      the state is never checkpointed, only re-derived from the prompt).
     * **age-out** (``hot_window`` set, the kv_quant tier): after admission
       and after growth, :meth:`aged_out_pages` lists the pages that just
       left the hot window — the driver quantizes exactly those into the
@@ -232,6 +245,7 @@ class ContinuousScheduler:
         self._admit_seq = 0
         self.completed: List[_SlotState] = []
         self.n_preempted = 0
+        self.dirty_slots: List[int] = []       # recurrent rows to zero
         self.tier = (kvq.KVTierTracker(hot_window, kv.page_size)
                      if hot_window is not None else None)
 
@@ -252,6 +266,10 @@ class ContinuousScheduler:
             if not self.kv.alloc_blocks(slot, blocks):
                 break                           # pool dry: wait for release
             self.free_slots.pop()
+            # admission resets the slot's recurrent rows itself, so a
+            # pending dirty mark would only re-zero the freshly
+            # prefilled state — drop it
+            self.dirty_slots = [s for s in self.dirty_slots if s != slot]
             admitted.append((self.pending.popleft(), slot))
         return admitted
 
@@ -287,6 +305,7 @@ class ContinuousScheduler:
         st = self.active.pop(victim)
         self.kv.release(victim)
         self.free_slots.append(victim)
+        self.dirty_slots.append(victim)
         if self.tier is not None:
             self.tier.reset(victim)
         # recompute preemption: generated tokens are discarded, the request
@@ -335,6 +354,7 @@ class ContinuousScheduler:
             self.active.pop(slot)
             self.kv.release(slot)
             self.free_slots.append(slot)
+            self.dirty_slots.append(slot)
             if self.tier is not None:
                 self.tier.reset(slot)
             self.completed.append(st)
@@ -375,20 +395,20 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
     rule (``hot_window >= max_blocks`` keeps everything fp — bit-exact
     with ``kv_quant=False``)."""
     cfg = configs.get(arch, smoke=smoke)
-    # routing table (pinned by tests/test_serve_continuous.py): only
-    # genuinely stateless-position families are blocked — an SSM/hybrid
-    # decode state has no position to page behind. MLA pages its latent
-    # pool through the same block tables as GQA.
-    if cfg.family in ('ssm', 'hybrid') or cfg.hybrid_group:
-        raise ValueError(f'--continuous needs a per-position KV cache; '
-                         f'{arch} is family={cfg.family} (SSM/hybrid decode '
-                         f'state has no position to page behind — ROADMAP '
-                         f'open item)')
+    # routing table (pinned by tests/test_serve_continuous.py): every token
+    # family serves — MLA pages its latent pool through the same block
+    # tables as GQA, and SSM/hybrid recurrent state rides the slot ops of
+    # runtime.layouts.RecurrentLayout (reset on admit/evict/preempt,
+    # recomputed on re-admission). Only non-token frontends stay blocked.
     if cfg.input_kind != 'tokens':
         raise ValueError(f'--continuous schedules token streams; {arch} '
                          f'has input_kind={cfg.input_kind} (the stubbed '
                          f'frontend cannot requeue/re-prefill non-token '
                          f'prompts)')
+    if kv_quant and cfg.family == 'ssm':
+        raise ValueError(f'--kv-quant tiers paged attention KV; {arch} is '
+                         f'family=ssm with recurrent state only (no int8 '
+                         f'tier — drop --kv-quant)')
     yoco = YocoConfig(mode=mode)
     rt = ModelRuntime(attn_impl=attn_impl)
     max_seq = prompt_len + gen_len
@@ -456,22 +476,40 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
     t0 = time.time()
     limit = max_steps if max_steps is not None else \
         n_requests * (prompt_len + gen_len) * 4 + 64
+    has_recurrent = cfg.family == 'ssm' or bool(cfg.hybrid_group)
     while not sched.done and steps < limit:
         # --- admit on release -------------------------------------------
         for req, slot in sched.try_admit():
             pad = np.zeros((prompt_len,), np.int32)
             pad[:len(req.prompt)] = req.prompt
             tp = time.time()
-            pc = kvc.with_block_tables(cache, kv.tables[slot:slot + 1])
-            logits, pc = prefill_fn(params, dict(inputs=jnp.asarray(pad[None])),
-                                    pc, jnp.asarray([len(req.prompt) - 1]))
-            cache = pc                          # pools updated in place
+            # one admission path for every layout: zero the slot's
+            # recurrent rows (a fresh request must not see the evicted
+            # tenant's state), prefill a batch-1 view — recurrent leaves
+            # sliced to the slot (a copy, so the full tree survives the
+            # donated prefill), paged pools by reference — then fold the
+            # prefilled state back in. On attention-only trees the
+            # slice/merge walks are the identity and this is exactly the
+            # old `cache = pc`.
+            cache = layouts_mod.reset_state_slots(cache, [slot])
+            part = layouts_mod.slice_state_slot(
+                kvc.with_block_tables(cache, kv.tables[slot:slot + 1]), slot)
+            logits, part = prefill_fn(params,
+                                      dict(inputs=jnp.asarray(pad[None])),
+                                      part, jnp.asarray([len(req.prompt) - 1]))
+            cache = layouts_mod.merge_state_slot(cache, part, slot)
             t_prefill += time.time() - tp
             sched.seed(req, slot, first_token(logits))
         if sched.done:
             break
         # --- grow + decode one step over every lane ----------------------
         sched.grow_for_decode()
+        if has_recurrent and sched.dirty_slots:
+            # evicted/preempted lanes decode against zeroed state until
+            # re-admission (constant step shapes, nothing recompiles)
+            cache = layouts_mod.reset_state_slots(
+                cache, sorted(set(sched.dirty_slots)))
+        sched.dirty_slots.clear()
         if kv_quant:
             # pages that just left the hot window become int8 before the
             # step reads them as cold (covers fresh admissions too)

@@ -89,14 +89,15 @@ def init_mamba_block(key: jax.Array, cfg) -> dict:
 
 def mamba_block(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
                 state: Optional[dict] = None, decode: bool = False,
-                ) -> Tuple[jnp.ndarray, Optional[dict]]:
+                last_pos=None) -> Tuple[jnp.ndarray, Optional[dict]]:
     h = apply_norm(p['norm'], x, cfg)
     if decode:
         y, new_state = ssm_mod.mamba2_decode(p['mixer'], h, cfg, yoco,
                                              state=state)
     else:
         y, new_state = ssm_mod.mamba2_forward(p['mixer'], h, cfg, yoco,
-                                              state=state)
+                                              state=state,
+                                              last_pos=last_pos)
     return x + y, new_state
 
 

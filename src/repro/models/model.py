@@ -242,11 +242,11 @@ def _transformer_stack(stack: dict, x: jnp.ndarray, cfg, yoco, rt, *,
 
 
 def _mamba_stack(stack: dict, x: jnp.ndarray, cfg, yoco, rt, *,
-                 state: Optional[dict], decode: bool):
+                 state: Optional[dict], decode: bool, last_pos=None):
     def body(carry, xs):
         lp, st = xs
         h, new_st = blk.mamba_block(lp, carry, cfg, yoco, state=st,
-                                    decode=decode)
+                                    decode=decode, last_pos=last_pos)
         return _constrain(h, rt), new_st
 
     body = _maybe_remat(body, rt)
@@ -259,14 +259,23 @@ def _tree_slice(tree, lo: int, hi: int):
 
 
 def _backbone(params: dict, x: jnp.ndarray, cfg, yoco, rt, *,
-              cache: Optional[dict], decode_pos):
-    """Run all sequence-mixing layers. Returns (x, new_cache, aux)."""
+              cache: Optional[dict], decode_pos, last_pos=None):
+    """Run all sequence-mixing layers. Returns (x, new_cache, aux).
+
+    ``last_pos`` (prefill only): per-request last valid prompt positions
+    of a right-padded batch. Attention layers ignore it (the causal mask
+    plus decode's write-before-attend already keep padded keys inert) but
+    mamba layers must mask the padded steps' dt to 0 so the recurrent
+    state snapshot equals the unpadded prompt's state."""
     aux = jnp.float32(0.0)
     new_cache: Optional[dict] = None
+    if decode_pos is not None:
+        last_pos = None     # decode steps have no padding to mask
     if cfg.family == 'ssm':
         st = cache['ssm'] if cache is not None else None
         x, new_st = _mamba_stack(params['layers'], x, cfg, yoco, rt,
-                                 state=st, decode=decode_pos is not None)
+                                 state=st, decode=decode_pos is not None,
+                                 last_pos=last_pos)
         new_cache = dict(ssm=new_st) if cache is not None else None
     elif cfg.hybrid_group:
         x0 = x
@@ -281,7 +290,7 @@ def _backbone(params: dict, x: jnp.ndarray, cfg, yoco, rt, *,
             seg = _tree_slice(params['layers'], lo, hi)
             seg_st = _tree_slice(st, lo, hi) if st is not None else None
             x, ns = _mamba_stack(seg, x, cfg, yoco, rt, state=seg_st,
-                                 decode=decode)
+                                 decode=decode, last_pos=last_pos)
             if ns is not None and cache is not None:
                 new_st.append(ns)
             site_cache = (jax.tree.map(lambda a: a[g], atc)
@@ -297,7 +306,7 @@ def _backbone(params: dict, x: jnp.ndarray, cfg, yoco, rt, *,
             seg = _tree_slice(params['layers'], lo, lo + tail)
             seg_st = _tree_slice(st, lo, lo + tail) if st is not None else None
             x, ns = _mamba_stack(seg, x, cfg, yoco, rt, state=seg_st,
-                                 decode=decode)
+                                 decode=decode, last_pos=last_pos)
             if ns is not None and cache is not None:
                 new_st.append(ns)
         if cache is not None:
@@ -373,11 +382,25 @@ def init_paged_cache_tree(cfg, batch: int, *, num_pages: int,
     ``cl`` pool per layer instead of k/v pairs; their int8 tier quantizes
     the latent per-page absmax before the W_uk/W_uv expansion.
 
-    Attention-cache families only: an SSM/hybrid decode state has no
-    position to page behind (ROADMAP open item)."""
-    if cfg.family in ('ssm', 'hybrid') or cfg.hybrid_group:
-        raise NotImplementedError(
-            f'paged KV cache needs an attention cache; family={cfg.family}')
+    SSM configs get a stacked per-slot recurrent state instead
+    (``runtime.layouts.RecurrentLayout``: f32 ``conv``/``ssm`` leaves, no
+    positional axis — the scheduler's page accounting is purely virtual);
+    hybrid configs mix a recurrent ``ssm`` stack with paged ``attn`` site
+    pools under ``runtime.layouts.HybridLayout``. Recurrent state carries
+    no int8 tier, so ``kv_dtype='int8'`` on a pure-SSM config is an
+    error (hybrid configs apply it to the attention sites only)."""
+    def recurrent_states(n):
+        one = ssm_mod.init_ssm_state(cfg, batch)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape)
+            .astype(jnp.float32).copy(), one)
+
+    if cfg.family == 'ssm':
+        if kv_dtype is not None:
+            raise ValueError(
+                'recurrent state has no int8 tier; drop kv_dtype for '
+                f'family={cfg.family!r}')
+        return dict(ssm=recurrent_states(cfg.n_layers))
 
     def paged_caches(n):
         one = attn_mod.init_paged_cache(cfg, batch, num_pages=num_pages,
@@ -389,6 +412,9 @@ def init_paged_cache_tree(cfg, batch: int, *, num_pages: int,
                                                        (n,) + a.shape).copy(),
                             one)
 
+    if cfg.hybrid_group:
+        return dict(ssm=recurrent_states(_n_mamba(cfg)),
+                    attn=paged_caches(_n_sites(cfg)))
     if cfg.moe is not None and cfg.moe.first_k_dense:
         return dict(prefix=paged_caches(cfg.moe.first_k_dense),
                     moe=paged_caches(cfg.n_layers - cfg.moe.first_k_dense))
@@ -439,10 +465,12 @@ def prefill(params: dict, batch: dict, cache: dict, cfg,
 
     ``last_pos``: optional (B,) int vector of per-request last prompt
     positions (ragged batch padded to a common length) — logits are
-    gathered there instead of at the padded end."""
+    gathered there instead of at the padded end, and mamba layers mask
+    the padded steps so the recurrent state matches the unpadded
+    prompt's."""
     x = _embed(params, batch, cfg, rt)
     x, new_cache, _ = _backbone(params, x, cfg, yoco, rt, cache=cache,
-                                decode_pos=None)
+                                decode_pos=None, last_pos=last_pos)
     if last_pos is None:
         x = x[:, -1:]
     else:

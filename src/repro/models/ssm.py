@@ -79,6 +79,40 @@ def init_ssm_state(cfg, batch: int, dtype=jnp.float32) -> dict:
 
 
 # ----------------------------------------------------------------------------
+# per-slot state ops (the RecurrentLayout's primitives — pure, eager-safe)
+# ----------------------------------------------------------------------------
+def _slot_index(axis: int):
+    return (slice(None),) * axis
+
+
+def slot_reset(state: dict, slots, axis: int = 0) -> dict:
+    """Zero the given batch rows of a recurrent state dict — what the
+    continuous scheduler runs on admit/evict/preempt so idle lanes decode
+    against zeroed state (and a re-admitted request recomputes from
+    scratch). ``axis`` is the batch axis (1 for (L,)-stacked trees)."""
+    idx = jnp.asarray(slots, jnp.int32).reshape(-1)
+    return jax.tree.map(
+        lambda a: a.at[_slot_index(axis) + (idx,)].set(0), state)
+
+
+def slot_snapshot(state: dict, slot: int, axis: int = 0) -> dict:
+    """Batch-1 snapshot of one slot's (conv, ssd) state — the admission
+    prefill's view (and what a checkpointing scheduler would persist)."""
+    sl = _slot_index(axis) + (slice(slot, slot + 1),)
+    return jax.tree.map(lambda a: a[sl], state)
+
+
+def slot_restore(state: dict, snap: dict, slot: int, axis: int = 0) -> dict:
+    """Scatter a batch-1 snapshot back into ``slot``'s rows — the inverse
+    of :func:`slot_snapshot` (admission merges the prefilled state back
+    into the full-batch tree through this)."""
+    put = _slot_index(axis) + (slot,)
+    take = _slot_index(axis) + (0,)
+    return jax.tree.map(lambda a, s: a.at[put].set(s[take].astype(a.dtype)),
+                        state, snap)
+
+
+# ----------------------------------------------------------------------------
 # chunked SSD core
 # ----------------------------------------------------------------------------
 def _segsum(x: jnp.ndarray) -> jnp.ndarray:
@@ -198,10 +232,19 @@ def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray,
 
 
 def mamba2_forward(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
-                   state: Optional[dict] = None,
+                   state: Optional[dict] = None, last_pos=None,
                    ) -> Tuple[jnp.ndarray, Optional[dict]]:
     """Full-sequence forward. x (B,S,d). Returns (out (B,S,d), final state
-    dict if ``state`` was given — prefill — else None)."""
+    dict if ``state`` was given — prefill — else None).
+
+    ``last_pos``: optional (B,) int vector of per-request last valid
+    positions (right-padded ragged prefill). Positions beyond it get
+    ``dt = 0``, so ``da = exp(0 * a) = 1`` carries the state through
+    unchanged and the ``dt``-weighted input contributes nothing — the same
+    identity ``ssd_chunked`` uses for its internal chunk padding. The
+    returned ssd state is therefore exactly the state at ``last_pos``, and
+    the conv window is gathered from the last valid rows, so a padded
+    prompt leaves the recurrent state identical to an unpadded one."""
     s_cfg = cfg.ssm
     bsz, s, _ = x.shape
     dm = dims(cfg)
@@ -213,6 +256,10 @@ def mamba2_forward(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
     b = xbc[..., di:di + gn].reshape(bsz, s, s_cfg.n_groups, s_cfg.d_state)
     c = xbc[..., di + gn:].reshape(bsz, s, s_cfg.n_groups, s_cfg.d_state)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p['dt_bias'])
+    if last_pos is not None:
+        valid = (jnp.arange(s, dtype=jnp.int32)[None, :]
+                 <= jnp.asarray(last_pos, jnp.int32).reshape(-1, 1))
+        dt = jnp.where(valid[..., None], dt, 0.0)
     a = -jnp.exp(p['a_log'])
     xh = xs.reshape(bsz, s, dm['n_heads'], s_cfg.head_dim)
 
@@ -238,8 +285,16 @@ def mamba2_forward(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
         xbc_raw = zxbcdt[..., di:di + dm['conv_dim']]
         tail = jnp.concatenate([state['conv'],
                                 xbc_raw.astype(state['conv'].dtype)], axis=1)
-        new_state = dict(conv=tail[:, -(w - 1):],
-                         ssm=fin.astype(state['ssm'].dtype))
+        if last_pos is None:
+            conv_next = tail[:, -(w - 1):]
+        else:
+            # last w-1 VALID rows: tail row j holds sequence position
+            # j - (w-1), so positions (last_pos-w+2 .. last_pos) live at
+            # tail rows (last_pos+1 .. last_pos+w-1)
+            lp = jnp.asarray(last_pos, jnp.int32).reshape(-1, 1)
+            idx = lp + 1 + jnp.arange(w - 1, dtype=jnp.int32)[None, :]
+            conv_next = jnp.take_along_axis(tail, idx[..., None], axis=1)
+        new_state = dict(conv=conv_next, ssm=fin.astype(state['ssm'].dtype))
     return out, new_state
 
 

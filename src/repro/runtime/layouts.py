@@ -37,11 +37,29 @@ PagedQ8Layout       PagedLayout + ``kq``/``vq`` (P, ps, Hkv, dh) int8,
 PagedMLALayout      ``cl`` (P, ps, r + d_rope), ``bt`` (B, W) int32
 PagedMLAQ8Layout    PagedMLALayout + ``clq`` (P, ps, r + d_rope) int8,
                     ``cs`` (P, 1) f32, ``hw`` (1,) int32
+RecurrentLayout     ``conv`` (B, W_conv-1, C), ``ssm`` (B, H, P, N) — one
+                    per-slot (conv_state, ssd_state) snapshot, no
+                    positional axis at all
+HybridLayout        ``ssm`` (a RecurrentLayout stack) + ``attn`` (a
+                    Paged/Contiguous site stack) — structural: the tree
+                    walkers recurse into the members
 ==================  =========================================================
 
 ``bt`` rows follow the ``runtime.kv_cache`` block-table contract (page 0 =
 garbage page); ``hw`` is the hot window in pages (>= 1; >= W disables the
 int8 tier, bit-exact with the fp layout).
+
+Recurrent state rides the continuous scheduler through three slot ops
+instead of write/gather ops (there is no position to page behind — the
+whole state is rewritten every token): **reset** (zero a slot's rows, on
+admit/evict/preempt, so idle lanes decode against zeroed state and step
+shapes never change), **snapshot** (a batch-1 slice, the admission
+prefill's view), and **restore** (scatter the prefilled batch-1 state back
+into the full-batch tree). The tree walkers :func:`reset_state_slots`,
+:func:`slice_state_slot`, and :func:`merge_state_slot` apply them to
+(possibly layer-stacked, possibly hybrid) cache trees;
+:func:`with_block_tables` / :func:`quantize_tree_pages` pass recurrent
+leaves through untouched.
 """
 
 from __future__ import annotations
@@ -124,6 +142,8 @@ class CacheLayout:
     paged: bool = False                 # carries block tables
     quantized: bool = False             # carries an int8 tier
     mla: bool = False                   # latent pool (vs K/V pools)
+    recurrent: bool = False             # per-slot state, no positional axis
+    composite: bool = False             # structural node; walkers recurse
     table_leaves: Tuple[str, ...] = ()  # refreshed by with_block_tables
     quant_leaves: Tuple[str, ...] = ()  # vmapped by quantize_tree_pages
     quant_probe: str = ''               # leaf whose ndim detects stacking
@@ -159,6 +179,19 @@ class CacheLayout:
     def quantize_pages(cls, cache: dict, pages) -> dict:
         raise NotImplementedError(
             f'{cls.name} has no int8 tier to quantize into')
+
+    # -- slot ops (recurrent layouts only) ----------------------------------
+    @classmethod
+    def slot_reset(cls, cache: dict, slots) -> dict:
+        raise NotImplementedError(f'{cls.name} carries no per-slot state')
+
+    @classmethod
+    def slot_snapshot(cls, cache: dict, slot: int) -> dict:
+        raise NotImplementedError(f'{cls.name} carries no per-slot state')
+
+    @classmethod
+    def slot_restore(cls, cache: dict, snap: dict, slot: int) -> dict:
+        raise NotImplementedError(f'{cls.name} carries no per-slot state')
 
 
 @_register
@@ -416,6 +449,54 @@ class ContiguousLayout(CacheLayout):
                                window=window, interpret=interpret)
 
 
+@_register
+class RecurrentLayout(CacheLayout):
+    """Per-slot recurrent state: ``conv`` (B, W_conv-1, C) + ``ssm``
+    (B, H, P, N). No positional axis — the whole state is rewritten every
+    token — so instead of write/gather ops the layout exposes the three
+    slot ops the continuous scheduler needs (reset / snapshot / restore;
+    see the module docstring). The ops delegate to the pure helpers in
+    ``models.ssm`` and handle both single trees and (L,)-stacked ones by
+    probing ``conv``'s ndim."""
+    name = 'recurrent'
+    required = frozenset({'conv', 'ssm'})
+    recurrent = True
+    state_leaves = ('conv', 'ssm')
+    state_probe = 'conv'
+    state_probe_ndim = 3        # (B, W_conv-1, C); stacks prepend (L,)
+
+    @classmethod
+    def _axis(cls, cache: dict) -> int:
+        return cache[cls.state_probe].ndim - cls.state_probe_ndim
+
+    @classmethod
+    def slot_reset(cls, cache, slots):
+        from repro.models import ssm as ssm_mod
+        return ssm_mod.slot_reset(cache, slots, axis=cls._axis(cache))
+
+    @classmethod
+    def slot_snapshot(cls, cache, slot):
+        from repro.models import ssm as ssm_mod
+        return ssm_mod.slot_snapshot(cache, slot, axis=cls._axis(cache))
+
+    @classmethod
+    def slot_restore(cls, cache, snap, slot):
+        from repro.models import ssm as ssm_mod
+        return ssm_mod.slot_restore(cache, snap, slot,
+                                    axis=cls._axis(cache))
+
+
+@_register
+class HybridLayout(CacheLayout):
+    """Structural marker for hybrid (attention + SSM) cache trees:
+    ``ssm`` (a RecurrentLayout stack) + ``attn`` (a paged/contiguous site
+    stack). Carries no ops of its own — the tree walkers recurse into the
+    member subtrees and each inner dict classifies to its own layout."""
+    name = 'hybrid'
+    required = frozenset({'ssm', 'attn'})
+    composite = True
+
+
 # ----------------------------------------------------------------------------
 # tree walkers (layer-stacked cache trees)
 # ----------------------------------------------------------------------------
@@ -478,3 +559,54 @@ def quantize_tree_pages(cache_tree, pages: jnp.ndarray):
         return node
 
     return walk(cache_tree)
+
+
+def reset_state_slots(cache_tree, slots):
+    """Zero the given batch slots of every recurrent node in a (possibly
+    layer-stacked, possibly hybrid) cache tree. The scheduler calls this
+    on admit (a fresh request must not see the evicted tenant's state) and
+    on evict/preempt (idle lanes decode against zeroed state, keeping step
+    shapes constant). Non-recurrent subtrees pass through by reference."""
+    def walk(node):
+        if isinstance(node, dict):
+            lay = match_layout(node)
+            if lay is not None and lay.recurrent:
+                return lay.slot_reset(node, slots)
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    return walk(cache_tree)
+
+
+def slice_state_slot(cache_tree, slot: int):
+    """Batch-1 view of one slot's recurrent state — the admission
+    prefill's cache tree. Recurrent leaves are sliced to ``slot:slot+1``
+    (a copy, so the full tree's rows survive a donated prefill);
+    everything else (paged pools, tables) passes through by reference. On
+    an attention-only tree this is the identity walk."""
+    def walk(node):
+        if isinstance(node, dict):
+            lay = match_layout(node)
+            if lay is not None and lay.recurrent:
+                return lay.slot_snapshot(node, slot)
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    return walk(cache_tree)
+
+
+def merge_state_slot(full_tree, part_tree, slot: int):
+    """Fold an admission prefill's batch-1 tree back into the full-batch
+    tree: recurrent nodes scatter the part's row into the full tree's
+    (never-donated) leaves; every other node takes the part's value —
+    paged pools pass through :func:`slice_state_slot` by reference, so
+    the prefilled pool buffers ARE the part's leaves after donation."""
+    def walk(full, part):
+        if isinstance(full, dict) and isinstance(part, dict):
+            lay = match_layout(full)
+            if lay is not None and lay.recurrent:
+                return lay.slot_restore(full, part, slot)
+            return {k: walk(full[k], part[k]) for k in full}
+        return part
+
+    return walk(full_tree, part_tree)

@@ -17,16 +17,19 @@ def test_bench_decode_smoke_writes_parity_checked_json(tmp_path):
     assert on_disk['smoke'] is True
     names = {r['name'] for r in on_disk['rows']}
     assert {'einsum_oracle', 'flash_streamed', 'flash_prefetch',
-            'flash_paged', 'mla_einsum_oracle', 'mla_flash_paged'} <= names
+            'flash_paged', 'mla_einsum_oracle', 'mla_flash_paged',
+            'ssm_serve_solo', 'ssm_serve_continuous',
+            'hybrid_serve_solo', 'hybrid_serve_continuous'} <= names
     # every flash flavour parity-checked against its family's oracle
     # (run() already asserts; re-check the artifact so a silent tolerance
-    # edit fails here)
+    # edit fails here); serve rows encode completion in the same field
     for row in result['rows']:
         if not row['name'].endswith('einsum_oracle'):
             assert row['max_abs_err_vs_oracle'] < bench_decode.PARITY_ATOL
-    # both requested cache lengths present
-    assert {r['s_max'] for r in on_disk['rows']} == set(
-        bench_decode.SMOKE_SEQ_LENS)
+    # both requested cache lengths present in the attention sweep (the
+    # ssm/hybrid serve rows carry their own prompt+gen s_max)
+    attn = {r['s_max'] for r in on_disk['rows'] if '_serve_' not in r['name']}
+    assert attn == set(bench_decode.SMOKE_SEQ_LENS)
 
 
 def test_bench_kv_quant_smoke_asserts_quantized_path(tmp_path):

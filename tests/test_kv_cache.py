@@ -207,11 +207,17 @@ def test_model_decode_step_paged_matches_contiguous():
         np.testing.assert_array_equal(np.asarray(tok), np.asarray(ref_tok))
 
 
-def test_paged_cache_tree_rejects_ssm():
+def test_paged_cache_tree_builds_recurrent_ssm():
+    """SSM configs get a per-slot recurrent state tree (PR 6); the int8 KV
+    tier stays rejected — recurrence has no quantized tier."""
     cfg = configs.get('mamba2-780m', smoke=True)
-    with pytest.raises(NotImplementedError):
+    tree = M.init_paged_cache_tree(cfg, 2, num_pages=9, page_size=4,
+                                   max_blocks=4)
+    assert set(tree) == {'ssm'}
+    assert tree['ssm']['conv'].shape[:2] == (cfg.n_layers, 2)
+    with pytest.raises(ValueError, match='no int8 tier'):
         M.init_paged_cache_tree(cfg, 2, num_pages=9, page_size=4,
-                                max_blocks=4)
+                                max_blocks=4, kv_dtype='int8')
 
 
 # ----------------------------------------------------------------------------

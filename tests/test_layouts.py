@@ -82,6 +82,144 @@ def test_registry_classifies_every_init_path():
     assert L.get_layout(A.init_paged_cache(
         _DEEPSEEK, 2, num_pages=9, page_size=4, max_blocks=4,
         kv_dtype='int8')) is L.PagedMLAQ8Layout
+    # recurrent + hybrid trees out of init_paged_cache_tree
+    smb = configs.get('mamba2-780m', smoke=True)
+    zam = configs.get('zamba2-1.2b', smoke=True)
+    ssm_tree = M.init_paged_cache_tree(smb, 2, num_pages=9, page_size=4,
+                                       max_blocks=4)
+    assert L.get_layout(ssm_tree['ssm']) is L.RecurrentLayout
+    hyb = M.init_paged_cache_tree(zam, 2, num_pages=9, page_size=4,
+                                  max_blocks=4)
+    assert L.get_layout(hyb) is L.HybridLayout
+    assert L.get_layout(hyb['ssm']) is L.RecurrentLayout
+    assert L.get_layout(jax.tree.map(lambda a: a[0], hyb['attn'])) \
+        is L.PagedLayout
+    # recurrent state carries no int8 tier: pure-SSM + kv_dtype is an error
+    with pytest.raises(ValueError, match='no int8 tier'):
+        M.init_paged_cache_tree(smb, 2, num_pages=9, page_size=4,
+                                max_blocks=4, kv_dtype='int8')
+    # ...but a hybrid tree tiers its attention sites only
+    hyb_q8 = M.init_paged_cache_tree(zam, 2, num_pages=9, page_size=4,
+                                     max_blocks=4, kv_dtype='int8')
+    assert L.get_layout(hyb_q8['attn']) is L.PagedQ8Layout
+    assert L.get_layout(hyb_q8['ssm']) is L.RecurrentLayout
+
+
+def test_registry_classifies_all_ten_seed_configs():
+    """The acceptance bar made executable: every seed config's serving
+    cache tree classifies layer-by-layer — each dict node either matches a
+    registered layout or is a pure grouping node whose children all
+    classify recursively. No leaves may dangle outside a classified
+    node."""
+    for arch in configs.names():
+        cfg = configs.get(arch, smoke=True)
+        tree = M.init_paged_cache_tree(cfg, 2, num_pages=9, page_size=4,
+                                       max_blocks=4)
+
+        def check(node, path):
+            assert isinstance(node, dict), f'{arch}:{path} dangling leaf'
+            lay = L.match_layout(node)
+            if lay is not None:
+                return [lay.name]
+            return [n for k, v in node.items()
+                    for n in check(v, f'{path}/{k}')]
+        names = check(tree, arch)
+        assert names, arch
+        if cfg.family == 'ssm':
+            assert names == ['recurrent']
+        elif cfg.hybrid_group:
+            assert 'hybrid' in names      # top node classifies as a whole
+        else:
+            want = 'paged_mla' if cfg.mla is not None else 'paged'
+            assert all(n == want for n in names), (arch, names)
+
+
+def test_recurrent_layout_slot_ops():
+    """reset zeroes exactly the named slots, snapshot is a batch-1 copy,
+    restore scatters it back — on both single and (L,)-stacked trees."""
+    cfg = configs.get('mamba2-780m', smoke=True)
+    tree = M.init_paged_cache_tree(cfg, 3, num_pages=9, page_size=4,
+                                   max_blocks=4)
+    stack = jax.tree.map(
+        lambda a: jax.random.normal(jax.random.key(a.size % 97), a.shape,
+                                    a.dtype), tree['ssm'])
+    lay = L.get_layout(stack)
+    assert lay is L.RecurrentLayout
+
+    out = lay.slot_reset(stack, [1])
+    for k in ('conv', 'ssm'):
+        assert float(jnp.max(jnp.abs(out[k][:, 1]))) == 0.0
+        np.testing.assert_array_equal(np.asarray(out[k][:, 0]),
+                                      np.asarray(stack[k][:, 0]))
+        np.testing.assert_array_equal(np.asarray(out[k][:, 2]),
+                                      np.asarray(stack[k][:, 2]))
+
+    snap = lay.slot_snapshot(stack, 2)
+    for k in ('conv', 'ssm'):
+        assert snap[k].shape[1] == 1
+        np.testing.assert_array_equal(np.asarray(snap[k][:, 0]),
+                                      np.asarray(stack[k][:, 2]))
+
+    # restore the snapshot into the zeroed tree: slot 2 comes back, the
+    # rest stays untouched
+    zeroed = lay.slot_reset(stack, [0, 1, 2])
+    back = lay.slot_restore(zeroed, snap, 2)
+    for k in ('conv', 'ssm'):
+        np.testing.assert_array_equal(np.asarray(back[k][:, 2]),
+                                      np.asarray(stack[k][:, 2]))
+        assert float(jnp.max(jnp.abs(back[k][:, :2]))) == 0.0
+
+    # single-layer (unstacked) trees take the batch axis at 0
+    single = jax.tree.map(lambda a: a[0], stack)
+    s1 = lay.slot_snapshot(single, 1)
+    np.testing.assert_array_equal(np.asarray(s1['conv'][0]),
+                                  np.asarray(single['conv'][1]))
+
+
+def test_state_walkers_on_hybrid_tree():
+    """reset/slice/merge walk a hybrid tree: recurrent nodes get the slot
+    ops, attention pools pass by reference through slice and are taken
+    from the part by merge (the admission path's donation contract)."""
+    cfg = configs.get('zamba2-1.2b', smoke=True)
+    tree = M.init_paged_cache_tree(cfg, 2, num_pages=9, page_size=4,
+                                   max_blocks=4)
+    tree['ssm'] = jax.tree.map(
+        lambda a: jax.random.normal(jax.random.key(1), a.shape, a.dtype),
+        tree['ssm'])
+
+    part = L.slice_state_slot(tree, 1)
+    for k in ('conv', 'ssm'):
+        assert part['ssm'][k].shape[1] == 1
+    # attention subtree passes through by reference (no copy)
+    assert part['attn']['k'] is tree['attn']['k']
+
+    # merge scatters the (modified) part state into slot 1 and takes the
+    # part's attention subtree wholesale
+    part2 = dict(part, ssm=jax.tree.map(lambda a: a + 1.0, part['ssm']),
+                 attn=dict(part['attn'],
+                           k=part['attn']['k'] + 2.0))
+    merged = L.merge_state_slot(tree, part2, 1)
+    for k in ('conv', 'ssm'):
+        np.testing.assert_allclose(
+            np.asarray(merged['ssm'][k][:, 1]),
+            np.asarray(tree['ssm'][k][:, 1] + 1.0), atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(merged['ssm'][k][:, 0]),
+                                      np.asarray(tree['ssm'][k][:, 0]))
+    assert merged['attn']['k'] is part2['attn']['k']
+
+    # reset_state_slots zeroes recurrent rows, leaves attention alone
+    wiped = L.reset_state_slots(tree, [0, 1])
+    assert float(jnp.max(jnp.abs(wiped['ssm']['conv']))) == 0.0
+    assert wiped['attn']['k'] is tree['attn']['k']
+
+    # with_block_tables / quantize_tree_pages pass recurrent leaves through
+    bt = jnp.arange(8, dtype=jnp.int32).reshape(2, 4)
+    out = kvc.with_block_tables(tree, bt)
+    assert out['ssm']['conv'] is tree['ssm']['conv']
+    np.testing.assert_array_equal(np.asarray(out['attn']['bt'][0]),
+                                  np.asarray(bt))
+    qt = kvq.quantize_tree_pages(tree, jnp.asarray([1], jnp.int32))
+    assert qt['ssm']['conv'] is tree['ssm']['conv']
 
 
 def test_registry_rejects_unknown_schema():
@@ -101,7 +239,9 @@ def test_registry_owns_all_leaf_sniffing():
             continue
         text = path.read_text()
         for needle in ("'bt' in ", '"bt" in ', "'ks' in ", '"ks" in ',
-                       "'cl' in ", "'cs' in "):
+                       "'cl' in ", "'cs' in ",
+                       "'conv' in ", '"conv" in ', "'ssm' in ",
+                       '"ssm" in ', "'attn' in ", '"attn" in '):
             if needle in text:
                 offenders.append((str(path), needle))
     assert not offenders, offenders

@@ -141,27 +141,28 @@ def test_continuous_serve_flash_matches_einsum_mla():
 # serving-mode routing table (pinned: which families reach which modes)
 # ----------------------------------------------------------------------------
 def test_continuous_serve_routing_table():
-    """--continuous admits every token-input attention-cache family (GQA
-    *and* MLA, with or without the int8 tier) and rejects exactly the
-    stateless-position / non-token ones, each with its own message — the
-    gate must not lump MLA in with SSM ever again."""
-    # blocked: no per-position KV cache to page
-    for arch in ('mamba2-780m', 'zamba2-1.2b'):
-        with pytest.raises(ValueError, match='no position to page'):
-            SV.serve_continuous(arch, quiet=True)
+    """--continuous admits every token-input family — GQA, MLA (fp or
+    int8-tiered), SSM, and hybrid — and rejects exactly the non-token
+    frontends, each with its own message. The SSM/hybrid block fell with
+    the RecurrentLayout slot ops; only the stub frontend's inability to
+    requeue non-token prompts remains."""
     # blocked: non-token inputs can't requeue through the stub frontend
     for arch in ('musicgen-large', 'qwen2-vl-72b'):
         with pytest.raises(ValueError, match='token streams'):
             SV.serve_continuous(arch, quiet=True)
-    # admitted: GQA and MLA both construct + drain an empty stream, fp
-    # and int8-tiered alike (the MLA latent tier shipped with the layout
-    # registry — the gate must not regress to a blanket MLA block)
-    for arch in (ARCH, MLA_ARCH):
-        for kv_quant in (False, True):
-            out = SV.serve_continuous(arch, n_requests=0, prompt_len=8,
-                                      gen_len=4, page_size=4,
-                                      kv_quant=kv_quant, quiet=True)
-            assert out['completed'] == 0
+    # blocked: pure-SSM recurrent state has no int8 KV tier to quantize
+    with pytest.raises(ValueError, match='recurrent state'):
+        SV.serve_continuous('mamba2-780m', kv_quant=True, quiet=True)
+    # admitted: every token family constructs + drains an empty stream
+    # (GQA/MLA fp and int8-tiered, SSM, and hybrid alike — the gate must
+    # not regress to a blanket SSM/hybrid block)
+    for arch, kv_quant in ((ARCH, False), (ARCH, True), (MLA_ARCH, False),
+                           (MLA_ARCH, True), ('mamba2-780m', False),
+                           ('zamba2-1.2b', False), ('zamba2-1.2b', True)):
+        out = SV.serve_continuous(arch, n_requests=0, prompt_len=8,
+                                  gen_len=4, page_size=4,
+                                  kv_quant=kv_quant, quiet=True)
+        assert out['completed'] == 0
 
 
 # ----------------------------------------------------------------------------

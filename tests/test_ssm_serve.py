@@ -1,0 +1,127 @@
+"""SSM/hybrid continuous serving: the RecurrentLayout slot ops end-to-end.
+
+mamba2 (pure SSM) and zamba2 (hybrid attention+SSM) must decode
+token-identically solo vs --continuous, including under forced preemption
+(recompute-style: state re-derived from the prompt on re-admission), and
+the masked padded prefill must produce exactly the unpadded prompt's
+recurrent state.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.yoco_linear import DEFAULT_YOCO
+from repro.models import model as model_mod
+from repro.models import ssm
+
+from test_serve_continuous import _preemption_is_lossless, _solo_vs_continuous
+
+pytestmark = pytest.mark.ssm_serve
+
+SSM_ARCH = 'mamba2-780m'
+HYB_ARCH = 'zamba2-1.2b'
+
+
+# ----------------------------------------------------------------------------
+# masked padded prefill == unpadded prefill (the admission-path identity)
+# ----------------------------------------------------------------------------
+@pytest.mark.parametrize('arch', [SSM_ARCH, HYB_ARCH])
+def test_masked_prefill_matches_unpadded(arch):
+    """Right-padded prefill with ``last_pos`` must yield the same last
+    logits AND the same recurrent state as prefilling the unpadded prompt
+    alone — dt is masked to 0 at padded steps (da=1 preserves the state,
+    the update term vanishes) and the conv tail gathers the last valid
+    rows."""
+    cfg = configs.get(arch, smoke=True)
+    params = model_mod.init_params(jax.random.key(0), cfg)
+    plen, pad_to = 11, 16
+    toks = np.asarray(
+        jax.random.randint(jax.random.key(1), (1, pad_to), 0,
+                           cfg.vocab_size), np.int32)
+
+    cache = model_mod.init_cache_tree(cfg, 1, pad_to + 4)
+    logits_ref, cache_ref = model_mod.prefill(
+        params, dict(inputs=jnp.asarray(toks[:, :plen])), cache, cfg)
+
+    cache = model_mod.init_cache_tree(cfg, 1, pad_to + 4)
+    logits_pad, cache_pad = model_mod.prefill(
+        params, dict(inputs=jnp.asarray(toks)), cache, cfg,
+        last_pos=jnp.asarray([plen - 1]))
+
+    np.testing.assert_allclose(np.asarray(logits_pad, np.float32),
+                               np.asarray(logits_ref, np.float32),
+                               rtol=2e-2, atol=2e-2)
+    for k in ('conv', 'ssm'):
+        np.testing.assert_allclose(np.asarray(cache_pad['ssm'][k]),
+                                   np.asarray(cache_ref['ssm'][k]),
+                                   rtol=2e-4, atol=2e-4, err_msg=k)
+
+
+def test_masked_forward_state_matches_per_row_truncation():
+    """Batch rows with different valid lengths: each row's state must equal
+    prefilling that row's truncated prompt alone."""
+    cfg = configs.get(SSM_ARCH, smoke=True)
+    p = ssm.init_mamba2(jax.random.key(2), cfg)
+    x = jax.random.normal(jax.random.key(3), (3, 24, cfg.d_model),
+                          jnp.float32)
+    lens = [24, 15, 7]
+    _, s_pad = ssm.mamba2_forward(p, x, cfg, DEFAULT_YOCO,
+                                  state=ssm.init_ssm_state(cfg, 3),
+                                  last_pos=jnp.asarray([L - 1 for L in lens]))
+    for b, L in enumerate(lens):
+        _, ref = ssm.mamba2_forward(p, x[b:b + 1, :L], cfg, DEFAULT_YOCO,
+                                    state=ssm.init_ssm_state(cfg, 1))
+        for k in ('conv', 'ssm'):
+            np.testing.assert_allclose(np.asarray(s_pad[k][b]),
+                                       np.asarray(ref[k][0]),
+                                       rtol=2e-4, atol=2e-4,
+                                       err_msg=f'{k} row {b}')
+
+
+# ----------------------------------------------------------------------------
+# solo-vs-continuous token parity (the tentpole's acceptance bar)
+# ----------------------------------------------------------------------------
+def test_continuous_serve_matches_reference_ssm():
+    """Pure-SSM stream over 2 slots: every emitted token equals the
+    request's solo contiguous decode — recurrent state reset on admit,
+    page accounting purely virtual."""
+    _solo_vs_continuous(SSM_ARCH)
+
+
+def test_continuous_serve_matches_reference_hybrid():
+    """Hybrid (zamba2) stream: recurrent leaves and paged attention-site
+    pools churn through the same admission path under one HybridLayout
+    classification."""
+    _solo_vs_continuous(HYB_ARCH, n=4, gen_len=6)
+
+
+def test_continuous_serve_preemption_is_lossless_ssm():
+    """A dry pool preempts-and-requeues; the re-admitted request's state is
+    recomputed from the prompt, so the token streams survive unchanged."""
+    _preemption_is_lossless(SSM_ARCH, 9)
+
+
+@pytest.mark.slow
+def test_continuous_serve_preemption_is_lossless_hybrid():
+    _preemption_is_lossless(HYB_ARCH, 9)
+
+
+@pytest.mark.slow
+def test_continuous_serve_hybrid_kv_quant_tier():
+    """zamba2 + --kv-quant: the int8 tier applies to the attention sites
+    while recurrent leaves stay fp; a hot window wider than the table is
+    bit-exact with the fp run."""
+    from repro.launch import serve as SV
+    kwargs = dict(slots=2, n_requests=3, prompt_len=16, gen_len=6,
+                  page_size=4, attn_impl='einsum', quiet=True)
+    fp = SV.serve_continuous(HYB_ARCH, kv_quant=False, **kwargs)
+    wide = SV.serve_continuous(HYB_ARCH, kv_quant=True, hot_window=64,
+                               **kwargs)
+    assert fp['outputs'] == wide['outputs']
+    tiered = SV.serve_continuous(HYB_ARCH, kv_quant=True, hot_window=1,
+                                 **kwargs)
+    assert tiered['completed'] == 3
+    assert tiered['pages_quantized'] > 0
