@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src:.$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test test-fast test-slow test-mla test-layouts test-ssm-serve bench bench-smoke serve-demo check
+.PHONY: test test-fast test-slow test-mla test-layouts test-ssm-serve test-chaos bench bench-smoke serve-demo check
 
 # tier-1: the full suite (what CI / the driver runs)
 test:
@@ -33,6 +33,13 @@ test-layouts:
 test-ssm-serve:
 	$(PY) -m pytest -q -m "ssm_serve" tests/test_ssm_serve.py
 
+# the robustness surface: deterministic fault-injection unit tests plus
+# the seeded chaos soaks (quarantine/degrade recovery with solo-decode
+# token parity for every request the injector didn't touch)
+test-chaos:
+	$(PY) -m pytest -q tests/test_faults.py
+	$(PY) -m pytest -q -m "chaos" tests/test_chaos_serve.py
+
 bench:
 	$(PY) -m benchmarks.run
 
@@ -44,12 +51,14 @@ bench:
 bench-smoke:
 	$(PY) -m benchmarks.bench_decode --smoke
 	$(PY) -m benchmarks.bench_kv_quant --smoke
+	$(PY) -m benchmarks.bench_chaos --smoke
 
 # the pre-push gate: fast tests + the layout-parity grid + the SSM/hybrid
-# serving parity suite + parity-asserted smoke benchmarks (test-fast
-# already runs the non-slow cells of both grids; the dedicated targets add
-# the slow ones so each surface is complete pre-push)
-check: test-fast test-layouts test-ssm-serve bench-smoke
+# serving parity suite + the chaos/fault-injection suite + parity-asserted
+# smoke benchmarks (test-fast already runs the non-slow cells of the
+# grids; the dedicated targets add the rest so each surface is complete
+# pre-push)
+check: test-fast test-layouts test-ssm-serve test-chaos bench-smoke
 
 serve-demo:
 	$(PY) examples/serve_decode.py

@@ -1,0 +1,141 @@
+"""Chaos-serving overhead benchmark: the price of robustness.
+
+Runs the continuous-batching server twice over the same request stream —
+once clean, once under the seeded default chaos profile (pool squeezes,
+preemption storms, NaN poisoning of pool pages and logits rows, dropped
+quantize chunks, cancellations) — and prices what the hardening costs:
+
+  * **steady-state tax**: the per-step integrity sentinel and event log
+    run on the CLEAN path too; the clean-run tokens/s here vs the
+    ``bench_decode`` numbers is that tax (one jit'd (B,V)->(B,) finite
+    reduction + one (B,) host transfer per step — noise at smoke sizes).
+  * **recovery overhead**: extra steps the chaos run spends re-prefilling
+    quarantined/preempted lanes, reported as ``step_overhead`` (chaos
+    steps / clean steps for the same stream).
+  * **accounting gates** (asserted, so a regression can't overwrite the
+    artifact): the clean run completes every request in exactly one
+    decode compilation; the chaos run reaches a terminal state for every
+    submitted rid and still completes a floor fraction of the stream.
+
+Writes ``BENCH_chaos.json`` at the repo root; ``--smoke`` (fast tier /
+``make bench-smoke``) shrinks the stream and writes
+``BENCH_chaos.smoke.json`` so the tracked artifact is never clobbered.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Optional
+
+import jax
+
+from benchmarks.common import emit
+from repro.launch import serve
+from repro.runtime import faults
+
+ARCH = 'stablelm-1.6b'
+CHAOS_SEED = 7
+COMPLETION_FLOOR = 0.5          # chaos run must still finish >= half
+
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), '..')
+DEFAULT_OUT = os.path.join(_ROOT, 'BENCH_chaos.json')
+SMOKE_OUT = os.path.join(_ROOT, 'BENCH_chaos.smoke.json')
+
+
+def _stream_kw(smoke: bool) -> dict:
+    if smoke:
+        return dict(slots=3, n_requests=6, prompt_len=16, gen_len=8,
+                    page_size=4)
+    return dict(slots=4, n_requests=16, prompt_len=64, gen_len=32,
+                page_size=8)
+
+
+def _serve_row(label: str, injector, *, smoke: bool, retry_budget=16,
+               **extra) -> dict:
+    t0 = time.perf_counter()
+    out = serve.serve_continuous(ARCH, attn_impl='flash', quiet=True,
+                                 faults=injector,
+                                 retry_budget=retry_budget,
+                                 **_stream_kw(smoke), **extra)
+    wall_s = time.perf_counter() - t0
+    row = dict(
+        label=label,
+        requests=out['requests'], completed=out['completed'],
+        failed=out['failed'], rejected=out['rejected'],
+        cancelled=out['cancelled'], preempted=out['preempted'],
+        quarantined=out['quarantined'], steps=out['steps'],
+        tokens_per_s=out['tokens_per_s'],
+        slot_utilization=out['slot_utilization'],
+        decode_compilations=out['decode_compilations'],
+        attn_impl_effective=out['attn_impl_effective'],
+        events=out['events'],
+        faults=out['faults'],
+        wall_s=round(wall_s, 3),
+    )
+    emit(f'chaos.{label}', wall_s * 1e6,
+         f'steps={out["steps"]},completed={out["completed"]}/'
+         f'{out["requests"]},tok_s={out["tokens_per_s"]}')
+    return row
+
+
+def run(smoke: bool = False, out_path: Optional[str] = None) -> dict:
+    if out_path is None:
+        out_path = SMOKE_OUT if smoke else DEFAULT_OUT
+    clean = _serve_row('clean', None, smoke=smoke)
+    inj = faults.FaultInjector(seed=CHAOS_SEED,
+                               profile=faults.chaos_profile())
+    chaos = _serve_row('chaos_default_profile', inj, smoke=smoke)
+    # a second chaos point with the kv-quant tier live (drop-quant lands)
+    inj_q = faults.FaultInjector(seed=CHAOS_SEED,
+                                 profile=faults.chaos_profile())
+    chaos_q = _serve_row('chaos_kv_quant', inj_q, smoke=smoke,
+                         kv_quant=True, hot_window=2)
+    rows = [clean, chaos, chaos_q]
+
+    result = dict(
+        bench='chaos',
+        backend=jax.default_backend(),
+        smoke=smoke,
+        arch=ARCH, chaos_seed=CHAOS_SEED,
+        stream=_stream_kw(smoke),
+        step_overhead=round(chaos['steps'] / max(clean['steps'], 1), 3),
+        rows=rows,
+    )
+    emit('chaos.step_overhead', 0.0, f'x{result["step_overhead"]}')
+
+    # gates precede the write: a broken recovery path must not overwrite
+    # the artifact
+    assert clean['completed'] == clean['requests'], clean
+    assert clean['decode_compilations'] == 1, clean
+    assert clean['quarantined'] == 0 and clean['failed'] == 0, clean
+    for row in (chaos, chaos_q):
+        n_term = (row['completed'] + row['failed'] + row['rejected']
+                  + row['cancelled'])
+        assert n_term == row['requests'], row
+        assert row['completed'] >= COMPLETION_FLOOR * row['requests'], row
+    # the chaos profile must actually have injected something
+    assert sum((chaos['faults'] or {}).values()) > 0, chaos
+
+    out_path = os.path.abspath(out_path)
+    with open(out_path, 'w') as f:
+        json.dump(result, f, indent=2)
+    print(f'# wrote {out_path}')
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--smoke', action='store_true',
+                    help='toy stream, accounting-asserted (the CI tier); '
+                         'writes BENCH_chaos.smoke.json, not the tracked '
+                         'artifact')
+    ap.add_argument('--out', default=None)
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke, out_path=args.out)
+
+
+if __name__ == '__main__':
+    main()

@@ -10,10 +10,16 @@ the SSM/hybrid families: mamba2/zamba2 recurrent state rides the same
 scheduler as per-slot RecurrentLayout rows (reset on admit/evict/preempt,
 recomputed on re-admission).
 
+The closing row reruns the continuous stream under the seeded chaos
+profile (pool squeezes, preemption storms, NaN poisoning, cancellations):
+poisoned lanes are quarantined and retried, the rest of the batch keeps
+decoding, and the event log accounts for every request's terminal state.
+
 Usage:  PYTHONPATH=src python examples/serve_decode.py
 """
 
 from repro.launch import serve
+from repro.runtime import faults
 
 
 def main():
@@ -70,6 +76,23 @@ def main():
               f'slot_util={out["slot_utilization"]}, '
               f'peak_pages={out["peak_pages"]}/{out["total_pages"]}, '
               f'pages_quantized={out["pages_quantized"]}')
+
+    # chaos-hardened serving: the same stream under a seeded fault
+    # profile — squeezed pools, preemption storms, NaN-poisoned pages and
+    # logits rows, mid-stream cancellations. Quarantined lanes are
+    # scrubbed and retried; every request ends in exactly one terminal
+    # state (finish/fail/reject/cancel) in the event log.
+    print('=== stablelm-1.6b continuous (chaos profile, seed=0) ===')
+    inj = faults.FaultInjector(seed=0, profile=faults.chaos_profile())
+    out = serve.serve_continuous(
+        'stablelm-1.6b', slots=3, n_requests=6, prompt_len=32, gen_len=16,
+        page_size=8, attn_impl='flash', quiet=True, faults=inj,
+        retry_budget=8)
+    print(f'  {out["completed"]}/{out["requests"]} done '
+          f'(+{out["failed"]} failed, {out["cancelled"]} cancelled), '
+          f'{out["quarantined"]} quarantined, '
+          f'{out["preempted"]} preempted, events={out["events"]}, '
+          f'faults={out["faults"]}')
 
 
 if __name__ == '__main__':

@@ -43,6 +43,15 @@ with temperature/top-k sampling.
 to int8 with per-page/per-head scales as they age out, and the decode read
 mixes the tiers — the serving-side twin of the paper's ReRAM–SRAM split.
 
+Robustness (continuous mode): ``--deadline`` / ``--retry-budget`` /
+``--max-queue`` bound each request's life (terminal fail/reject events
+instead of livelock or unbounded queues); every step a jit'd NaN/Inf
+sentinel on the logits quarantines poisoned lanes (pages scrubbed, request
+requeued, rest of the batch keeps decoding), and a kernel-path failure
+degrades the stream to the layout's einsum oracle. ``--chaos`` runs the
+whole stream under ``runtime/faults.py``'s deterministic fault injector;
+the serve report carries the structured event log either way.
+
 Usage:
   python -m repro.launch.serve --arch stablelm-1.6b --batch 4 \
       --prompt-len 32 --gen-len 32 --mode w8a8 --ragged --attn-impl flash
@@ -69,6 +78,7 @@ from repro.core import yoco_linear
 from repro.data import synthetic
 from repro.models import model as model_mod
 from repro.models.model import ModelRuntime
+from repro.runtime import faults as faults_mod
 from repro.runtime import kv_cache as kvc
 from repro.runtime import kv_quant as kvq
 from repro.runtime import layouts as layouts_mod
@@ -179,6 +189,8 @@ class Request:
     rid: int
     prompt: np.ndarray          # (plen,) int32, unpadded
     target_gen: int             # generation budget ("EOS" for synthetic runs)
+    ttl_steps: Optional[int] = None   # deadline in scheduler steps from
+                                      # submission (None: no deadline)
 
 
 @dataclasses.dataclass
@@ -221,11 +233,44 @@ class ContinuousScheduler:
       and after growth, :meth:`aged_out_pages` lists the pages that just
       left the hot window — the driver quantizes exactly those into the
       int8 tier before the decode step reads them as cold.
+
+    Robustness contract (PR 7; chaos-tested in tests/test_chaos_serve.py):
+
+    * **terminal accounting**: every submitted request ends in exactly one
+      of ``completed`` / ``failed`` / ``rejected`` / ``cancelled``, with a
+      matching terminal event in :attr:`events` —
+      ``faults.EventLog.terminal_accounting`` audits this on every run.
+    * **deadline**: a request with ``ttl_steps`` set fails terminally
+      (reason ``deadline``) once that many scheduler steps pass since
+      submission, whether it is still queued or already decoding —
+      :meth:`begin_step` expires it before admissions so it can't consume
+      pool pages it can never finish with.
+    * **retry budget**: every preemption/quarantine requeue counts against
+      ``retry_budget``; past it the request fails terminally (reason
+      ``retry_budget``) instead of livelocking at the queue front.
+      ``max_queue_age`` (steps spent pending) closes the same hole for
+      requests that are never even admitted.
+    * **backpressure**: ``max_queue`` caps the pending queue; over-cap
+      submissions are rejected (reason ``queue_full``), as are prompts the
+      table can't hold (``oversized_prompt``/``empty_prompt``) or with
+      out-of-vocab ids (``garbage_prompt``, when ``vocab_size`` is set).
+    * **self-preemption guard**: growing a lane never preempts that lane
+      while any other lane is live; the grower yields itself only as the
+      last resort (and the retry budget then bounds the cycle).
+    * **quarantine**: a lane whose logits go non-finite is released and
+      requeued (recompute re-derives its state from the prompt, so the
+      retry is lossless), and its physical pages are handed back for
+      scrubbing before the free list can reallocate them.
     """
 
     def __init__(self, kv: kvc.PagedKVCache, *, prompt_pad: int,
                  eos_id: Optional[int] = None,
-                 hot_window: Optional[int] = None):
+                 hot_window: Optional[int] = None,
+                 retry_budget: Optional[int] = None,
+                 max_queue: Optional[int] = None,
+                 max_queue_age: Optional[int] = None,
+                 vocab_size: Optional[int] = None,
+                 events: Optional[faults_mod.EventLog] = None):
         if kv.blocks_for(prompt_pad) > kv.max_blocks:
             # no amount of waiting fixes a table that can't hold the
             # prompt — reject at construction instead of silently
@@ -239,18 +284,125 @@ class ContinuousScheduler:
         self.kv = kv
         self.prompt_pad = prompt_pad
         self.eos_id = eos_id
+        self.retry_budget = retry_budget
+        self.max_queue = max_queue
+        self.max_queue_age = max_queue_age
+        self.vocab_size = vocab_size
+        self.events = events if events is not None else faults_mod.EventLog()
         self.pending: deque = deque()
         self.active: dict = {}                 # slot -> _SlotState
         self.free_slots = list(range(kv.slots - 1, -1, -1))
         self._admit_seq = 0
         self.completed: List[_SlotState] = []
+        self.failed: List[Request] = []
+        self.rejected: List[Request] = []
+        self.cancelled: List[Request] = []
         self.n_preempted = 0
+        self.n_quarantined = 0
         self.dirty_slots: List[int] = []       # recurrent rows to zero
+        self.step_no = 0
+        self._retries: dict = {}               # rid -> requeue count
+        self._deadline_at: dict = {}           # rid -> step it expires at
+        self._queue_age: dict = {}             # rid -> steps spent pending
         self.tier = (kvq.KVTierTracker(hot_window, kv.page_size)
                      if hot_window is not None else None)
 
-    def submit(self, req: Request) -> None:
+    # -- terminal bookkeeping ------------------------------------------------
+    _TERMINAL_LIST = dict(fail='failed', reject='rejected',
+                          cancel='cancelled')
+
+    def _terminal(self, req: Request, kind: str, **detail) -> None:
+        getattr(self, self._TERMINAL_LIST[kind]).append(req)
+        self._forget(req.rid)
+        self.events.emit(kind, step=self.step_no, rid=req.rid, **detail)
+
+    def _forget(self, rid: int) -> None:
+        self._retries.pop(rid, None)
+        self._deadline_at.pop(rid, None)
+        self._queue_age.pop(rid, None)
+
+    def _release_slot(self, slot: int, *, reason: str) -> _SlotState:
+        """Mechanical slot teardown shared by every eviction path: pages
+        back to the free list, slot freed, recurrent rows marked dirty,
+        tier tracker reset — plus the ``evict`` event naming why."""
+        st = self.active.pop(slot)
+        self.kv.release(slot)
+        self.free_slots.append(slot)
+        self.dirty_slots.append(slot)
+        if self.tier is not None:
+            self.tier.reset(slot)
+        self.events.emit('evict', step=self.step_no, rid=st.req.rid,
+                         slot=slot, reason=reason, pos=st.pos)
+        return st
+
+    def _expired(self, rid: int) -> bool:
+        at = self._deadline_at.get(rid)
+        return at is not None and self.step_no >= at
+
+    def begin_step(self, step: int) -> None:
+        """Open scheduler step ``step``: age the pending queue and expire
+        deadlines — pending and active alike — BEFORE admissions, so an
+        expired request fails terminally instead of consuming pool pages
+        it can never finish with."""
+        self.step_no = step
+        for req in list(self.pending):
+            age = self._queue_age.get(req.rid, 0) + 1
+            self._queue_age[req.rid] = age
+            if self._expired(req.rid):
+                self.pending.remove(req)
+                self._terminal(req, 'fail', reason='deadline', waited=age)
+            elif self.max_queue_age is not None and age > self.max_queue_age:
+                self.pending.remove(req)
+                self._terminal(req, 'fail', reason='aged_out', waited=age)
+        for slot, st in list(self.active.items()):
+            if self._expired(st.req.rid):
+                self._release_slot(slot, reason='deadline')
+                self._terminal(st.req, 'fail', reason='deadline',
+                               pos=st.pos)
+
+    def submit(self, req: Request) -> bool:
+        """Validate and enqueue; returns False (with a terminal ``reject``
+        event) on admission backpressure or a prompt no slot can serve."""
+        self.events.emit('submit', step=self.step_no, rid=req.rid,
+                         plen=len(req.prompt), gen=req.target_gen)
+        if len(req.prompt) == 0:
+            self._terminal(req, 'reject', reason='empty_prompt')
+            return False
+        if len(req.prompt) > self.prompt_pad:
+            self._terminal(req, 'reject', reason='oversized_prompt',
+                           plen=len(req.prompt),
+                           prompt_pad=self.prompt_pad)
+            return False
+        if self.vocab_size is not None:
+            ids = np.asarray(req.prompt)
+            if int(ids.min()) < 0 or int(ids.max()) >= self.vocab_size:
+                self._terminal(req, 'reject', reason='garbage_prompt',
+                               vocab=self.vocab_size)
+                return False
+        if self.max_queue is not None and len(self.pending) >= self.max_queue:
+            self._terminal(req, 'reject', reason='queue_full',
+                           queued=len(self.pending))
+            return False
+        if req.ttl_steps is not None:
+            self._deadline_at[req.rid] = self.step_no + req.ttl_steps
         self.pending.append(req)
+        return True
+
+    def cancel(self, rid: int) -> bool:
+        """Mid-stream cancellation: drop the request wherever it is
+        (pending queue or an active lane). Returns False for an unknown /
+        already-terminal rid."""
+        for req in self.pending:
+            if req.rid == rid:
+                self.pending.remove(req)
+                self._terminal(req, 'cancel', where='pending')
+                return True
+        for slot, st in list(self.active.items()):
+            if st.req.rid == rid:
+                self._release_slot(slot, reason='cancel')
+                self._terminal(st.req, 'cancel', where='active', pos=st.pos)
+                return True
+        return False
 
     @property
     def done(self) -> bool:
@@ -270,7 +422,11 @@ class ContinuousScheduler:
             # pending dirty mark would only re-zero the freshly
             # prefilled state — drop it
             self.dirty_slots = [s for s in self.dirty_slots if s != slot]
-            admitted.append((self.pending.popleft(), slot))
+            req = self.pending.popleft()
+            self.events.emit('admit', step=self.step_no, rid=req.rid,
+                             slot=slot,
+                             retries=self._retries.get(req.rid, 0))
+            admitted.append((req, slot))
         return admitted
 
     def seed(self, req: Request, slot: int, first_token: int) -> None:
@@ -298,33 +454,83 @@ class ContinuousScheduler:
                     f'{self.kv.page_size} positions); size max_blocks to '
                     f'the longest admissible sequence')
             while slot in self.active and not self.kv.ensure(slot, st.pos):
-                self._preempt_youngest()
+                self._preempt_youngest(exclude=slot)
 
-    def _preempt_youngest(self) -> None:
-        victim = max(self.active, key=lambda s: self.active[s].admit_seq)
-        st = self.active.pop(victim)
-        self.kv.release(victim)
-        self.free_slots.append(victim)
-        self.dirty_slots.append(victim)
-        if self.tier is not None:
-            self.tier.reset(victim)
-        # recompute preemption: generated tokens are discarded, the request
-        # re-enters at the queue front and re-prefills when pages free up
-        self.pending.appendleft(st.req)
-        self.n_preempted += 1
+    def _preempt_youngest(self, exclude: Optional[int] = None) -> None:
+        """Preempt-and-requeue one active lane to free pages, youngest
+        (by admission order) first — but never the lane currently being
+        grown (``exclude``) while any other lane is live: a grower that
+        preempts itself discards its own progress without relieving the
+        pressure it was growing against. When the grower is the ONLY
+        active lane it does yield itself as the last resort; the retry
+        budget then turns a preempt/re-admit cycle that can never fit
+        into a terminal failure instead of a livelock."""
+        others = [s for s in self.active if s != exclude]
+        victim = (max(others, key=lambda s: self.active[s].admit_seq)
+                  if others else exclude)
+        self._requeue(victim, kind='preempt')
+
+    def force_preempt(self) -> bool:
+        """Chaos hook (preemption storm): preempt the youngest active
+        lane unconditionally. Returns False when nothing is active."""
+        if not self.active:
+            return False
+        self._preempt_youngest()
+        return True
+
+    def quarantine(self, slot: int) -> List[int]:
+        """Poisoned lane (non-finite logits): discard its generated
+        tokens, release-and-requeue the request (recompute-style, so the
+        retry is lossless; counts against the retry budget), and return
+        the physical pages the lane owned so the caller can scrub them
+        BEFORE the free list hands them to another request."""
+        pages = [int(p) for p in
+                 self.kv.tables[slot, :int(self.kv.counts[slot])]]
+        self._requeue(slot, kind='quarantine')
+        return pages
+
+    def _requeue(self, victim: int, *, kind: str) -> None:
+        """Release ``victim`` and requeue its request at the queue front
+        (recompute-style: generated tokens are discarded, the request
+        re-prefills when pages free up) — unless its retry budget is
+        spent, in which case it fails terminally."""
+        st = self._release_slot(victim, reason=kind)
+        if kind == 'preempt':
+            self.n_preempted += 1
+        else:
+            self.n_quarantined += 1
+        self.events.emit(kind, step=self.step_no, rid=st.req.rid,
+                         slot=victim, pos=st.pos)
+        r = self._retries.get(st.req.rid, 0) + 1
+        self._retries[st.req.rid] = r
+        if self.retry_budget is not None and r > self.retry_budget:
+            self._terminal(st.req, 'fail', reason='retry_budget',
+                           retries=r)
+        else:
+            self.pending.appendleft(st.req)
+            self.events.emit('retry', step=self.step_no, rid=st.req.rid,
+                             attempt=r)
+
+    def aged_out(self) -> dict:
+        """``slot -> physical pages`` that just crossed the hot-window
+        boundary (kv_quant tier only). Call once after admissions and
+        :meth:`grow_for_decode`, before the decode step — the step will
+        read these pages as cold, so they must be int8 by then. NOTE: the
+        tracker advances on this call, so the caller owns what happens to
+        the pages (the chaos layer's drop-quant fault exploits exactly
+        that: dropped pages stay zero in the int8 tier forever)."""
+        if self.tier is None:
+            return {}
+        out: dict = {}
+        for slot, st in self.active.items():
+            pages = self.tier.aged_out(slot, st.pos, self.kv.tables[slot])
+            if pages:
+                out[slot] = pages
+        return out
 
     def aged_out_pages(self) -> List[int]:
-        """Physical pages that just crossed the hot-window boundary across
-        all active slots (kv_quant tier only). Call after admissions and
-        :meth:`grow_for_decode`, before the decode step — the step will
-        read these pages as cold, so they must be int8 by then."""
-        if self.tier is None:
-            return []
-        pages: List[int] = []
-        for slot, st in self.active.items():
-            pages.extend(self.tier.aged_out(slot, st.pos,
-                                            self.kv.tables[slot]))
-        return pages
+        """Flat-list view of :meth:`aged_out` (the tracker advances)."""
+        return [p for ps_ in self.aged_out().values() for p in ps_]
 
     def step_vectors(self):
         """(token, pos) vectors for the jit'd decode step; idle slots get
@@ -351,13 +557,11 @@ class ContinuousScheduler:
             return
         hit_eos = self.eos_id is not None and tok == self.eos_id
         if hit_eos or len(st.tokens) >= st.req.target_gen:
-            self.active.pop(slot)
-            self.kv.release(slot)
-            self.free_slots.append(slot)
-            self.dirty_slots.append(slot)
-            if self.tier is not None:
-                self.tier.reset(slot)
+            self._release_slot(slot, reason='finished')
             self.completed.append(st)
+            self._forget(st.req.rid)
+            self.events.emit('finish', step=self.step_no, rid=st.req.rid,
+                             slot=slot, tokens=len(st.tokens))
 
 
 def _ragged_stream(n_requests: int, prompt_len: int, gen_len: int,
@@ -385,6 +589,11 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
                      eos_id: Optional[int] = None,
                      max_steps: Optional[int] = None,
                      kv_quant: bool = False, hot_window: int = 2,
+                     deadline: Optional[int] = None,
+                     retry_budget: Optional[int] = 8,
+                     max_queue: Optional[int] = None,
+                     faults: Optional[faults_mod.FaultInjector] = None,
+                     step_hook=None,
                      quiet: bool = False) -> dict:
     """Serve a stream of heterogeneous-length requests end-to-end (admit,
     decode, evict, re-admit) under one jit'd decode step.
@@ -393,7 +602,21 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
     (``runtime.kv_quant``): pages older than ``hot_window`` are quantized
     to int8 as they age out; decode reads mix the tiers per the hotness
     rule (``hot_window >= max_blocks`` keeps everything fp — bit-exact
-    with ``kv_quant=False``)."""
+    with ``kv_quant=False``).
+
+    Robustness (PR 7): ``deadline`` sets every synthetic request's TTL in
+    scheduler steps; ``retry_budget`` bounds preemption/quarantine
+    requeues per request (None: unlimited — the pre-PR-7 livelockable
+    behavior); ``max_queue`` caps the pending queue with explicit
+    rejection. ``faults`` plugs in a ``runtime.faults.FaultInjector``
+    whose faults the loop applies at the scheduler edges; every step the
+    jit'd ``logits_finite`` sentinel quarantines lanes with non-finite
+    logits (pages scrubbed, request requeued — the rest of the batch
+    keeps decoding), and a kernel-path exception under
+    ``attn_impl='flash'`` degrades the stream to the layout's densify
+    einsum oracle with a logged ``degrade`` event instead of crashing.
+    ``step_hook(sched, kv, cache)`` runs after every absorbed step (chaos
+    tests audit allocator invariants through it)."""
     cfg = configs.get(arch, smoke=smoke)
     # routing table (pinned by tests/test_serve_continuous.py): every token
     # family serves — MLA pages its latent pool through the same block
@@ -422,8 +645,13 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
                          f'needs {max_blocks} pages, pool has '
                          f'{num_pages - 1} allocatable')
     kv = kvc.PagedKVCache(num_pages, page_size, max_blocks, slots)
+    events = faults_mod.EventLog()
+    injector = faults
     sched = ContinuousScheduler(kv, prompt_pad=prompt_len, eos_id=eos_id,
-                                hot_window=hot_window if kv_quant else None)
+                                hot_window=hot_window if kv_quant else None,
+                                retry_budget=retry_budget,
+                                max_queue=max_queue,
+                                vocab_size=cfg.vocab_size, events=events)
 
     params = model_mod.init_params(jax.random.key(seed), cfg)
     if prequantize:
@@ -432,6 +660,15 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
                             seq_len=prompt_len)
     prompts = np.asarray(synthetic.make_batch(dc, 0)['inputs'])
     for req in _ragged_stream(n_requests, prompt_len, gen_len, prompts):
+        req.ttl_steps = deadline
+        if injector is not None:
+            mangled = injector.mangle(req, prompt_pad=prompt_len,
+                                      vocab=cfg.vocab_size)
+            if mangled is not req:
+                events.emit('fault', step=0, rid=req.rid,
+                            fault='mangle_prompt',
+                            plen=len(mangled.prompt))
+                req = mangled
         sched.submit(req)
 
     cache = model_mod.init_paged_cache_tree(
@@ -442,25 +679,79 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
     # and padded with the garbage page (quantizing page 0 is harmless)
     quantize_fn = jax.jit(kvq.quantize_tree_pages, donate_argnums=(0,))
     n_pages_quantized = 0
+    n_pages_quant_dropped = 0
 
-    def quantize_aged_out(cache):
-        nonlocal n_pages_quantized
-        pages = sched.aged_out_pages()
-        n_pages_quantized += len(pages)
+    def in_page_chunks(fn, cache, pages):
+        """Apply a (cache, (max_blocks,) page-vector) jit'd op over an
+        arbitrary-length page list at one compiled shape (garbage-padded)."""
         while pages:
             chunk, pages = pages[:max_blocks], pages[max_blocks:]
             idx = np.zeros((max_blocks,), np.int32)
             idx[:len(chunk)] = chunk
-            cache = quantize_fn(cache, jnp.asarray(idx))
+            cache = fn(cache, jnp.asarray(idx))
         return cache
+
+    def quantize_aged_out(cache):
+        nonlocal n_pages_quantized, n_pages_quant_dropped
+        by_slot = sched.aged_out()
+        pages = [p for ps_ in by_slot.values() for p in ps_]
+        if pages and injector is not None and injector.drop_quant_now():
+            # the tier tracker already advanced: these pages stay zero in
+            # the int8 tier forever, so the affected requests' outputs
+            # are legitimately altered — mark them touched (parity gates
+            # exclude them) instead of pretending the fault didn't land
+            rids = sorted(sched.active[s].req.rid for s in by_slot)
+            injector.touched.update(rids)
+            events.emit('fault', step=sched.step_no, fault='drop_quant',
+                        pages=len(pages), rids=rids)
+            n_pages_quant_dropped += len(pages)
+            return cache
+        n_pages_quantized += len(pages)
+        return in_page_chunks(quantize_fn, cache, pages)
+
+    # chaos-layer device ops, compiled lazily on first fault so the happy
+    # path pays nothing
+    _chaos_fns: dict = {}
+
+    def scrub_pages(cache, pages):
+        """Zero a quarantined lane's pages across every per-page leaf —
+        a NaN row surviving in the pool would poison the next tenant
+        (additive masks keep NaN: NaN + -inf = NaN)."""
+        if not pages or cfg.family == 'ssm':
+            return cache     # pure-SSM trees have no pool to scrub
+        if 'scrub' not in _chaos_fns:
+            _chaos_fns['scrub'] = jax.jit(layouts_mod.scrub_tree_pages,
+                                          donate_argnums=(0,))
+        return in_page_chunks(_chaos_fns['scrub'], cache, pages)
+
+    def poison_page_op(cache, page):
+        if 'poison' not in _chaos_fns:
+            _chaos_fns['poison'] = jax.jit(layouts_mod.poison_tree_pages,
+                                           donate_argnums=(0,))
+        return _chaos_fns['poison'](cache, jnp.asarray([page], jnp.int32))
 
     prefill_fn = jax.jit(SS.make_prefill_step(cfg, yoco, rt),
                          donate_argnums=(2,))
-    decode_fn = jax.jit(SS.make_decode_step(cfg, yoco, rt, greedy=greedy,
-                                            temperature=temperature,
-                                            top_k=top_k),
-                        donate_argnums=(3,))
+
+    def build_decode(impl):
+        return jax.jit(
+            SS.make_decode_step(cfg, yoco, ModelRuntime(attn_impl=impl),
+                                greedy=greedy, temperature=temperature,
+                                top_k=top_k),
+            donate_argnums=(3,))
+
+    attn_impl_live = attn_impl
+    decode_fn = build_decode(attn_impl_live)
+    _decode_fns = [decode_fn]    # degrade rebuilds append here
+    sentinel_fn = jax.jit(SS.logits_finite)
     sample_key = jax.random.key(seed + 1)
+
+    def call_decode(cache, toks_j, pos_j):
+        nonlocal sample_key
+        if greedy:
+            return decode_fn(params, toks_j, pos_j, cache)
+        sample_key, sub = jax.random.split(sample_key)
+        return decode_fn(params, toks_j, pos_j, cache, sub)
 
     def first_token(logits):
         nonlocal sample_key
@@ -477,7 +768,30 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
     limit = max_steps if max_steps is not None else \
         n_requests * (prompt_len + gen_len) * 4 + 64
     has_recurrent = cfg.family == 'ssm' or bool(cfg.hybrid_group)
+    has_pool = cfg.family != 'ssm'      # pure-SSM trees carry no fp pool
     while not sched.done and steps < limit:
+        sched.begin_step(steps)
+        if injector is not None:
+            injector.begin_step(steps)
+            # pool squeeze: the injector holds free pages hostage; the
+            # scheduler sees a smaller pool and must queue/preempt
+            want = injector.squeeze_pages()
+            delta = want - len(kv.reserved)
+            if delta > 0:
+                if kv.reserve_pages(delta):
+                    events.emit('fault', step=steps, fault='pool_squeeze',
+                                held=len(kv.reserved))
+            elif delta < 0:
+                kv.unreserve_pages(-delta)
+            # mid-stream cancellation of a live (pending or active) rid
+            want_cancel = injector.cancel_now()
+            if want_cancel:
+                live = sorted({st.req.rid for st in sched.active.values()}
+                              | {r.rid for r in sched.pending})
+                rid = want_cancel if not isinstance(want_cancel, bool) \
+                    else (injector.pick(live) if live else None)
+                if rid is not None:
+                    sched.cancel(rid)
         # --- admit on release -------------------------------------------
         for req, slot in sched.try_admit():
             pad = np.zeros((prompt_len,), np.int32)
@@ -502,6 +816,12 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
             sched.seed(req, slot, first_token(logits))
         if sched.done:
             break
+        if injector is not None:
+            # preemption storm: force-preempt lanes (freshly admitted too)
+            for _ in range(injector.storm_count()):
+                if sched.force_preempt():
+                    events.emit('fault', step=steps,
+                                fault='preempt_storm')
         # --- grow + decode one step over every lane ----------------------
         sched.grow_for_decode()
         if has_recurrent and sched.dirty_slots:
@@ -514,19 +834,69 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
             # pages that just left the hot window become int8 before the
             # step reads them as cold (covers fresh admissions too)
             cache = quantize_aged_out(cache)
+        if (injector is not None and has_pool and sched.active
+                and injector.poison_page_now()):
+            # NaN an owned fp pool page: the model of a corrupted
+            # in-memory read; the sentinel below must catch the lane
+            cand = [(s, int(p)) for s in sorted(sched.active)
+                    for p in kv.tables[s, :int(kv.counts[s])]]
+            if cand:
+                slot, page = injector.pick(cand)
+                cache = poison_page_op(cache, page)
+                events.emit('fault', step=steps, fault='poison_page',
+                            slot=slot, page=page,
+                            rid=sched.active[slot].req.rid)
+        poison_slot = None
+        if (injector is not None and sched.active
+                and injector.poison_logits_now()):
+            poison_slot = injector.pick(sorted(sched.active))
+            events.emit('fault', step=steps, fault='poison_logits',
+                        slot=poison_slot,
+                        rid=sched.active[poison_slot].req.rid)
         peak_pages = max(peak_pages, kv.used_pages)
         toks, pos = sched.step_vectors()
         cache = kvc.with_block_tables(cache, kv.table_array())
-        if greedy:
-            tok, _, cache = decode_fn(params, jnp.asarray(toks),
-                                      jnp.asarray(pos), cache)
-        else:
-            sample_key, sub = jax.random.split(sample_key)
-            tok, _, cache = decode_fn(params, jnp.asarray(toks),
-                                      jnp.asarray(pos), cache, sub)
         busy_slot_steps += len(sched.active)
-        steps += 1
+        try:
+            if (injector is not None and attn_impl_live == 'flash'
+                    and injector.kernel_fault_now()):
+                raise faults_mod.InjectedKernelError(
+                    'chaos: simulated kernel-path validation failure')
+            tok, logits, cache = call_decode(cache, jnp.asarray(toks),
+                                             jnp.asarray(pos))
+        except Exception as e:                  # noqa: BLE001 — any kernel-
+            # path failure degrades; re-raised when already on the oracle
+            if attn_impl_live != 'flash':
+                raise
+            # graceful degradation: trace/compile-time failures don't
+            # consume donated buffers, so the cache is intact — rebuild
+            # the step on the layout's densify einsum oracle and retry
+            events.emit('degrade', step=steps, frm='flash', to='einsum',
+                        error=f'{type(e).__name__}: {str(e)[:160]}')
+            attn_impl_live = 'einsum'
+            decode_fn = build_decode('einsum')
+            _decode_fns.append(decode_fn)
+            tok, logits, cache = call_decode(cache, jnp.asarray(toks),
+                                             jnp.asarray(pos))
+        # --- integrity sentinel: quarantine non-finite lanes -------------
+        ok = sentinel_fn(logits)
+        if poison_slot is not None:
+            lg = np.asarray(logits, np.float32)
+            lg[poison_slot] = np.nan
+            ok = sentinel_fn(jnp.asarray(lg))
+        ok = np.asarray(ok)
+        bad = [s for s in sorted(sched.active) if not ok[s]]
+        for slot in bad:
+            # quarantine BEFORE absorb: a poisoned lane must not finish
+            # on a garbage token (argmax over NaN logits is id 0). The
+            # requeue is lossless — recompute re-derives the state from
+            # the prompt — and the scrub keeps the poison from leaking
+            # to the page's next tenant.
+            cache = scrub_pages(cache, sched.quarantine(slot))
         sched.absorb(np.asarray(tok))
+        steps += 1
+        if step_hook is not None:
+            step_hook(sched, kv, cache)
     jax.block_until_ready(jax.tree.leaves(cache)[0])
     wall = time.time() - t0
     if not sched.done:
@@ -539,6 +909,9 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
     out = dict(
         requests=n_requests,
         completed=len(sched.completed),
+        failed=len(sched.failed),
+        rejected=len(sched.rejected),
+        cancelled=len(sched.cancelled),
         steps=steps,
         decode_tokens=busy_slot_steps,
         wall_s=round(wall, 4),
@@ -549,20 +922,30 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
         total_pages=num_pages - 1,
         page_size=page_size,
         preempted=sched.n_preempted,
+        quarantined=sched.n_quarantined,
         attn_impl=attn_impl,
+        attn_impl_effective=attn_impl_live,
         kv_quant=bool(kv_quant),
         hot_window=hot_window if kv_quant else None,
         pages_quantized=n_pages_quantized,
+        pages_quant_dropped=n_pages_quant_dropped,
+        events=events.counts(),
+        faults=(dict(injector.counts) if injector is not None else None),
         # admit/evict churn must never retrace: idle slots keep the step
         # shapes constant, so exactly one decode compilation serves the run
-        decode_compilations=(decode_fn._cache_size()
-                             if hasattr(decode_fn, '_cache_size') else None),
+        # (a degrade rebuild adds exactly one more, on the einsum oracle)
+        decode_compilations=(sum(f._cache_size() for f in _decode_fns)
+                            if hasattr(decode_fn, '_cache_size') else None),
         out_lens={r: len(t) for r, t in outputs.items()},
         sample={r: t[:4] for r, t in list(outputs.items())[:4]},
     )
     if not quiet:
         print(json.dumps(out))
     out['outputs'] = outputs
+    out['event_log'] = events.records()
+    # the auditing contract: every submitted request reached exactly one
+    # terminal state — raises on a leaked request, even outside tests
+    out['terminal'] = events.terminal_accounting()
     return out
 
 
@@ -602,8 +985,27 @@ def main(argv=None):
     ap.add_argument('--hot-window', type=int, default=2,
                     help='full-precision pages per request (>= 1; '
                          '>= max_blocks disables the int8 tier)')
+    ap.add_argument('--deadline', type=int, default=None,
+                    help='per-request TTL in scheduler steps (continuous '
+                         'mode); expired requests fail terminally')
+    ap.add_argument('--retry-budget', type=int, default=8,
+                    help='preemption/quarantine requeues per request '
+                         'before it fails terminally (continuous mode; '
+                         '-1: unlimited, the livelockable pre-PR-7 '
+                         'behavior)')
+    ap.add_argument('--max-queue', type=int, default=None,
+                    help='admission backpressure (continuous mode): '
+                         'reject submissions past this pending-queue '
+                         'depth')
+    ap.add_argument('--chaos', action='store_true',
+                    help='continuous mode: run under the default fault-'
+                         'injection profile (runtime.faults.chaos_profile)')
+    ap.add_argument('--chaos-seed', type=int, default=0)
     args = ap.parse_args(argv)
     if args.continuous:
+        injector = (faults_mod.FaultInjector(
+            seed=args.chaos_seed, profile=faults_mod.chaos_profile())
+            if args.chaos else None)
         serve_continuous(args.arch, smoke=args.smoke, slots=args.slots,
                          n_requests=args.requests,
                          prompt_len=args.prompt_len, gen_len=args.gen_len,
@@ -613,7 +1015,11 @@ def main(argv=None):
                          greedy=not args.sample,
                          temperature=args.temperature, top_k=args.top_k,
                          eos_id=args.eos_id, kv_quant=args.kv_quant,
-                         hot_window=args.hot_window)
+                         hot_window=args.hot_window,
+                         deadline=args.deadline,
+                         retry_budget=(None if args.retry_budget < 0
+                                       else args.retry_budget),
+                         max_queue=args.max_queue, faults=injector)
     else:
         serve(args.arch, smoke=args.smoke, batch=args.batch,
               prompt_len=args.prompt_len, gen_len=args.gen_len,

@@ -37,7 +37,7 @@ Split of responsibilities:
 
 from __future__ import annotations
 
-from typing import List
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -70,6 +70,9 @@ class PagedKVCache:
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
         self.tables = np.zeros((slots, max_blocks), np.int32)
         self.counts = np.zeros((slots,), np.int32)   # blocks held per slot
+        # pages held out of circulation by fault injection (pool squeeze):
+        # neither free nor owned, but still accounted by check_invariants
+        self.reserved: List[int] = []
 
     # -- capacity ------------------------------------------------------------
     @property
@@ -119,6 +122,83 @@ class PagedKVCache:
     def table_array(self) -> jnp.ndarray:
         """Snapshot of the block tables as a device array (B_slots, W)."""
         return jnp.asarray(self.tables)
+
+    # -- fault injection (pool squeeze) --------------------------------------
+    def reserve_pages(self, n: int) -> int:
+        """Hold up to ``n`` free pages out of circulation (the chaos
+        layer's pool-squeeze fault). Returns how many were actually taken;
+        owned pages are never touched."""
+        take = min(max(n, 0), len(self._free))
+        for _ in range(take):
+            self.reserved.append(self._free.pop())
+        return take
+
+    def unreserve_pages(self, n: Optional[int] = None) -> int:
+        """Return ``n`` reserved pages (default: all) to the free list."""
+        give = len(self.reserved) if n is None else \
+            min(max(n, 0), len(self.reserved))
+        for _ in range(give):
+            self._free.append(self.reserved.pop())
+        return give
+
+    # -- integrity audit -----------------------------------------------------
+    def check_invariants(self) -> None:
+        """Free-list / reserved / block-table consistency audit. Raises
+        ValueError on the first violation; chaos tests run this after
+        every scheduler step. Invariants:
+
+        * every free/reserved/owned page index is in [1, num_pages);
+        * no page appears twice anywhere (no double allocation, no
+          free-while-owned);
+        * the garbage page 0 is never free, reserved, or owned;
+        * free + reserved + owned partition the allocatable pool exactly;
+        * each table row's tail beyond ``counts[slot]`` is all garbage.
+        """
+        def bad(msg):
+            raise ValueError(f'PagedKVCache invariant violated: {msg}')
+
+        owned: dict = {}            # page -> (slot, block) that owns it
+        for slot in range(self.slots):
+            held = int(self.counts[slot])
+            if not 0 <= held <= self.max_blocks:
+                bad(f'slot {slot} counts={held} outside '
+                    f'[0, {self.max_blocks}]')
+            for i in range(held):
+                page = int(self.tables[slot, i])
+                if not 1 <= page < self.num_pages:
+                    bad(f'slot {slot} block {i} points at page {page} '
+                        f'(garbage page or out of range)')
+                if page in owned:
+                    bad(f'page {page} owned twice: slot/block '
+                        f'{owned[page]} and ({slot}, {i})')
+                owned[page] = (slot, i)
+            for i in range(held, self.max_blocks):
+                if int(self.tables[slot, i]) != GARBAGE_PAGE:
+                    bad(f'slot {slot} block {i} beyond counts={held} is '
+                        f'{int(self.tables[slot, i])}, not the garbage '
+                        f'page')
+        for name, pages in (('free', self._free),
+                            ('reserved', self.reserved)):
+            seen = set()
+            for page in pages:
+                if not 1 <= page < self.num_pages:
+                    bad(f'{name} list holds page {page} (garbage page or '
+                        f'out of range)')
+                if page in seen:
+                    bad(f'{name} list holds page {page} twice')
+                if page in owned:
+                    bad(f'page {page} is both {name} and owned by '
+                        f'slot/block {owned[page]}')
+                seen.add(page)
+        free_set = set(self._free)
+        if free_set & set(self.reserved):
+            bad(f'pages {sorted(free_set & set(self.reserved))} are both '
+                f'free and reserved')
+        accounted = len(self._free) + len(self.reserved) + len(owned)
+        if accounted != self.num_pages - 1:
+            bad(f'{len(self._free)} free + {len(self.reserved)} reserved '
+                f'+ {len(owned)} owned = {accounted}, pool has '
+                f'{self.num_pages - 1} allocatable pages')
 
 
 # ----------------------------------------------------------------------------

@@ -20,10 +20,11 @@ schema), and the returned layout owns everything the serving stack needs —
 * **quantize op** (tiered layouts): how aged-out pages move to the int8
   tier.
 
-Tree-level helpers (:func:`with_block_tables`, :func:`quantize_tree_pages`)
+Tree-level helpers (:func:`with_block_tables`, :func:`quantize_tree_pages`,
+and the chaos layer's :func:`scrub_tree_pages` / :func:`poison_tree_pages`)
 walk a (possibly layer-stacked) cache tree, classify each dict node, and
 apply the matched layout's op — ``runtime.kv_cache`` and
-``runtime.kv_quant`` re-export them under their historical names.
+``runtime.kv_quant`` re-export the first two under their historical names.
 
 Layout schemas (single layer; layer stacks prepend an (L,) dim to every
 leaf):
@@ -148,6 +149,12 @@ class CacheLayout:
     quant_leaves: Tuple[str, ...] = ()  # vmapped by quantize_tree_pages
     quant_probe: str = ''               # leaf whose ndim detects stacking
     quant_probe_ndim: int = 0           # single-layer ndim of quant_probe
+    # integrity ops (chaos layer): per-page leaves zeroed when a
+    # quarantined lane's pages are scrubbed before reallocation, and the
+    # fp pools NaN-poisoning targets. Scrubbing must cover the int8
+    # tiers/scales too — a poisoned page may already have quantized.
+    scrub_leaves: Tuple[str, ...] = ()  # zeroed by scrub_tree_pages
+    poison_leaves: Tuple[str, ...] = () # NaN'd by poison_tree_pages
 
     # -- write ops ----------------------------------------------------------
     @classmethod
@@ -209,6 +216,8 @@ class PagedMLAQ8Layout(CacheLayout):
     quant_leaves = ('cl', 'clq', 'cs')
     quant_probe = 'cs'
     quant_probe_ndim = 2
+    scrub_leaves = ('cl', 'clq', 'cs')
+    poison_leaves = ('cl',)
 
     @classmethod
     def write_token(cls, cache, updates, pos):
@@ -252,6 +261,8 @@ class PagedMLALayout(CacheLayout):
     paged = True
     mla = True
     table_leaves = ('bt',)
+    scrub_leaves = ('cl',)
+    poison_leaves = ('cl',)
 
     @classmethod
     def write_token(cls, cache, updates, pos):
@@ -294,6 +305,8 @@ class PagedQ8Layout(CacheLayout):
     quant_leaves = ('k', 'v', 'kq', 'vq', 'ks', 'vs')
     quant_probe = 'ks'
     quant_probe_ndim = 2
+    scrub_leaves = ('k', 'v', 'kq', 'vq', 'ks', 'vs')
+    poison_leaves = ('k', 'v')
 
     @classmethod
     def write_token(cls, cache, updates, pos):
@@ -342,6 +355,8 @@ class PagedLayout(CacheLayout):
     required = frozenset({'k', 'v', 'bt'})
     paged = True
     table_leaves = ('bt',)
+    scrub_leaves = ('k', 'v')
+    poison_leaves = ('k', 'v')
 
     @classmethod
     def write_token(cls, cache, updates, pos):
@@ -555,6 +570,64 @@ def quantize_tree_pages(cache_tree, pages: jnp.ndarray):
             lay = match_layout(node)
             if lay is not None and lay.quantized:
                 return quant_stack(lay, node)
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    return walk(cache_tree)
+
+
+def _page_indexed_update(node, lay, leaves, pages, value):
+    """Write ``value`` into the page rows of the named per-page leaves of
+    one paged dict node, handling layer-stacked leaves (leading (L,) dim,
+    detected off the table leaf: (B, W) single vs (L, B, W) stacked)."""
+    stacked = node[lay.table_leaves[0]].ndim == 3
+    out = dict(node)
+    for key in leaves:
+        leaf = node[key]
+        if stacked:
+            out[key] = leaf.at[:, pages].set(value)
+        else:
+            out[key] = leaf.at[pages].set(value)
+    return out
+
+
+def scrub_tree_pages(cache_tree, pages: jnp.ndarray):
+    """Zero the given physical pages in EVERY per-page leaf (fp pools,
+    int8 tiers, scales) of every paged node — the quarantine path: a lane
+    whose logits went non-finite is released and its pages must be
+    scrubbed before the free list can hand them to another request, or
+    the poison leaks to the next tenant (NaN in a masked cache row still
+    propagates through the additive mask: NaN + -inf = NaN). Page indices
+    are physical, so one vector covers every layer; padding with the
+    garbage page 0 is harmless. Non-paged subtrees pass through."""
+    pages = jnp.asarray(pages, jnp.int32).reshape(-1)
+
+    def walk(node):
+        if isinstance(node, dict):
+            lay = match_layout(node)
+            if lay is not None and lay.scrub_leaves:
+                return _page_indexed_update(node, lay, lay.scrub_leaves,
+                                            pages, 0)
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    return walk(cache_tree)
+
+
+def poison_tree_pages(cache_tree, pages: jnp.ndarray, value=float('nan')):
+    """Write ``value`` (default NaN) into the given physical pages of
+    every paged node's fp pools — the chaos layer's model of a corrupted
+    in-memory tier read. Only the fp ``poison_leaves`` are touched (an
+    int8 tier cannot represent NaN; the analog-error story for the cold
+    tier lives in the IMA error model instead)."""
+    pages = jnp.asarray(pages, jnp.int32).reshape(-1)
+
+    def walk(node):
+        if isinstance(node, dict):
+            lay = match_layout(node)
+            if lay is not None and lay.poison_leaves:
+                return _page_indexed_update(node, lay, lay.poison_leaves,
+                                            pages, value)
             return {k: walk(v) for k, v in node.items()}
         return node
 

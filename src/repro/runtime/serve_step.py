@@ -46,6 +46,15 @@ def sample_tokens(logits: jnp.ndarray, key: jax.Array, *,
                                   axis=-1).astype(jnp.int32)
 
 
+def logits_finite(logits: jnp.ndarray) -> jnp.ndarray:
+    """(B, V) logits -> (B,) bool: True iff every logit of the row is
+    finite. The per-step integrity sentinel: one device-side reduction,
+    one (B,) bool transfer — the serve loop quarantines lanes whose row
+    comes back False (a NaN/Inf anywhere in the row means the lane's
+    cache or activations are poisoned; its argmax is garbage)."""
+    return jnp.all(jnp.isfinite(logits.astype(jnp.float32)), axis=-1)
+
+
 def make_decode_step(cfg, yoco: YocoConfig = DEFAULT_YOCO,
                      rt: ModelRuntime = DEFAULT_RT, *, greedy: bool = True,
                      temperature: float = 1.0, top_k: int = 0):

@@ -6,7 +6,7 @@ three-way (plus paged) comparison."""
 
 import json
 
-from benchmarks import bench_decode, bench_kv_quant
+from benchmarks import bench_chaos, bench_decode, bench_kv_quant
 
 
 def test_bench_decode_smoke_writes_parity_checked_json(tmp_path):
@@ -58,3 +58,28 @@ def test_bench_kv_quant_smoke_asserts_quantized_path(tmp_path):
     for t in on_disk['traffic']:
         assert t['tiered_bytes_per_token'] <= t['baseline_bytes_per_token']
         assert 'tiered_pj_per_token' in t and 'tiered_tops_w' in t
+
+
+def test_bench_chaos_smoke_asserts_accounting(tmp_path):
+    """The robustness benchmark in the fast tier: clean run completes the
+    stream in one compilation; the seeded chaos run reaches a terminal
+    state for every rid and still completes the floor fraction (run()
+    already gates; re-check the artifact so a silent edit fails here)."""
+    out = tmp_path / 'BENCH_chaos.json'
+    result = bench_chaos.run(smoke=True, out_path=str(out))
+    assert out.exists()
+    on_disk = json.loads(out.read_text())
+    assert on_disk['smoke'] is True
+    rows = {r['label']: r for r in on_disk['rows']}
+    assert {'clean', 'chaos_default_profile', 'chaos_kv_quant'} <= set(rows)
+    clean = rows['clean']
+    assert clean['completed'] == clean['requests']
+    assert clean['decode_compilations'] == 1
+    for label in ('chaos_default_profile', 'chaos_kv_quant'):
+        r = rows[label]
+        n_term = (r['completed'] + r['failed'] + r['rejected']
+                  + r['cancelled'])
+        assert n_term == r['requests']
+        assert r['completed'] >= bench_chaos.COMPLETION_FLOOR * r['requests']
+    assert on_disk['step_overhead'] >= 1.0
+    assert result['rows'][0]['label'] == 'clean'

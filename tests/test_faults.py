@@ -1,0 +1,378 @@
+"""Unit tests for the chaos layer's host-side pieces: the structured
+event log (terminal accounting), the deterministic fault injector, the
+page-allocator integrity audit + pool-squeeze reservation, the scrub /
+poison tree walkers, the logits sentinel — and the scheduler-hardening
+mechanics (self-preemption guard, retry budget, deadline, backpressure,
+cancellation) driven host-only, no model in the loop."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import serve as SV
+from repro.runtime import faults
+from repro.runtime import kv_cache as kvc
+from repro.runtime import layouts
+from repro.runtime import serve_step as SS
+
+
+# ----------------------------------------------------------------------------
+# EventLog
+# ----------------------------------------------------------------------------
+def test_event_log_counts_and_records():
+    log = faults.EventLog()
+    log.emit('submit', step=0, rid=1, plen=4)
+    log.emit('admit', step=0, rid=1, slot=2)
+    log.emit('finish', step=3, rid=1, slot=2, tokens=4)
+    assert log.counts() == {'submit': 1, 'admit': 1, 'finish': 1}
+    assert log.records()[1] == dict(step=0, kind='admit', rid=1, slot=2)
+    assert [e.kind for e in log.by_kind('finish')] == ['finish']
+    with pytest.raises(ValueError, match='unknown event kind'):
+        log.emit('explode', step=0)
+
+
+def test_terminal_accounting_demands_exactly_one_terminal():
+    log = faults.EventLog()
+    log.emit('submit', step=0, rid=1)
+    log.emit('submit', step=0, rid=2)
+    log.emit('finish', step=5, rid=1)
+    with pytest.raises(ValueError, match=r'\[2\] have no terminal'):
+        log.terminal_accounting()
+    log.emit('fail', step=6, rid=2, reason='deadline')
+    assert log.terminal_accounting() == {1: 'finish', 2: 'fail'}
+    log.emit('cancel', step=7, rid=2)
+    with pytest.raises(ValueError, match='two terminal events'):
+        log.terminal_accounting()
+
+
+# ----------------------------------------------------------------------------
+# FaultInjector
+# ----------------------------------------------------------------------------
+def _armed_pattern(inj, n=100):
+    pats = []
+    for s in range(n):
+        inj.begin_step(s)
+        pats.append(dict(inj._armed))
+    return pats
+
+
+def test_injector_same_seed_same_fault_pattern():
+    prof = faults.chaos_profile()
+    a = _armed_pattern(faults.FaultInjector(7, prof))
+    b = _armed_pattern(faults.FaultInjector(7, prof))
+    assert a == b
+    c = _armed_pattern(faults.FaultInjector(8, prof))
+    assert a != c
+    # something actually fires at these rates over 100 steps
+    assert any(any(p.values()) for p in a)
+
+
+def test_injector_schedule_fires_at_its_step():
+    inj = faults.FaultInjector(0, schedule=[(3, 'poison_logits', None),
+                                            (5, 'preempt_storm', 2),
+                                            (5, 'kernel_fault', None)])
+    for step in range(7):
+        inj.begin_step(step)
+        assert inj.poison_logits_now() == (step == 3)
+        assert inj.storm_count() == (2 if step == 5 else 0)
+        assert inj.kernel_fault_now() == (step == 5)
+    assert inj.counts['poison_logits'] == 1
+    assert inj.counts['preempt_storm'] == 1
+    with pytest.raises(ValueError, match='unknown fault kind'):
+        faults.FaultInjector(0, schedule=[(0, 'meteor_strike', None)])
+
+
+def test_injector_squeeze_persists_for_squeeze_steps():
+    prof = faults.FaultProfile(squeeze_pages=3, squeeze_steps=2)
+    inj = faults.FaultInjector(0, prof, schedule=[(1, 'pool_squeeze', None)])
+    held = []
+    for step in range(5):
+        inj.begin_step(step)
+        held.append(inj.squeeze_pages())
+    assert held == [0, 3, 3, 0, 0]
+
+
+def test_injector_mangle_modes():
+    inj = faults.FaultInjector(0, schedule=[(0, 'mangle_prompt',
+                                             (1, 'oversize')),
+                                            (0, 'mangle_prompt',
+                                             (2, 'garbage'))])
+    mk = lambda rid: SV.Request(rid=rid, prompt=np.arange(4, dtype=np.int32),
+                                target_gen=4)
+    untouched = inj.mangle(mk(0), prompt_pad=8, vocab=100)
+    assert untouched.rid == 0 and len(untouched.prompt) == 4
+    oversized = inj.mangle(mk(1), prompt_pad=8, vocab=100)
+    assert len(oversized.prompt) > 8
+    garbage = inj.mangle(mk(2), prompt_pad=8, vocab=100)
+    assert int(np.max(garbage.prompt)) >= 100
+    assert inj.counts['mangle_prompt'] == 2
+
+
+# ----------------------------------------------------------------------------
+# PagedKVCache: invariants + reservation
+# ----------------------------------------------------------------------------
+def test_check_invariants_passes_on_normal_lifecycles():
+    kv = kvc.PagedKVCache(9, 4, 6, 3)
+    kv.check_invariants()
+    assert kv.alloc_blocks(0, 3)
+    assert kv.ensure(1, 7)
+    kv.check_invariants()
+    kv.release(0)
+    kv.check_invariants()
+
+
+@pytest.mark.parametrize('corrupt, match', [
+    (lambda kv: kv.tables.__setitem__((0, 1), int(kv.tables[0, 0])),
+     'owned twice'),
+    (lambda kv: kv.tables.__setitem__((0, 0), 0), 'garbage page'),
+    (lambda kv: kv.tables.__setitem__((0, 3), 5), 'beyond counts'),
+    (lambda kv: kv._free.append(int(kv.tables[0, 0])), 'both free and'),
+    (lambda kv: kv._free.pop(), 'allocatable pages'),
+    (lambda kv: kv.counts.__setitem__(0, 9), 'outside'),
+])
+def test_check_invariants_catches_corruption(corrupt, match):
+    kv = kvc.PagedKVCache(9, 4, 6, 3)
+    assert kv.alloc_blocks(0, 2)
+    corrupt(kv)
+    with pytest.raises(ValueError, match=match):
+        kv.check_invariants()
+
+
+def test_reserve_pages_squeezes_the_pool():
+    kv = kvc.PagedKVCache(6, 4, 4, 2)      # 5 allocatable
+    assert kv.alloc_blocks(0, 2)
+    assert kv.reserve_pages(10) == 3       # capped at what's free
+    kv.check_invariants()
+    assert not kv.alloc_blocks(1, 1)       # squeezed dry
+    assert kv.unreserve_pages(1) == 1
+    assert kv.alloc_blocks(1, 1)
+    kv.check_invariants()
+    assert kv.unreserve_pages() == 2
+    kv.check_invariants()
+    assert kv.free_pages == 2
+
+
+# ----------------------------------------------------------------------------
+# scrub / poison tree walkers
+# ----------------------------------------------------------------------------
+def _paged_tree(stacked):
+    L, P, ps = 2, 5, 2
+    shape = (L, P, ps, 1, 3) if stacked else (P, ps, 1, 3)
+    bt = ((L, 3, 4) if stacked else (3, 4))
+    return dict(k=jnp.ones(shape), v=jnp.ones(shape),
+                bt=jnp.zeros(bt, jnp.int32))
+
+
+@pytest.mark.parametrize('stacked', [False, True])
+def test_poison_then_scrub_roundtrip(stacked):
+    cache = _paged_tree(stacked)
+    sel = (slice(None), 2) if stacked else (2,)
+    out = layouts.poison_tree_pages(cache, [2])
+    assert np.isnan(np.asarray(out['k'][sel])).all()
+    assert np.isnan(np.asarray(out['v'][sel])).all()
+    assert np.isfinite(np.asarray(out['k'])[..., 1, :, :, :]
+                       if stacked else np.asarray(out['k'])[1]).all()
+    out = layouts.scrub_tree_pages(out, [2])
+    assert (np.asarray(out['k'][sel]) == 0).all()
+    assert np.isfinite(np.asarray(out['k'])).all()
+
+
+def test_scrub_covers_the_int8_tier_poison_spares_it():
+    P, ps = 5, 2
+    cache = dict(cl=jnp.ones((P, ps, 7)), clq=jnp.ones((P, ps, 7), jnp.int8),
+                 cs=jnp.ones((P, 1)), bt=jnp.zeros((3, 4), jnp.int32),
+                 hw=jnp.ones((1,), jnp.int32))
+    out = layouts.poison_tree_pages(cache, [1])
+    # an int8 tier can't hold NaN: poison only touches the fp pool
+    assert np.isnan(np.asarray(out['cl'][1])).all()
+    assert (np.asarray(out['clq']) == 1).all()
+    assert np.isfinite(np.asarray(out['cs'])).all()
+    # ...but scrub must wipe pool + tier + scales: the page may have
+    # quantized before it was poisoned
+    out = layouts.scrub_tree_pages(out, [1])
+    assert (np.asarray(out['cl'][1]) == 0).all()
+    assert (np.asarray(out['clq'][1]) == 0).all()
+    assert (np.asarray(out['cs'][1]) == 0).all()
+    assert (np.asarray(out['clq'][2]) == 1).all()
+
+
+def test_walkers_pass_recurrent_state_through():
+    tree = dict(ssm=dict(conv=jnp.ones((2, 3, 1, 4)),
+                         ssm=jnp.ones((2, 3, 1, 2, 2))),
+                attn=_paged_tree(stacked=True))
+    out = layouts.poison_tree_pages(tree, [2])
+    assert np.isfinite(np.asarray(out['ssm']['conv'])).all()
+    assert np.isnan(np.asarray(out['attn']['k'][:, 2])).all()
+    out = layouts.scrub_tree_pages(out, [2])
+    assert (np.asarray(out['ssm']['conv']) == 1).all()
+    assert np.isfinite(np.asarray(out['attn']['k'])).all()
+
+
+def test_logits_finite_sentinel():
+    rows = jnp.array([[1., 2.], [np.nan, 1.], [np.inf, 0.], [0., -1.]])
+    assert list(np.asarray(SS.logits_finite(rows))) == [True, False,
+                                                        False, True]
+
+
+# ----------------------------------------------------------------------------
+# scheduler hardening, host-only (no model in the loop)
+# ----------------------------------------------------------------------------
+def _sched(num_pages, *, slots=3, page_size=4, max_blocks=4, prompt_pad=4,
+           **kw):
+    kv = kvc.PagedKVCache(num_pages, page_size, max_blocks, slots)
+    return kv, SV.ContinuousScheduler(kv, prompt_pad=prompt_pad, **kw)
+
+
+def _req(rid, plen=4, gen=64, **kw):
+    return SV.Request(rid=rid, prompt=np.arange(plen, dtype=np.int32) % 7,
+                      target_gen=gen, **kw)
+
+
+def _admit_all(sched):
+    admitted = sched.try_admit()
+    for req, slot in admitted:
+        sched.seed(req, slot, 1)
+    return [slot for _, slot in admitted]
+
+
+def test_preempt_victim_order_never_the_grower():
+    """Victim selection is pinned: the youngest lane OTHER than the one
+    being grown goes first; the grower yields itself only when alone."""
+    kv, sched = _sched(num_pages=4)           # 3 allocatable: one each
+    for rid in range(3):
+        sched.submit(_req(rid))
+    slots = _admit_all(sched)
+    assert len(slots) == 3 and kv.free_pages == 0
+    # every lane sits at pos=4 and needs a second page; oldest grows first
+    sched.grow_for_decode()
+    preempts = [e.rid for e in sched.events.by_kind('preempt')]
+    # rid 0 (oldest) grows: victim is rid 2 (youngest other), NOT rid 0;
+    # then rid 1 grows into the page rid 2's release freed... which rid 0
+    # took — so rid 1 preempts the only other lane left, rid 0
+    assert preempts == [2, 0]
+    assert {st.req.rid for st in sched.active.values()} == {1}
+    assert [r.rid for r in sched.pending] == [0, 2]
+
+
+def test_self_preemption_last_resort_consumes_retry_budget():
+    """A single lane that can never fit self-preempts as the last resort,
+    and the retry budget turns the cycle into a terminal failure instead
+    of a livelock (the pre-PR-7 behavior: spin forever)."""
+    # pool holds a full prompt (2 pages) but the lane needs a 3rd page
+    kv, sched = _sched(num_pages=3, slots=1, prompt_pad=8, max_blocks=4,
+                       retry_budget=2)
+    sched.submit(_req(0, plen=8))
+    steps = 0
+    while not sched.done and steps < 50:
+        sched.begin_step(steps)
+        _admit_all(sched)
+        sched.grow_for_decode()
+        toks = np.zeros((kv.slots,), np.int32)
+        sched.absorb(toks)
+        steps += 1
+    assert sched.done and steps < 50
+    assert [r.rid for r in sched.failed] == [0]
+    fail = sched.events.by_kind('fail')[0]
+    assert fail.detail['reason'] == 'retry_budget'
+    assert fail.detail['retries'] == 3
+    # every preempt event names the lane as its own victim (last resort)
+    assert all(e.slot == 0 for e in sched.events.by_kind('preempt'))
+    kv.check_invariants()
+    assert sched.events.terminal_accounting() == {0: 'fail'}
+
+
+def test_unbudgeted_retry_livelocks_regression():
+    """Same squeeze with retry_budget=None: the scheduler spins (this is
+    the livelock the budget exists to close — kept as a regression pin
+    so the failure mode stays documented)."""
+    kv, sched = _sched(num_pages=3, slots=1, prompt_pad=8, max_blocks=4,
+                       retry_budget=None)
+    sched.submit(_req(0, plen=8))
+    for step in range(40):
+        sched.begin_step(step)
+        _admit_all(sched)
+        sched.grow_for_decode()
+        sched.absorb(np.zeros((kv.slots,), np.int32))
+    assert not sched.done                      # still spinning
+    assert sched.n_preempted > 10
+    kv.check_invariants()
+
+
+def test_deadline_expires_pending_and_active():
+    kv, sched = _sched(num_pages=13, slots=2, prompt_pad=4, max_blocks=3)
+    # 2 slots: rid 2 waits in the queue; tight TTLs expire it unadmitted
+    for rid in range(3):
+        sched.submit(_req(rid, ttl_steps=3))
+    _admit_all(sched)
+    for step in range(1, 6):
+        sched.begin_step(step)
+        _admit_all(sched)
+        sched.grow_for_decode()
+        sched.absorb(np.zeros((kv.slots,), np.int32))
+    term = sched.events.terminal_accounting()
+    assert term == {0: 'fail', 1: 'fail', 2: 'fail'}
+    reasons = {e.rid: e.detail['reason'] for e in sched.events.by_kind('fail')}
+    assert set(reasons.values()) == {'deadline'}
+    assert sched.done
+    kv.check_invariants()
+
+
+def test_max_queue_backpressure_rejects_explicitly():
+    kv, sched = _sched(num_pages=13, slots=2, max_queue=2)
+    results = [sched.submit(_req(rid)) for rid in range(5)]
+    # the cap bites at submission time, before any admission drains the
+    # queue: two queue, the rest are rejected explicitly
+    assert results == [True, True, False, False, False]
+    assert [r.rid for r in sched.rejected] == [2, 3, 4]
+    assert all(e.detail['reason'] == 'queue_full'
+               for e in sched.events.by_kind('reject'))
+    # admission drains the queue and reopens it
+    _admit_all(sched)
+    assert sched.submit(_req(5))
+
+
+def test_submit_rejects_malformed_prompts():
+    kv, sched = _sched(num_pages=13, vocab_size=50)
+    assert not sched.submit(_req(0, plen=9))           # > prompt_pad=4
+    assert not sched.submit(SV.Request(rid=1, prompt=np.zeros((0,), np.int32),
+                                       target_gen=4))
+    bad = _req(2)
+    bad.prompt = bad.prompt.copy()
+    bad.prompt[1] = 99                                 # >= vocab_size
+    assert not sched.submit(bad)
+    assert sched.submit(_req(3))
+    reasons = [e.detail['reason'] for e in sched.events.by_kind('reject')]
+    assert reasons == ['oversized_prompt', 'empty_prompt', 'garbage_prompt']
+    assert [r.rid for r in sched.pending] == [3]
+
+
+def test_cancel_pending_and_active():
+    kv, sched = _sched(num_pages=13, slots=2)
+    for rid in range(3):
+        sched.submit(_req(rid))
+    _admit_all(sched)                                  # 0, 1 active; 2 queued
+    assert sched.cancel(2)                             # pending
+    assert sched.cancel(0)                             # active
+    assert not sched.cancel(7)                         # unknown rid
+    assert [r.rid for r in sched.cancelled] == [2, 0]
+    assert {st.req.rid for st in sched.active.values()} == {1}
+    kv.check_invariants()
+    wheres = {e.rid: e.detail['where']
+              for e in sched.events.by_kind('cancel')}
+    assert wheres == {2: 'pending', 0: 'active'}
+
+
+def test_quarantine_returns_owned_pages_and_requeues():
+    kv, sched = _sched(num_pages=13, slots=2)
+    sched.submit(_req(0))
+    slot = _admit_all(sched)[0]
+    owned = [int(p) for p in kv.tables[slot, :int(kv.counts[slot])]]
+    pages = sched.quarantine(slot)
+    assert pages == owned and len(pages) == 1
+    assert [r.rid for r in sched.pending] == [0]       # requeued at front
+    assert sched.n_quarantined == 1
+    kv.check_invariants()
+    kinds = [e.kind for e in sched.events]
+    assert kinds == ['submit', 'admit', 'evict', 'quarantine', 'retry']

@@ -50,6 +50,49 @@ def test_alloc_respects_table_width():
     assert not kv.alloc_blocks(0, 1)          # table row full
 
 
+@pytest.mark.parametrize('seed,num_pages,slots,max_blocks',
+                         [(0, 9, 2, 4), (1, 17, 4, 4), (2, 6, 3, 8),
+                          (3, 33, 5, 6), (4, 5, 2, 3)])
+def test_allocator_random_walk_invariants(seed, num_pages, slots,
+                                          max_blocks):
+    """Property-style walk: a random sequence of alloc/ensure/release/
+    reserve/unreserve ops must keep ``check_invariants()`` green after
+    EVERY op (free+reserved+owned always partitions the pool, tables never
+    alias, tails stay garbage) and agree with a shadow page count."""
+    rng = np.random.RandomState(seed)
+    kv = kvc.PagedKVCache(num_pages=num_pages, page_size=4,
+                          max_blocks=max_blocks, slots=slots)
+    owned = {s: 0 for s in range(slots)}
+    for _ in range(300):
+        op = rng.randint(5)
+        s = rng.randint(slots)
+        if op == 0:
+            n = rng.randint(1, max_blocks + 1)
+            if kv.alloc_blocks(s, n):
+                owned[s] += n
+        elif op == 1:
+            pos = rng.randint(max_blocks * kv.page_size)
+            if kv.ensure(s, pos):
+                owned[s] = max(owned[s], pos // kv.page_size + 1)
+        elif op == 2:
+            kv.release(s)
+            owned[s] = 0
+        elif op == 3:
+            kv.reserve_pages(rng.randint(1, num_pages))
+        else:
+            kv.unreserve_pages(None if rng.rand() < 0.5
+                               else rng.randint(1, num_pages))
+        kv.check_invariants()
+        assert kv.counts[s] == owned[s]
+        assert (kv.free_pages + len(kv.reserved)
+                + sum(owned.values())) == num_pages - 1
+    kv.unreserve_pages()
+    for s in range(slots):
+        kv.release(s)
+    kv.check_invariants()
+    assert kv.free_pages == num_pages - 1
+
+
 def test_ensure_grows_by_position():
     kv = kvc.PagedKVCache(num_pages=16, page_size=4, max_blocks=8, slots=1)
     assert kv.ensure(0, 0) and kv.counts[0] == 1
