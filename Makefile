@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src:.$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test test-fast test-slow test-mla test-layouts test-ssm-serve test-chaos bench bench-smoke serve-demo check
+.PHONY: test test-fast test-slow test-mla test-layouts test-ssm-serve test-chaos test-telemetry bench bench-smoke serve-demo check
 
 # tier-1: the full suite (what CI / the driver runs)
 test:
@@ -40,6 +40,13 @@ test-chaos:
 	$(PY) -m pytest -q tests/test_faults.py
 	$(PY) -m pytest -q -m "chaos" tests/test_chaos_serve.py
 
+# the observability surface: metric/histogram math vs numpy, lifecycle
+# spans from the timestamped EventLog, the EnergyMeter priced exactly like
+# direct hwmodel calls, metrics-vs-audit-log cross-checks on real serves,
+# and the Chrome-trace schema
+test-telemetry:
+	$(PY) -m pytest -q -m "telemetry" tests/test_telemetry.py
+
 bench:
 	$(PY) -m benchmarks.run
 
@@ -58,7 +65,7 @@ bench-smoke:
 # smoke benchmarks (test-fast already runs the non-slow cells of the
 # grids; the dedicated targets add the rest so each surface is complete
 # pre-push)
-check: test-fast test-layouts test-ssm-serve test-chaos bench-smoke
+check: test-fast test-layouts test-ssm-serve test-chaos test-telemetry bench-smoke
 
 serve-demo:
 	$(PY) examples/serve_decode.py

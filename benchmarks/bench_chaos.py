@@ -12,10 +12,18 @@ quantize chunks, cancellations) — and prices what the hardening costs:
   * **recovery overhead**: extra steps the chaos run spends re-prefilling
     quarantined/preempted lanes, reported as ``step_overhead`` (chaos
     steps / clean steps for the same stream).
+  * **metrics tax** (PR 8): every row re-runs once with ``--no-metrics``
+    semantics and reports ``metrics_overhead`` — instrumented vs bare
+    per-step wall time on the einsum path (flash jit noise would swamp
+    it). Gated ``< 0.05`` on the smoke tier: telemetry must stay free.
   * **accounting gates** (asserted, so a regression can't overwrite the
     artifact): the clean run completes every request in exactly one
     decode compilation; the chaos run reaches a terminal state for every
     submitted rid and still completes a floor fraction of the stream.
+
+Every row embeds its run's ``telemetry_summary`` (TTFT/ITL percentiles,
+achieved bytes/token, effective TOPS/W vs the paper's 123.8 IMA target)
+— the benchmark artifact doubles as the observability regression pin.
 
 Writes ``BENCH_chaos.json`` at the repo root; ``--smoke`` (fast tier /
 ``make bench-smoke``) shrinks the stream and writes
@@ -27,6 +35,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import tempfile
 import time
 from typing import Optional
 
@@ -74,11 +83,72 @@ def _serve_row(label: str, injector, *, smoke: bool, retry_budget=16,
         events=out['events'],
         faults=out['faults'],
         wall_s=round(wall_s, 3),
+        telemetry=out.get('telemetry_summary'),
     )
     emit(f'chaos.{label}', wall_s * 1e6,
          f'steps={out["steps"]},completed={out["completed"]}/'
          f'{out["requests"]},tok_s={out["tokens_per_s"]}')
     return row
+
+
+def _median_step_s(*, metrics: bool, **kw) -> float:
+    """Median hook-to-hook step wall time of one clean einsum run — the
+    median sheds the compile-carrying first step and the prefill-heavy
+    admission steps, leaving the steady-state decode cadence the metrics
+    tax actually lands on."""
+    ts = []
+    serve.serve_continuous(ARCH, attn_impl='einsum', quiet=True,
+                           metrics=metrics,
+                           step_hook=lambda sched, kv, cache:
+                           ts.append(time.perf_counter()), **kw)
+    deltas = sorted(b - a for a, b in zip(ts, ts[1:]))
+    assert deltas, 'overhead probe needs >= 2 steps'
+    return deltas[len(deltas) // 2]
+
+
+def _measure_metrics_overhead(smoke: bool, budget: float = 0.05) -> dict:
+    """Instrumented vs ``--no-metrics`` per-step time (clean stream, einsum
+    path — flash jit noise would swamp a 5% budget). Alternating paired
+    runs, up to 4 rounds; each arm's noise floor is the MIN of its
+    per-run medians (the timeit discipline: load spikes only ever inflate
+    a sample, so the min is the honest estimate). Transient contention
+    fails a round; a real regression survives all four."""
+    kw = dict(_stream_kw(smoke))
+    kw['gen_len'] = max(kw['gen_len'], 32)   # decode-dominated stream
+    bare_s, inst_s = [], []
+    frac = float('inf')
+    for attempt in range(4):
+        bare_s.append(_median_step_s(metrics=False, **kw))
+        inst_s.append(_median_step_s(metrics=True, **kw))
+        frac = min(inst_s) / max(min(bare_s), 1e-9) - 1.0
+        if frac < budget:
+            break
+    return dict(bare_step_s=round(min(bare_s), 6),
+                instrumented_step_s=round(min(inst_s), 6),
+                overhead_frac=round(frac, 4),
+                budget=budget, attempts=attempt + 1)
+
+
+def _trace_smoke(smoke: bool) -> dict:
+    """One traced clean run: the artifact must be loadable Chrome-trace
+    JSON with only complete spans / instants / metadata events."""
+    fd, path = tempfile.mkstemp(suffix='.trace.json')
+    os.close(fd)
+    try:
+        serve.serve_continuous(ARCH, attn_impl='einsum', quiet=True,
+                               metrics=False, trace=path,
+                               **_stream_kw(smoke))
+        with open(path) as f:
+            tr = json.load(f)
+    finally:
+        os.unlink(path)
+    evs = tr['traceEvents']
+    phases = {e['ph'] for e in evs}
+    assert evs and phases <= {'X', 'i', 'M'}, phases
+    return dict(trace_events=len(evs),
+                spans=sum(e['ph'] == 'X' for e in evs),
+                span_names=sorted({e['name'] for e in evs
+                                   if e['ph'] == 'X'}))
 
 
 def run(smoke: bool = False, out_path: Optional[str] = None) -> dict:
@@ -94,6 +164,8 @@ def run(smoke: bool = False, out_path: Optional[str] = None) -> dict:
     chaos_q = _serve_row('chaos_kv_quant', inj_q, smoke=smoke,
                          kv_quant=True, hot_window=2)
     rows = [clean, chaos, chaos_q]
+    overhead = _measure_metrics_overhead(smoke)
+    trace = _trace_smoke(smoke)
 
     result = dict(
         bench='chaos',
@@ -102,9 +174,14 @@ def run(smoke: bool = False, out_path: Optional[str] = None) -> dict:
         arch=ARCH, chaos_seed=CHAOS_SEED,
         stream=_stream_kw(smoke),
         step_overhead=round(chaos['steps'] / max(clean['steps'], 1), 3),
+        metrics_overhead=overhead,
+        trace=trace,
         rows=rows,
     )
     emit('chaos.step_overhead', 0.0, f'x{result["step_overhead"]}')
+    emit('chaos.metrics_overhead', overhead['instrumented_step_s'] * 1e6,
+         f'+{overhead["overhead_frac"] * 100:.1f}%/step '
+         f'(budget {overhead["budget"] * 100:.0f}%)')
 
     # gates precede the write: a broken recovery path must not overwrite
     # the artifact
@@ -118,6 +195,14 @@ def run(smoke: bool = False, out_path: Optional[str] = None) -> dict:
         assert row['completed'] >= COMPLETION_FLOOR * row['requests'], row
     # the chaos profile must actually have injected something
     assert sum((chaos['faults'] or {}).values()) > 0, chaos
+    # telemetry summaries must be present and priced (PR 8)
+    for row in rows:
+        assert row['telemetry'] is not None, row
+        assert row['telemetry']['effective_tops_w'] is not None, row
+    # the metrics tax must stay inside budget on the CI tier (full-size
+    # streams amortize it further; smoke is the adversarial case)
+    if smoke:
+        assert overhead['overhead_frac'] < overhead['budget'], overhead
 
     out_path = os.path.abspath(out_path)
     with open(out_path, 'w') as f:

@@ -214,7 +214,11 @@ def _bench_state_families(rows: list, smoke: bool) -> None:
             if mode == 'continuous':
                 row.update(completed=res['completed'],
                            decode_compilations=res['decode_compilations'],
-                           slot_utilization=res['slot_utilization'])
+                           slot_utilization=res['slot_utilization'],
+                           # the run's own telemetry summary: the live
+                           # EnergyMeter pricing next to the offline
+                           # decode_state_traffic numbers above
+                           telemetry=res.get('telemetry_summary'))
             rows.append(row)
             emit(f'decode.{row["name"]}', 0.0,
                  f'tok_per_s={row["tok_per_s"]},'

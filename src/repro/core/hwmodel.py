@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 # ----------------------------------------------------------------------------
 # Table I — component parameters (28 nm, 0.9 V, 50 MHz analog / 1 GHz digital)
@@ -265,7 +265,8 @@ DEFAULT_KV_TIER = KVTierConfig()
 def decode_kv_traffic(s_live: int, *, n_heads: int, n_kv_heads: int,
                       head_dim: int, page_size: int, hot_window: int,
                       fp_bytes: int = 2,
-                      tier: KVTierConfig = DEFAULT_KV_TIER) -> Dict[str, float]:
+                      tier: KVTierConfig = DEFAULT_KV_TIER,
+                      cold_blocks: Optional[int] = None) -> Dict[str, float]:
     """Bytes and pJ one decode token pays to read its KV cache, fp baseline
     vs the hybrid int8/fp tier mix (``runtime.kv_quant``'s layout).
 
@@ -279,10 +280,17 @@ def decode_kv_traffic(s_live: int, *, n_heads: int, n_kv_heads: int,
     Baseline arithmetic is digital bf16; tiered arithmetic is the paper's
     8-bit in-situ multiply (cold tier operands are already int8 — the
     whole point of storing the bulk tier in the array's native precision).
+
+    ``cold_blocks`` is the per-step incremental pricing entrypoint
+    (PR 8): pass the ``runtime.kv_quant.KVTierTracker``'s *actual* int8
+    residency for the lane and it overrides the hotness-rule steady-state
+    split — a freshly admitted lane prices all-hot until its pages age
+    out, which is what its decode step really reads. ``None`` keeps the
+    rule-derived split (the offline/benchmark default).
     """
     return _tiered_traffic(
         s_live, page_size=page_size, hot_window=hot_window,
-        fp_bytes=fp_bytes, tier=tier,
+        fp_bytes=fp_bytes, tier=tier, cold_blocks=cold_blocks,
         elems_per_block=page_size * n_kv_heads * head_dim * 2,  # K and V
         cold_scale_bytes_per_block=n_kv_heads * 2 * tier.scale_bytes,
         ops=4.0 * n_heads * s_live * head_dim)
@@ -291,15 +299,23 @@ def decode_kv_traffic(s_live: int, *, n_heads: int, n_kv_heads: int,
 def _tiered_traffic(s_live: int, *, page_size: int, hot_window: int,
                     fp_bytes: int, tier: KVTierConfig,
                     elems_per_block: int, cold_scale_bytes_per_block: float,
-                    ops: float) -> Dict[str, float]:
+                    ops: float,
+                    cold_blocks: Optional[int] = None) -> Dict[str, float]:
     """The one tier-pricing core behind :func:`decode_kv_traffic` and
     :func:`decode_latent_traffic`: hot/cold block split per the hotness
-    rule, bytes per tier, and the memory+compute energy model. Layouts
-    differ only in what one block carries (``elems_per_block``), the cold
-    tier's per-page scale overhead, and the attention op count."""
+    rule (or the caller's measured ``cold_blocks`` residency), bytes per
+    tier, and the memory+compute energy model. Layouts differ only in
+    what one block carries (``elems_per_block``), the cold tier's
+    per-page scale overhead, and the attention op count."""
     n_blocks = math.ceil(s_live / page_size)
-    hot_blocks = min(max(hot_window, 1), n_blocks)
-    cold_blocks = n_blocks - hot_blocks
+    if cold_blocks is None:
+        hot_blocks = min(max(hot_window, 1), n_blocks)
+        cold_blocks = n_blocks - hot_blocks
+    else:
+        # measured residency: clamp to [0, n_blocks - 1] — the block being
+        # written is always hot, mirroring hot_window >= 1
+        cold_blocks = min(max(int(cold_blocks), 0), max(n_blocks - 1, 0))
+        hot_blocks = n_blocks - cold_blocks
     hot_bytes = hot_blocks * elems_per_block * fp_bytes
     cold_bytes = cold_blocks * elems_per_block * 1 \
         + cold_blocks * cold_scale_bytes_per_block
@@ -335,7 +351,8 @@ def _tiered_traffic(s_live: int, *, page_size: int, hot_window: int,
 def decode_latent_traffic(s_live: int, *, n_heads: int, latent_dim: int,
                           kv_lora_rank: int, page_size: int,
                           hot_window: int, fp_bytes: int = 2,
-                          tier: KVTierConfig = DEFAULT_KV_TIER
+                          tier: KVTierConfig = DEFAULT_KV_TIER,
+                          cold_blocks: Optional[int] = None
                           ) -> Dict[str, float]:
     """:func:`decode_kv_traffic` for the absorbed-MLA latent pool: bytes
     and pJ one decode token pays to read its latent cache, fp baseline vs
@@ -354,7 +371,7 @@ def decode_latent_traffic(s_live: int, *, n_heads: int, latent_dim: int,
     """
     out = _tiered_traffic(
         s_live, page_size=page_size, hot_window=hot_window,
-        fp_bytes=fp_bytes, tier=tier,
+        fp_bytes=fp_bytes, tier=tier, cold_blocks=cold_blocks,
         elems_per_block=page_size * latent_dim,       # fetched once
         cold_scale_bytes_per_block=tier.scale_bytes,  # one scale per page
         ops=2.0 * n_heads * s_live * (latent_dim + kv_lora_rank))

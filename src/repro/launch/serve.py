@@ -65,7 +65,7 @@ import argparse
 import dataclasses
 import json
 import time
-from collections import deque
+from collections import Counter, deque
 from typing import List, Optional
 
 import jax
@@ -83,6 +83,7 @@ from repro.runtime import kv_cache as kvc
 from repro.runtime import kv_quant as kvq
 from repro.runtime import layouts as layouts_mod
 from repro.runtime import serve_step as SS
+from repro.runtime import telemetry as telemetry_mod
 
 
 def _ragged_lens(batch: int, prompt_len: int) -> jnp.ndarray:
@@ -594,6 +595,10 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
                      max_queue: Optional[int] = None,
                      faults: Optional[faults_mod.FaultInjector] = None,
                      step_hook=None,
+                     metrics: bool = True,
+                     metrics_out: Optional[str] = None,
+                     trace: Optional[str] = None,
+                     registry=None,
                      quiet: bool = False) -> dict:
     """Serve a stream of heterogeneous-length requests end-to-end (admit,
     decode, evict, re-admit) under one jit'd decode step.
@@ -616,7 +621,21 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
     ``attn_impl='flash'`` degrades the stream to the layout's densify
     einsum oracle with a logged ``degrade`` event instead of crashing.
     ``step_hook(sched, kv, cache)`` runs after every absorbed step (chaos
-    tests audit allocator invariants through it)."""
+    tests audit allocator invariants through it).
+
+    Observability (PR 8): ``metrics=True`` (the default) threads
+    ``runtime.telemetry.ServeTelemetry`` through the loop — request-span
+    histograms (TTFT/ITL/queue-wait, derived from the timestamped event
+    log), per-step scheduler/pool/tier gauges, and live hwmodel-priced
+    energy/traffic counters; the report gains ``out['telemetry']`` (full
+    snapshot) and ``out['telemetry_summary']``, and ``metrics_out``
+    writes the snapshot to a file (``.prom`` suffix: Prometheus text
+    exposition, else JSON). ``trace`` writes a Chrome-trace/Perfetto
+    JSON of the run (one track per slot plus a scheduler track; loads in
+    ui.perfetto.dev). ``metrics=False`` skips all instrumentation — the
+    benchmarked overhead gate compares the two. Either way the report's
+    terminal counts are derived from ``EventLog.terminal_accounting()``
+    itself (single source of truth), not parallel counters."""
     cfg = configs.get(arch, smoke=smoke)
     # routing table (pinned by tests/test_serve_continuous.py): every token
     # family serves — MLA pages its latent pool through the same block
@@ -646,6 +665,13 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
                          f'{num_pages - 1} allocatable')
     kv = kvc.PagedKVCache(num_pages, page_size, max_blocks, slots)
     events = faults_mod.EventLog()
+    telem = None
+    if metrics or trace:
+        telem = telemetry_mod.ServeTelemetry(
+            cfg, slots=slots, page_size=page_size, kv_quant=kv_quant,
+            hot_window=hot_window, metrics=metrics, trace_path=trace,
+            registry=registry)
+        telem.attach(events)
     injector = faults
     sched = ContinuousScheduler(kv, prompt_pad=prompt_len, eos_id=eos_id,
                                 hot_window=hot_window if kv_quant else None,
@@ -743,7 +769,7 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
     attn_impl_live = attn_impl
     decode_fn = build_decode(attn_impl_live)
     _decode_fns = [decode_fn]    # degrade rebuilds append here
-    sentinel_fn = jax.jit(SS.logits_finite)
+    sentinel_fn = jax.jit(SS.logits_health)
     sample_key = jax.random.key(seed + 1)
 
     def call_decode(cache, toks_j, pos_j):
@@ -770,7 +796,10 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
     has_recurrent = cfg.family == 'ssm' or bool(cfg.hybrid_group)
     has_pool = cfg.family != 'ssm'      # pure-SSM trees carry no fp pool
     while not sched.done and steps < limit:
+        t_step0 = time.perf_counter()
         sched.begin_step(steps)
+        if telem is not None:
+            telem.begin_step(steps, t_step0)
         if injector is not None:
             injector.begin_step(steps)
             # pool squeeze: the injector holds free pages hostage; the
@@ -796,7 +825,7 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
         for req, slot in sched.try_admit():
             pad = np.zeros((prompt_len,), np.int32)
             pad[:len(req.prompt)] = req.prompt
-            tp = time.time()
+            tp = time.perf_counter()
             # one admission path for every layout: zero the slot's
             # recurrent rows (a fresh request must not see the evicted
             # tenant's state), prefill a batch-1 view — recurrent leaves
@@ -812,7 +841,14 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
                                       dict(inputs=jnp.asarray(pad[None])),
                                       part, jnp.asarray([len(req.prompt) - 1]))
             cache = layouts_mod.merge_state_slot(cache, part, slot)
-            t_prefill += time.time() - tp
+            tp_end = time.perf_counter()
+            t_prefill += tp_end - tp
+            # the admit event predates the prefill; attach the measured
+            # duration so spans (TTFT) derive from the log alone
+            events.annotate_last('admit', req.rid, prefill_s=tp_end - tp)
+            if telem is not None:
+                telem.prefill(rid=req.rid, slot=slot, t_start=tp,
+                              t_end=tp_end)
             sched.seed(req, slot, first_token(logits))
         if sched.done:
             break
@@ -833,7 +869,12 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
         if kv_quant:
             # pages that just left the hot window become int8 before the
             # step reads them as cold (covers fresh admissions too)
+            tq = time.perf_counter()
+            quantized_before = n_pages_quantized
             cache = quantize_aged_out(cache)
+            if telem is not None and n_pages_quantized > quantized_before:
+                telem.phase('quantize', tq, time.perf_counter(),
+                            pages=n_pages_quantized - quantized_before)
         if (injector is not None and has_pool and sched.active
                 and injector.poison_page_now()):
             # NaN an owned fp pool page: the model of a corrupted
@@ -854,9 +895,15 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
                         slot=poison_slot,
                         rid=sched.active[poison_slot].req.rid)
         peak_pages = max(peak_pages, kv.used_pages)
+        if telem is not None:
+            # gauges + hwmodel energy pricing over the step's actual
+            # batch composition (pos/tier state is final by here)
+            telem.sample(sched, kv)
         toks, pos = sched.step_vectors()
         cache = kvc.with_block_tables(cache, kv.table_array())
         busy_slot_steps += len(sched.active)
+        active_now = sorted(sched.active)
+        td0 = time.perf_counter()
         try:
             if (injector is not None and attn_impl_live == 'flash'
                     and injector.kernel_fault_now()):
@@ -874,17 +921,27 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
             events.emit('degrade', step=steps, frm='flash', to='einsum',
                         error=f'{type(e).__name__}: {str(e)[:160]}')
             attn_impl_live = 'einsum'
+            tdg = time.perf_counter()
             decode_fn = build_decode('einsum')
             _decode_fns.append(decode_fn)
+            if telem is not None:
+                telem.phase('degrade', tdg, time.perf_counter(),
+                            frm='flash', to='einsum')
             tok, logits, cache = call_decode(cache, jnp.asarray(toks),
                                              jnp.asarray(pos))
+        if telem is not None:
+            telem.decode(td0, time.perf_counter(), active_now)
         # --- integrity sentinel: quarantine non-finite lanes -------------
-        ok = sentinel_fn(logits)
+        ok, logit_max = sentinel_fn(logits)
         if poison_slot is not None:
             lg = np.asarray(logits, np.float32)
             lg[poison_slot] = np.nan
-            ok = sentinel_fn(jnp.asarray(lg))
+            ok, logit_max = sentinel_fn(jnp.asarray(lg))
         ok = np.asarray(ok)
+        if telem is not None:
+            # device scalar handed over as-is; telemetry host-transfers it
+            # once at finish, never per step
+            telem.logits_gauge(logit_max)
         bad = [s for s in sorted(sched.active) if not ok[s]]
         for slot in bad:
             # quarantine BEFORE absorb: a poisoned lane must not finish
@@ -892,11 +949,18 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
             # requeue is lossless — recompute re-derives the state from
             # the prompt — and the scrub keeps the poison from leaking
             # to the page's next tenant.
-            cache = scrub_pages(cache, sched.quarantine(slot))
+            tsb = time.perf_counter()
+            pages = sched.quarantine(slot)
+            cache = scrub_pages(cache, pages)
+            if telem is not None:
+                telem.phase('scrub', tsb, time.perf_counter(),
+                            slot=slot, pages=len(pages))
         sched.absorb(np.asarray(tok))
         steps += 1
         if step_hook is not None:
             step_hook(sched, kv, cache)
+        if telem is not None:
+            telem.step_done(time.perf_counter())
     jax.block_until_ready(jax.tree.leaves(cache)[0])
     wall = time.time() - t0
     if not sched.done:
@@ -906,12 +970,19 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
 
     outputs = {st.req.rid: st.tokens
                for st in sorted(sched.completed, key=lambda s: s.req.rid)}
+    # the auditing contract: every submitted request reached exactly one
+    # terminal state — raises on a leaked request, even outside tests.
+    # The report's terminal counts are DERIVED from the audited log (one
+    # source of truth), not recounted from scheduler lists.
+    term = events.terminal_accounting()
+    tcounts = Counter(term.values())
+    evc = events.counts()
     out = dict(
         requests=n_requests,
-        completed=len(sched.completed),
-        failed=len(sched.failed),
-        rejected=len(sched.rejected),
-        cancelled=len(sched.cancelled),
+        completed=tcounts.get('finish', 0),
+        failed=tcounts.get('fail', 0),
+        rejected=tcounts.get('reject', 0),
+        cancelled=tcounts.get('cancel', 0),
         steps=steps,
         decode_tokens=busy_slot_steps,
         wall_s=round(wall, 4),
@@ -921,15 +992,15 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
         peak_pages=peak_pages,
         total_pages=num_pages - 1,
         page_size=page_size,
-        preempted=sched.n_preempted,
-        quarantined=sched.n_quarantined,
+        preempted=evc.get('preempt', 0),
+        quarantined=evc.get('quarantine', 0),
         attn_impl=attn_impl,
         attn_impl_effective=attn_impl_live,
         kv_quant=bool(kv_quant),
         hot_window=hot_window if kv_quant else None,
         pages_quantized=n_pages_quantized,
         pages_quant_dropped=n_pages_quant_dropped,
-        events=events.counts(),
+        events=evc,
         faults=(dict(injector.counts) if injector is not None else None),
         # admit/evict churn must never retrace: idle slots keep the step
         # shapes constant, so exactly one decode compilation serves the run
@@ -939,13 +1010,27 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
         out_lens={r: len(t) for r, t in outputs.items()},
         sample={r: t[:4] for r, t in list(outputs.items())[:4]},
     )
+    snap = telem.finish(events) if telem is not None else None
+    if snap is not None:
+        out['telemetry_summary'] = telemetry_mod.summarize(snap)
     if not quiet:
         print(json.dumps(out))
     out['outputs'] = outputs
     out['event_log'] = events.records()
-    # the auditing contract: every submitted request reached exactly one
-    # terminal state — raises on a leaked request, even outside tests
-    out['terminal'] = events.terminal_accounting()
+    out['terminal'] = term
+    if snap is not None:
+        out['telemetry'] = snap
+        if metrics_out:
+            with open(metrics_out, 'w') as f:
+                if metrics_out.endswith('.prom'):
+                    f.write(telem.reg.render_prometheus())
+                else:
+                    json.dump(snap, f, indent=1)
+            out['metrics_out'] = metrics_out
+    if telem is not None:
+        trace_path = telem.close_trace()
+        if trace_path is not None:
+            out['trace'] = trace_path
     return out
 
 
@@ -1001,6 +1086,16 @@ def main(argv=None):
                     help='continuous mode: run under the default fault-'
                          'injection profile (runtime.faults.chaos_profile)')
     ap.add_argument('--chaos-seed', type=int, default=0)
+    ap.add_argument('--metrics', action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help='continuous mode: lifecycle/tier/energy metrics '
+                         '(--no-metrics strips all instrumentation)')
+    ap.add_argument('--metrics-out', default=None, metavar='FILE',
+                    help='write the final metrics snapshot (.prom: '
+                         'Prometheus text exposition, else JSON)')
+    ap.add_argument('--trace', default=None, metavar='FILE',
+                    help='write a Chrome-trace/Perfetto JSON of the run '
+                         '(load at ui.perfetto.dev)')
     args = ap.parse_args(argv)
     if args.continuous:
         injector = (faults_mod.FaultInjector(
@@ -1019,7 +1114,9 @@ def main(argv=None):
                          deadline=args.deadline,
                          retry_budget=(None if args.retry_budget < 0
                                        else args.retry_budget),
-                         max_queue=args.max_queue, faults=injector)
+                         max_queue=args.max_queue, faults=injector,
+                         metrics=args.metrics,
+                         metrics_out=args.metrics_out, trace=args.trace)
     else:
         serve(args.arch, smoke=args.smoke, batch=args.batch,
               prompt_len=args.prompt_len, gen_len=args.gen_len,

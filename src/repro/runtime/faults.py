@@ -41,8 +41,10 @@ request NOT in that set.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import Counter
-from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
+from typing import (Any, Callable, Dict, Iterable, Iterator, List, Optional,
+                    Tuple)
 
 import numpy as np
 
@@ -79,15 +81,19 @@ TERMINAL_KINDS = frozenset({'finish', 'fail', 'reject', 'cancel'})
 @dataclasses.dataclass
 class Event:
     """One scheduler event. ``detail`` carries kind-specific fields
-    (reason, pos, attempt, fault name, ...)."""
+    (reason, pos, attempt, fault name, ...). ``t`` is the monotonic
+    wall-clock second the log stamped at emit — ``runtime.telemetry``
+    derives queue-wait/TTFT/ITL spans from these, and
+    :meth:`EventLog.terminal_accounting` audits their ordering."""
     step: int
     kind: str
     rid: Optional[int] = None
     slot: Optional[int] = None
     detail: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    t: float = 0.0
 
     def to_dict(self) -> dict:
-        d = dict(step=self.step, kind=self.kind)
+        d = dict(step=self.step, kind=self.kind, t=self.t)
         if self.rid is not None:
             d['rid'] = self.rid
         if self.slot is not None:
@@ -98,10 +104,22 @@ class Event:
 
 class EventLog:
     """Append-only log of :class:`Event` records, threaded through the
-    scheduler and returned in the serve report."""
+    scheduler and returned in the serve report.
 
-    def __init__(self):
+    Every record is stamped with ``clock()`` at emit (default
+    ``time.perf_counter`` — monotonic, sub-µs). ``subscribe`` registers a
+    listener called synchronously with each emitted event — how the
+    telemetry layer counts events and drops trace instants without the
+    scheduler knowing it exists. Tests inject a fake ``clock`` to script
+    span timings deterministically."""
+
+    def __init__(self, clock: Callable[[], float] = time.perf_counter):
         self.events: List[Event] = []
+        self.clock = clock
+        self._listeners: List[Callable[[Event], None]] = []
+
+    def subscribe(self, listener: Callable[[Event], None]) -> None:
+        self._listeners.append(listener)
 
     def emit(self, kind: str, *, step: int = -1, rid: Optional[int] = None,
              slot: Optional[int] = None, **detail) -> Event:
@@ -110,8 +128,31 @@ class EventLog:
                              f'{sorted(EVENT_KINDS)}')
         ev = Event(step=int(step), kind=kind,
                    rid=None if rid is None else int(rid),
-                   slot=None if slot is None else int(slot), detail=detail)
+                   slot=None if slot is None else int(slot), detail=detail,
+                   t=float(self.clock()))
         self.events.append(ev)
+        for fn in self._listeners:
+            fn(ev)
+        return ev
+
+    def last(self, kind: Optional[str] = None,
+             rid: Optional[int] = None) -> Optional[Event]:
+        """Most recent event matching the given kind and/or rid."""
+        for ev in reversed(self.events):
+            if (kind is None or ev.kind == kind) and \
+                    (rid is None or ev.rid == rid):
+                return ev
+        return None
+
+    def annotate_last(self, kind: str, rid: int, **detail) -> Event:
+        """Merge measured detail into the most recent ``(kind, rid)``
+        event — how the serve loop attaches each admission's prefill
+        duration after the jit'd prefill returns (the admit event is
+        emitted before the prefill runs)."""
+        ev = self.last(kind, rid)
+        if ev is None:
+            raise ValueError(f'no {kind!r} event for rid {rid} to annotate')
+        ev.detail.update(detail)
         return ev
 
     def __len__(self) -> int:
@@ -133,17 +174,36 @@ class EventLog:
         """``rid -> terminal kind`` for every submitted request. Raises
         ValueError if any submitted rid has zero or more than one terminal
         event — the serve loop runs this on every completed continuous
-        serve, so a leaked request is a crash, not a silent drop."""
+        serve, so a leaked request is a crash, not a silent drop.
+
+        The audit also covers the timestamps (PR 8): ``t`` must be
+        globally non-decreasing in log order (the log is append-only under
+        one monotonic clock — out-of-order stamps mean a forged or merged
+        log, and they would corrupt every span derived downstream), and a
+        terminal event must be the LAST event for its rid — post-mortem
+        scheduler activity on a finished request is a lifecycle bug even
+        when it never produces a second terminal."""
         submitted = [e.rid for e in self.events
                      if e.kind == 'submit' and e.rid is not None]
         term: Dict[int, str] = {}
+        prev_t = -float('inf')
         for e in self.events:
+            if e.t < prev_t:
+                raise ValueError(
+                    f'event timestamps regress at step {e.step} '
+                    f'({e.kind}: t={e.t} after t={prev_t}) — the log must '
+                    f'be append-only under one monotonic clock')
+            prev_t = e.t
+            if e.rid is not None and e.rid in term:
+                raise ValueError(
+                    f'rid {e.rid} has two terminal events '
+                    f'({term[e.rid]} then {e.kind}) — a request must '
+                    f'end exactly once'
+                    if e.kind in TERMINAL_KINDS else
+                    f'rid {e.rid} has {e.kind!r} activity after its '
+                    f'terminal {term[e.rid]!r} — terminated requests must '
+                    f'leave the scheduler')
             if e.kind in TERMINAL_KINDS and e.rid is not None:
-                if e.rid in term:
-                    raise ValueError(
-                        f'rid {e.rid} has two terminal events '
-                        f'({term[e.rid]} then {e.kind}) — a request must '
-                        f'end exactly once')
                 term[e.rid] = e.kind
         missing = [r for r in submitted if r not in term]
         if missing:

@@ -83,6 +83,20 @@ class PagedKVCache:
     def used_pages(self) -> int:
         return (self.num_pages - 1) - len(self._free)
 
+    @property
+    def owned_pages(self) -> int:
+        """Pages currently backing slot tables (used minus squeezed)."""
+        return self.used_pages - len(self.reserved)
+
+    def occupancy(self) -> dict:
+        """Pool occupancy snapshot for the telemetry gauges: every
+        allocatable page is free, reserved (held hostage by a pool
+        squeeze), or owned by a slot — the same partition
+        :meth:`check_invariants` audits."""
+        return dict(free=len(self._free), reserved=len(self.reserved),
+                    owned=self.owned_pages,
+                    allocatable=self.num_pages - 1)
+
     def max_positions(self) -> int:
         return self.max_blocks * self.page_size
 

@@ -222,3 +222,16 @@ class KVTierTracker:
 
     def reset(self, slot: int) -> None:
         self._upto.pop(slot, None)
+
+    def cold_blocks(self, slot: int) -> int:
+        """Blocks of ``slot`` already resident in the int8 tier — the
+        actual residency the telemetry energy meter feeds to
+        ``hwmodel.decode_kv_traffic(cold_blocks=...)`` (it can lag the
+        rule-derived steady state: fresh admissions start at 0 and a
+        dropped quantize chunk still advances the tracker)."""
+        return self._upto.get(slot, 0)
+
+    def residency(self) -> dict:
+        """``slot -> cold block count`` for every tracked slot (the
+        per-step int8-tier residency gauge)."""
+        return dict(self._upto)

@@ -55,6 +55,20 @@ def logits_finite(logits: jnp.ndarray) -> jnp.ndarray:
     return jnp.all(jnp.isfinite(logits.astype(jnp.float32)), axis=-1)
 
 
+def logits_health(logits: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """:func:`logits_finite` fused with one scalar drift gauge: returns
+    ``((B,) bool finite rows, () f32 max |finite logit|)`` from a single
+    device-side pass. The extra scalar transfer is what feeds the
+    telemetry layer's ``serve_logits_max_abs`` gauge (a slow upward creep
+    is the early signal of accumulating cache corruption that the binary
+    NaN sentinel only catches at the cliff); non-finite entries are
+    excluded so a poisoned lane doesn't saturate the gauge."""
+    lf = logits.astype(jnp.float32)
+    finite = jnp.isfinite(lf)
+    return (jnp.all(finite, axis=-1),
+            jnp.max(jnp.where(finite, jnp.abs(lf), 0.0)))
+
+
 def make_decode_step(cfg, yoco: YocoConfig = DEFAULT_YOCO,
                      rt: ModelRuntime = DEFAULT_RT, *, greedy: bool = True,
                      temperature: float = 1.0, top_k: int = 0):

@@ -30,6 +30,13 @@ def test_bench_decode_smoke_writes_parity_checked_json(tmp_path):
     # ssm/hybrid serve rows carry their own prompt+gen s_max)
     attn = {r['s_max'] for r in on_disk['rows'] if '_serve_' not in r['name']}
     assert attn == set(bench_decode.SMOKE_SEQ_LENS)
+    # continuous serve rows embed the run's live telemetry summary (PR 8)
+    for row in on_disk['rows']:
+        if row['name'].endswith('_serve_continuous'):
+            t = row['telemetry']
+            assert t['tokens'] > 0
+            assert t['effective_tops_w'] is not None
+            assert t['itl_p50_s'] is not None
 
 
 def test_bench_kv_quant_smoke_asserts_quantized_path(tmp_path):
@@ -83,3 +90,14 @@ def test_bench_chaos_smoke_asserts_accounting(tmp_path):
         assert r['completed'] >= bench_chaos.COMPLETION_FLOOR * r['requests']
     assert on_disk['step_overhead'] >= 1.0
     assert result['rows'][0]['label'] == 'clean'
+    # PR 8: every row embeds its telemetry summary; the metrics tax is
+    # measured (and budget-gated inside run() on the smoke tier) and the
+    # emitted trace validated as loadable Chrome-trace JSON
+    for r in on_disk['rows']:
+        assert r['telemetry']['ttft_p50_s'] is not None
+        assert r['telemetry']['paper_ima_tops_w'] == 123.8
+    mo = on_disk['metrics_overhead']
+    assert mo['overhead_frac'] < mo['budget']
+    assert mo['bare_step_s'] > 0 and mo['instrumented_step_s'] > 0
+    assert on_disk['trace']['trace_events'] > 0
+    assert {'prefill', 'decode'} <= set(on_disk['trace']['span_names'])

@@ -27,7 +27,10 @@ def test_event_log_counts_and_records():
     log.emit('admit', step=0, rid=1, slot=2)
     log.emit('finish', step=3, rid=1, slot=2, tokens=4)
     assert log.counts() == {'submit': 1, 'admit': 1, 'finish': 1}
-    assert log.records()[1] == dict(step=0, kind='admit', rid=1, slot=2)
+    rec = log.records()[1]
+    # every record carries the monotonic wall-clock stamp (PR 8)
+    assert rec.pop('t') >= 0.0
+    assert rec == dict(step=0, kind='admit', rid=1, slot=2)
     assert [e.kind for e in log.by_kind('finish')] == ['finish']
     with pytest.raises(ValueError, match='unknown event kind'):
         log.emit('explode', step=0)
