@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src:.$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test test-fast test-slow test-mla test-layouts test-ssm-serve test-chaos test-telemetry bench bench-smoke serve-demo check
+.PHONY: test test-fast test-slow test-mla test-layouts test-ssm-serve test-chaos test-telemetry test-prefix bench bench-smoke serve-demo check
 
 # tier-1: the full suite (what CI / the driver runs)
 test:
@@ -47,6 +47,13 @@ test-chaos:
 test-telemetry:
 	$(PY) -m pytest -q -m "telemetry" tests/test_telemetry.py
 
+# the sharing surface: COW boundary plans, refcount random walks, LRU
+# eviction under pressure, shared-vs-solo token parity (incl. preemption
+# of a sharing tenant and the int8 tier's quantize-once discipline), and
+# the energy meter's shared-read refund
+test-prefix:
+	$(PY) -m pytest -q -m "prefix and not slow" tests/test_prefix_cache.py
+
 bench:
 	$(PY) -m benchmarks.run
 
@@ -65,7 +72,7 @@ bench-smoke:
 # smoke benchmarks (test-fast already runs the non-slow cells of the
 # grids; the dedicated targets add the rest so each surface is complete
 # pre-push)
-check: test-fast test-layouts test-ssm-serve test-chaos test-telemetry bench-smoke
+check: test-fast test-layouts test-ssm-serve test-chaos test-telemetry test-prefix bench-smoke
 
 serve-demo:
 	$(PY) examples/serve_decode.py

@@ -225,6 +225,45 @@ def _bench_state_families(rows: list, smoke: bool) -> None:
                  f'state_B_per_tok={row["state_bytes_per_token"]}')
 
 
+def _bench_prefix_sharing(rows: list, smoke: bool) -> None:
+    """Prefix caching + COW page sharing on a continuous serve: the same
+    shared-system-prompt stream once with ``--prefix-cache`` and once all
+    private. Reports the hit rate, the peak-page saving, admission time
+    (suffix-only prefill on hits), and the energy meter's shared-read
+    refund — gated on token parity between the two runs (a sharing bug
+    must not overwrite the artifact with its own numbers)."""
+    from repro.launch import serve as SV
+
+    arch = 'stablelm-1.6b'
+    slots, n_req, plen, glen, ps, shared = ((4, 6, 16, 8, 4, 12) if smoke
+                                            else (4, 12, 32, 16, 8, 24))
+    kw = dict(slots=slots, n_requests=n_req, prompt_len=plen, gen_len=glen,
+              page_size=ps, shared_prefix=shared, attn_impl='einsum',
+              quiet=True)
+    priv = SV.serve_continuous(arch, **kw)
+    cached = SV.serve_continuous(arch, prefix_cache=True, **kw)
+    pc = cached['prefix']
+    ok = (cached['completed'] == priv['completed'] == n_req
+          and cached['outputs'] == priv['outputs'])
+    saved = (cached.get('telemetry_summary') or {}).get('shared_saved_bytes')
+    for mode, res in (('private', priv), ('cached', cached)):
+        row = dict(name=f'prefix_serve_{mode}', arch=arch,
+                   s_max=plen + glen, tok_per_s=res['tokens_per_s'],
+                   prefill_s=res['prefill_s'], peak_pages=res['peak_pages'],
+                   max_abs_err_vs_oracle=0.0 if ok else 1.0)
+        if mode == 'cached':
+            row.update(hits=pc['hits'], misses=pc['misses'],
+                       hit_rate=round(pc['hits']
+                                      / max(pc['hits'] + pc['misses'], 1),
+                                      3),
+                       cow_copies=pc['cow_copies'],
+                       pages_saved=priv['peak_pages'] - res['peak_pages'],
+                       shared_saved_bytes=saved)
+        rows.append(row)
+        emit(f'decode.{row["name"]}', 0.0,
+             f'tok_per_s={row["tok_per_s"]},peak_pages={row["peak_pages"]}')
+
+
 def run(smoke: bool = False, out_path: Optional[str] = None) -> dict:
     if out_path is None:
         out_path = SMOKE_OUT if smoke else DEFAULT_OUT
@@ -234,6 +273,7 @@ def run(smoke: bool = False, out_path: Optional[str] = None) -> dict:
         _bench_one(s_max, rows, interpret)
         _bench_mla_one(s_max, rows, interpret, smoke)
     _bench_state_families(rows, smoke)
+    _bench_prefix_sharing(rows, smoke)
     result = dict(
         bench='decode',
         backend=jax.default_backend(),

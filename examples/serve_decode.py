@@ -83,6 +83,24 @@ def main():
               f'peak_pages={out["peak_pages"]}/{out["total_pages"]}, '
               f'pages_quantized={out["pages_quantized"]}')
 
+    # prefix caching: a burst of requests sharing one system prompt —
+    # later admissions acquire the donor's sealed pages by reference,
+    # prefill only their private suffix (chunked), COW the boundary page
+    # on exact duplicates, and the energy meter refunds the duplicate
+    # shared-page fetches
+    print('=== stablelm-1.6b continuous (prefix cache, shared prompt) ===')
+    out = serve.serve_continuous(
+        'stablelm-1.6b', slots=3, n_requests=6, prompt_len=32, gen_len=16,
+        page_size=8, attn_impl='flash', quiet=True,
+        prefix_cache=True, shared_prefix=24)
+    pc = out['prefix']
+    print(f'  {out["completed"]}/{out["requests"]} done, '
+          f'hits={pc["hits"]}/{pc["hits"] + pc["misses"]}, '
+          f'cow={pc["cow_copies"]}, '
+          f'peak_pages={out["peak_pages"]}/{out["total_pages"]}, '
+          f'shared_saved='
+          f'{out["telemetry"]["energy"]["shared_saved_bytes"]:.0f} B')
+
     # chaos-hardened serving: the same stream under a seeded fault
     # profile — squeezed pools, preemption storms, NaN-poisoned pages and
     # logits rows, mid-stream cancellations. Quarantined lanes are

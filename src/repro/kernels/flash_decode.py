@@ -101,12 +101,22 @@ def _live_block_range(pos, win, bs: int):
 
 def _softmax_tile(pos, win, s, q_ref, load_kv, o_ref,
                   acc_ref, m_ref, l_ref, *, bs: int, s_steps: int,
-                  scale: float):
+                  scale: float, chunk: int = 1, group: int = 1, off=None):
     """One online-softmax step over key tile ``s`` — THE compute path every
     flash-decode entrypoint reduces through; only the scalar plumbing and
     the K/V tile loader differ per layout. ``load_kv() -> (k, v)`` f32
     (bs, dh) tiles; it runs under the live-tile predicate so dead steps
-    skip both the load and the compute."""
+    skip both the load and the compute.
+
+    ``chunk > 1`` is the chunked-prefill shape: the resident query rows
+    cover ``chunk`` consecutive positions (``group`` query heads each,
+    row i sits at absolute position ``off + i // group``), so the causal
+    mask goes per-row. The caller passes the *fetch-union* scalars —
+    ``pos`` = the chunk's last (clamped) position, ``win`` = the per-row
+    window + (chunk - 1) — so the live-block range covers every row;
+    within a tile each row re-derives its own validity from ``off``.
+    ``chunk == 1`` (decoding) keeps the historical single-position mask
+    bit-for-bit."""
     @pl.when(s == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -121,7 +131,14 @@ def _softmax_tile(pos, win, s, q_ref, load_kv, o_ref,
         q = q_ref[0, 0].astype(jnp.float32)                  # (G, dh)
         k, v = load_kv()                                     # (bs, dh) f32
         kpos = s * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
-        valid = (kpos <= pos) & (kpos > pos - win)
+        if chunk == 1:
+            valid = (kpos <= pos) & (kpos > pos - win)
+        else:
+            rows = q_ref.shape[2]
+            qp = off + jax.lax.broadcasted_iota(
+                jnp.int32, (rows, 1), 0) // group            # (rows, 1)
+            row_win = win - (chunk - 1)
+            valid = (kpos <= qp) & (kpos > qp - row_win)     # (rows, bs)
         logits = jax.lax.dot_general(
             q, k, dimension_numbers=(((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale      # (G, bs)
@@ -148,12 +165,15 @@ def _softmax_tile(pos, win, s, q_ref, load_kv, o_ref,
 # the one harness: scalar-prefetch grid, layout-parameterized (maps, loader)
 # ----------------------------------------------------------------------------
 def _core_kernel(*refs, ns: int, nt: int, loader, bs: int, s_steps: int,
-                 scale: float):
+                 scale: float, chunk: int = 1, group: int = 1,
+                 off_idx=None):
     """The single kernel body behind every entrypoint. Argument layout (the
     PrefetchScalarGridSpec convention): ``ns`` scalar-prefetch refs
     (pos, window, then layout extras such as block tables / hot window),
     the query ref, ``nt`` layout tensor refs, the output ref, and the three
-    online-softmax scratch refs."""
+    online-softmax scratch refs. ``chunk``/``group``/``off_idx`` are the
+    chunked-prefill parameters (``off_idx`` names the scalar operand that
+    carries each request's chunk start position)."""
     scalars = refs[:ns]
     q_ref = refs[ns]
     t_refs = refs[ns + 1:ns + 1 + nt]
@@ -161,14 +181,17 @@ def _core_kernel(*refs, ns: int, nt: int, loader, bs: int, s_steps: int,
     b = pl.program_id(0)
     s = pl.program_id(2)
     pos, win = scalars[0][b], scalars[1][b]
+    off = scalars[off_idx][b] if off_idx is not None else None
     load_kv = loader(scalars, t_refs, b, s, pos, win)
     _softmax_tile(pos, win, s, q_ref, load_kv, o_ref, acc_ref, m_ref, l_ref,
-                  bs=bs, s_steps=s_steps, scale=scale)
+                  bs=bs, s_steps=s_steps, scale=scale, chunk=chunk,
+                  group=group, off=off)
 
 
 def _flash_core(q: jnp.ndarray, scalars, tensors, tensor_specs, *, loader,
                 out_width: int, bs: int, s_steps: int, scale: float,
-                interpret: bool) -> jnp.ndarray:
+                interpret: bool, chunk: int = 1, group: int = 1,
+                off_idx=None) -> jnp.ndarray:
     """Run the flash-decode grid over ``q`` (B, Hgrid, G, dk) with a
     layout-supplied ``(index_maps, loader)`` pair: ``tensor_specs`` carry
     the layout's data-dependent index maps (one BlockSpec per tensor
@@ -195,7 +218,8 @@ def _flash_core(q: jnp.ndarray, scalars, tensors, tensor_specs, *, loader,
     )
     return pl.pallas_call(
         functools.partial(_core_kernel, ns=len(scalars), nt=len(tensors),
-                          loader=loader, bs=bs, s_steps=s_steps, scale=scale),
+                          loader=loader, bs=bs, s_steps=s_steps, scale=scale,
+                          chunk=chunk, group=group, off_idx=off_idx),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hgrid, g, out_width), jnp.float32),
         compiler_params=compat.tpu_compiler_params(
@@ -276,11 +300,12 @@ def flash_decode_gqa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 # paged GQA layout
 # ----------------------------------------------------------------------------
 @functools.partial(jax.jit,
-                   static_argnames=('scale', 'interpret'))
+                   static_argnames=('scale', 'chunk', 'interpret'))
 def flash_decode_gqa_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
                            v_pages: jnp.ndarray, pos: jnp.ndarray,
                            window: jnp.ndarray, block_tables: jnp.ndarray,
-                           *, scale: float,
+                           offset: jnp.ndarray = None, *, scale: float,
+                           chunk: int = 1,
                            interpret: bool = False) -> jnp.ndarray:
     """Single-token GQA decode attention over a *paged* KV pool.
 
@@ -292,7 +317,15 @@ def flash_decode_gqa_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
                   physical page block_tables[b, i]; W bounds the grid's S
                   dimension (size it to ceil(max_live / page_size))
 
-    Returns (B, Hkv, G, dh) f32.
+    ``chunk > 1`` is the chunked-prefill shape: the G axis widens to
+    chunk * G (row i = query head i % G at position offset[b] + i // G),
+    ``offset`` (B,) int32 carries each chunk's start, and the caller must
+    pass fetch-union scalars — ``pos`` = the chunk's LAST valid position
+    (clamped below the prompt length so block-table indexing stays in
+    range) and ``window`` = per-row window + (chunk - 1). Use the
+    :func:`flash_chunk_paged` wrapper, which derives all three.
+
+    Returns (B, Hkv, G, dh) f32 (chunked: (B, Hkv, chunk * G, dh)).
     """
     b, hkv, g, dh = q.shape
     _, page_size, hkv_k, dh_k = k_pages.shape
@@ -300,33 +333,41 @@ def flash_decode_gqa_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
     assert v_pages.shape == k_pages.shape
     assert pos.shape == (b,) and window.shape == (b,)
     assert block_tables.ndim == 2 and block_tables.shape[0] == b
+    assert g % chunk == 0, (g, chunk)
+    assert (offset is None) == (chunk == 1), (offset, chunk)
     s_steps = block_tables.shape[1]
 
-    def kv_map(bb, h, s, pos_ref, win_ref, bt_ref):
+    def kv_map(bb, h, s, pos_ref, win_ref, bt_ref, *rest):
         blk = _clamped_block(s, pos_ref, win_ref, bb, page_size)
         return (bt_ref[bb, blk], 0, h, 0)
 
+    scalars = (pos.astype(jnp.int32), window.astype(jnp.int32),
+               block_tables.astype(jnp.int32))
+    if chunk > 1:
+        scalars = scalars + (offset.astype(jnp.int32),)
     return _flash_core(
         q,
-        scalars=(pos.astype(jnp.int32), window.astype(jnp.int32),
-                 block_tables.astype(jnp.int32)),
+        scalars=scalars,
         tensors=(k_pages, v_pages),
         tensor_specs=[pl.BlockSpec((1, page_size, 1, dh), kv_map),
                       pl.BlockSpec((1, page_size, 1, dh), kv_map)],
         loader=lambda scalars, t_refs, bb, s, pos_, win_: _fp_loader(t_refs),
         out_width=dh, bs=page_size, s_steps=s_steps, scale=scale,
-        interpret=interpret)
+        interpret=interpret, chunk=chunk, group=g // chunk,
+        off_idx=3 if chunk > 1 else None)
 
 
 # ----------------------------------------------------------------------------
 # paged MLA latent layout
 # ----------------------------------------------------------------------------
 @functools.partial(jax.jit,
-                   static_argnames=('scale', 'r', 'interpret'))
+                   static_argnames=('scale', 'r', 'chunk', 'interpret'))
 def flash_decode_mla_paged(q: jnp.ndarray, c_pages: jnp.ndarray,
                            pos: jnp.ndarray, window: jnp.ndarray,
-                           block_tables: jnp.ndarray, *, scale: float,
-                           r: int, interpret: bool = False) -> jnp.ndarray:
+                           block_tables: jnp.ndarray,
+                           offset: jnp.ndarray = None, *, scale: float,
+                           r: int, chunk: int = 1,
+                           interpret: bool = False) -> jnp.ndarray:
     """Single-token absorbed-MLA decode attention over a *paged* latent pool.
 
     q:            (B, 1, H, r + d_rope) — the ABSORBED query: per head,
@@ -347,7 +388,13 @@ def flash_decode_mla_paged(q: jnp.ndarray, c_pages: jnp.ndarray,
     r:            static latent rank — the value width (``W_uv`` is applied
                   once OUTSIDE the kernel, on the normalized output)
 
-    Returns (B, 1, H, r) f32: the latent-space attention output.
+    ``chunk > 1`` widens the resident H axis to chunk * H (row i = head
+    i % H at position offset[b] + i // H) with the same fetch-union
+    scalar contract as :func:`flash_decode_gqa_paged`; use the
+    :func:`flash_chunk_paged_mla` wrapper.
+
+    Returns (B, 1, H, r) f32: the latent-space attention output
+    (chunked: (B, 1, chunk * H, r)).
     """
     b, one, h, dk = q.shape
     assert one == 1, q.shape
@@ -356,9 +403,11 @@ def flash_decode_mla_paged(q: jnp.ndarray, c_pages: jnp.ndarray,
     assert 0 < r < dk, (r, dk)
     assert pos.shape == (b,) and window.shape == (b,)
     assert block_tables.ndim == 2 and block_tables.shape[0] == b
+    assert h % chunk == 0, (h, chunk)
+    assert (offset is None) == (chunk == 1), (offset, chunk)
     s_steps = block_tables.shape[1]
 
-    def c_map(bb, g_, s, pos_ref, win_ref, bt_ref):
+    def c_map(bb, g_, s, pos_ref, win_ref, bt_ref, *rest):
         del g_
         blk = _clamped_block(s, pos_ref, win_ref, bb, page_size)
         return (bt_ref[bb, blk], 0, 0)
@@ -372,15 +421,19 @@ def flash_decode_mla_paged(q: jnp.ndarray, c_pages: jnp.ndarray,
             return lat, lat[:, :r]
         return load
 
+    scalars = (pos.astype(jnp.int32), window.astype(jnp.int32),
+               block_tables.astype(jnp.int32))
+    if chunk > 1:
+        scalars = scalars + (offset.astype(jnp.int32),)
     return _flash_core(
         q,
-        scalars=(pos.astype(jnp.int32), window.astype(jnp.int32),
-                 block_tables.astype(jnp.int32)),
+        scalars=scalars,
         tensors=(c_pages,),
         tensor_specs=[pl.BlockSpec((1, page_size, dk), c_map)],
         loader=mla_loader,
         out_width=r, bs=page_size, s_steps=s_steps, scale=scale,
-        interpret=interpret)
+        interpret=interpret, chunk=chunk, group=h // chunk,
+        off_idx=3 if chunk > 1 else None)
 
 
 # ----------------------------------------------------------------------------
@@ -783,3 +836,74 @@ def flash_decode_paged_mla_q8(q: jnp.ndarray, c_pages: jnp.ndarray,
                                     block_tables, hw, scale=scale, r=r,
                                     interpret=_interpret_default(interpret))
     return out if had_q_axis else out[:, 0]
+
+
+# ----------------------------------------------------------------------------
+# chunked-prefill wrappers (q_len > 1 through the same paged harness)
+# ----------------------------------------------------------------------------
+def _chunk_scalars(offset, limit, window, b: int, c: int, s_logical: int):
+    """Fetch-union scalars for a chunk of ``c`` query rows starting at
+    ``offset``: pos = the chunk's last VALID position (clamped below
+    ``limit`` so block-table indexing never walks past the prompt's
+    pages), win = per-row window widened by (c - 1) so the live-block
+    range covers the earliest row's reach."""
+    offv = _norm_scalar_vec(offset, b)
+    limv = _norm_scalar_vec(limit, b)
+    posv = jnp.clip(limv - 1, offv, offv + c - 1)
+    winv = _norm_scalar_vec(window, b, fill=s_logical + 1) + (c - 1)
+    return offv, posv, winv
+
+
+def flash_chunk_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
+                      v_pages: jnp.ndarray, offset, limit,
+                      block_tables: jnp.ndarray, *, scale: float,
+                      window=None, interpret=None) -> jnp.ndarray:
+    """Chunked-prefill GQA attention over a paged KV pool: the chunk's C
+    query tokens (absolute positions offset .. offset + C - 1) causally
+    attend everything already written for the request, including the
+    chunk's own rows (write the chunk to the pool FIRST, then call this).
+
+    q: (B, C, H, dh); k/v_pages: (P, page_size, Hkv, dh); offset/limit:
+    scalar or (B,) — rows at positions >= limit are padding (their
+    outputs are finite garbage; the caller discards them);
+    block_tables: (B, W) int32.
+
+    Returns (B, C, H, dh) in v_pages.dtype.
+    """
+    b, c, h, dh = q.shape
+    hkv = k_pages.shape[2]
+    g = h // hkv
+    # (B, C, Hkv, G, dh) -> (B, Hkv, C, G, dh) -> rows = C * G per KV head
+    qg = q.reshape(b, c, hkv, g, dh).transpose(0, 2, 1, 3, 4) \
+        .reshape(b, hkv, c * g, dh)
+    s_logical = block_tables.shape[1] * k_pages.shape[1]
+    offv, posv, winv = _chunk_scalars(offset, limit, window, b, c, s_logical)
+    out = flash_decode_gqa_paged(qg, k_pages, v_pages, posv, winv,
+                                 block_tables, offv, scale=scale, chunk=c,
+                                 interpret=_interpret_default(interpret))
+    out = out.reshape(b, hkv, c, g, dh).transpose(0, 2, 1, 3, 4) \
+        .reshape(b, c, h, dh)
+    return out.astype(v_pages.dtype)
+
+
+def flash_chunk_paged_mla(q: jnp.ndarray, c_pages: jnp.ndarray, offset,
+                          limit, block_tables: jnp.ndarray, *, r: int,
+                          scale: float, window=None,
+                          interpret=None) -> jnp.ndarray:
+    """Chunked-prefill absorbed-MLA attention over a paged latent pool:
+    same contract as :func:`flash_chunk_paged` with the absorbed query
+    layout of :func:`flash_decode_paged_mla`.
+
+    q: (B, C, H, r + d_rope); c_pages: (P, page_size, r + d_rope);
+    offset/limit: scalar or (B,); block_tables: (B, W) int32.
+
+    Returns (B, C, H, r) f32 (the caller applies ``W_uv`` once).
+    """
+    b, c, h, dk = q.shape
+    qg = q.reshape(b, 1, c * h, dk)      # row i -> position off + i // H
+    s_logical = block_tables.shape[1] * c_pages.shape[1]
+    offv, posv, winv = _chunk_scalars(offset, limit, window, b, c, s_logical)
+    out = flash_decode_mla_paged(qg, c_pages, posv, winv, block_tables,
+                                 offv, scale=scale, r=r, chunk=c,
+                                 interpret=_interpret_default(interpret))
+    return out.reshape(b, c, h, r)

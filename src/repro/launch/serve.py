@@ -409,25 +409,39 @@ class ContinuousScheduler:
     def done(self) -> bool:
         return not self.pending and not self.active
 
-    def try_admit(self):
-        """Pop (request, slot) pairs that fit the pool right now; the caller
-        runs the prefill and then calls :meth:`seed`."""
+    def try_admit(self, limit: Optional[int] = None):
+        """Pop (request, slot, plan) triples that fit the pool right now;
+        the caller runs the prefill the plan prescribes (COW copy, shared-
+        suffix start) and then calls :meth:`seed`. The plan comes from
+        ``PagedKVCache.admit_prompt``: with the prefix cache off it is
+        always the historical full-prefill plan.
+
+        ``limit`` caps the triples per call: the prefix-caching driver
+        admits one at a time (prefill + seal between calls) so a burst of
+        same-prompt requests shares the first tenant's freshly sealed
+        pages instead of planning the whole wave against the pre-seal
+        table."""
         admitted = []
-        while self.pending and self.free_slots:
-            blocks = self.kv.blocks_for(self.prompt_pad)
+        while self.pending and self.free_slots and \
+                (limit is None or len(admitted) < limit):
             slot = self.free_slots[-1]
-            if not self.kv.alloc_blocks(slot, blocks):
+            req = self.pending[0]
+            plan = self.kv.admit_prompt(slot, req.prompt,
+                                        pad_positions=self.prompt_pad)
+            if plan is None:
                 break                           # pool dry: wait for release
             self.free_slots.pop()
             # admission resets the slot's recurrent rows itself, so a
             # pending dirty mark would only re-zero the freshly
             # prefilled state — drop it
             self.dirty_slots = [s for s in self.dirty_slots if s != slot]
-            req = self.pending.popleft()
+            self.pending.popleft()
             self.events.emit('admit', step=self.step_no, rid=req.rid,
                              slot=slot,
-                             retries=self._retries.get(req.rid, 0))
-            admitted.append((req, slot))
+                             retries=self._retries.get(req.rid, 0),
+                             shared=plan['shared'],
+                             prefill_start=plan['prefill_start'])
+            admitted.append((req, slot, plan))
         return admitted
 
     def seed(self, req: Request, slot: int, first_token: int) -> None:
@@ -483,12 +497,16 @@ class ContinuousScheduler:
         """Poisoned lane (non-finite logits): discard its generated
         tokens, release-and-requeue the request (recompute-style, so the
         retry is lossless; counts against the retry budget), and return
-        the physical pages the lane owned so the caller can scrub them
-        BEFORE the free list hands them to another request."""
-        pages = [int(p) for p in
-                 self.kv.tables[slot, :int(self.kv.counts[slot])]]
+        the physical pages safe to scrub NOW, BEFORE the free list hands
+        them to another request. Every page the lane held is retired from
+        the prefix cache and marked scrub-before-reuse, but a sealed page
+        another tenant still references is NEVER scrubbed in place — it
+        stays immutable for its surviving owners and reaches the scrub
+        queue (drained by the serve loop before admissions) only on its
+        last release."""
+        self.kv.defer_scrub(slot)
         self._requeue(slot, kind='quarantine')
-        return pages
+        return self.kv.drain_scrub_queue()
 
     def _requeue(self, victim: int, *, kind: str) -> None:
         """Release ``victim`` and requeue its request at the queue front
@@ -590,6 +608,10 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
                      eos_id: Optional[int] = None,
                      max_steps: Optional[int] = None,
                      kv_quant: bool = False, hot_window: int = 2,
+                     prefix_cache: bool = False,
+                     chunk_prefill: Optional[int] = None,
+                     shared_prefix: Optional[int] = None,
+                     request_stream: Optional[List[Request]] = None,
                      deadline: Optional[int] = None,
                      retry_budget: Optional[int] = 8,
                      max_queue: Optional[int] = None,
@@ -651,6 +673,16 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
         raise ValueError(f'--kv-quant tiers paged attention KV; {arch} is '
                          f'family=ssm with recurrent state only (no int8 '
                          f'tier — drop --kv-quant)')
+    if (prefix_cache or chunk_prefill is not None) and \
+            (cfg.family == 'ssm' or cfg.hybrid_group):
+        # recurrent state folds the WHOLE prompt into one snapshot — there
+        # is no per-position cache to share or to prefill a suffix of
+        flag = '--prefix-cache' if prefix_cache else '--chunk-prefill'
+        raise ValueError(f'{flag} needs random-access paged attention '
+                         f'state; {arch} (family={cfg.family}, '
+                         f'hybrid_group={cfg.hybrid_group}) carries '
+                         f'recurrent state that must see every prompt '
+                         f'position')
     yoco = YocoConfig(mode=mode)
     rt = ModelRuntime(attn_impl=attn_impl)
     max_seq = prompt_len + gen_len
@@ -663,7 +695,8 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
         raise ValueError(f'pool too small: a full {max_seq}-token sequence '
                          f'needs {max_blocks} pages, pool has '
                          f'{num_pages - 1} allocatable')
-    kv = kvc.PagedKVCache(num_pages, page_size, max_blocks, slots)
+    kv = kvc.PagedKVCache(num_pages, page_size, max_blocks, slots,
+                          prefix_cache=prefix_cache)
     events = faults_mod.EventLog()
     telem = None
     if metrics or trace:
@@ -685,7 +718,16 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
     dc = synthetic.for_arch(cfg, global_batch=max(n_requests, 1),
                             seq_len=prompt_len)
     prompts = np.asarray(synthetic.make_batch(dc, 0)['inputs'])
-    for req in _ragged_stream(n_requests, prompt_len, gen_len, prompts):
+    if shared_prefix:
+        # every synthetic prompt opens with the same "system prompt": the
+        # stream that makes --prefix-cache demonstrable from the CLI
+        prompts = prompts.copy()
+        prompts[:, :shared_prefix] = prompts[0, :shared_prefix]
+    stream = (request_stream if request_stream is not None
+              else _ragged_stream(n_requests, prompt_len, gen_len, prompts))
+    if request_stream is not None:
+        n_requests = len(request_stream)
+    for req in stream:
         req.ttl_steps = deadline
         if injector is not None:
             mangled = injector.mangle(req, prompt_pad=prompt_len,
@@ -721,6 +763,16 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
         nonlocal n_pages_quantized, n_pages_quant_dropped
         by_slot = sched.aged_out()
         pages = [p for ps_ in by_slot.values() for p in ps_]
+        if prefix_cache:
+            # quantize-once-per-page under sharing: a sealed page ages out
+            # of EVERY owner's hot window, but its int8 twin is content-
+            # addressed like the page itself — quantize it the first time
+            # only (release/eviction clears the mark, so a recycled page
+            # re-quantizes for its next tenant). dict.fromkeys dedupes
+            # within the step too: a burst-admitted prefix ages out of
+            # every owner's aligned hot window on the SAME step
+            pages = [p for p in dict.fromkeys(pages)
+                     if p not in kv.quantized_pages]
         if pages and injector is not None and injector.drop_quant_now():
             # the tier tracker already advanced: these pages stay zero in
             # the int8 tier forever, so the affected requests' outputs
@@ -733,7 +785,12 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
             n_pages_quant_dropped += len(pages)
             return cache
         n_pages_quantized += len(pages)
+        if prefix_cache:
+            kv.quantized_pages.update(pages)
         return in_page_chunks(quantize_fn, cache, pages)
+
+    has_recurrent = cfg.family == 'ssm' or bool(cfg.hybrid_group)
+    has_pool = cfg.family != 'ssm'      # pure-SSM trees carry no fp pool
 
     # chaos-layer device ops, compiled lazily on first fault so the happy
     # path pays nothing
@@ -758,6 +815,57 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
 
     prefill_fn = jax.jit(SS.make_prefill_step(cfg, yoco, rt),
                          donate_argnums=(2,))
+    # chunked prefill: prefix-cache hits MUST take it (a monolithic padded
+    # prefill would rewrite the shared pages it just acquired); misses take
+    # it only when --chunk-prefill asks for admission/decode interleaving.
+    # One chunk width per run = one extra jit signature.
+    chunk_c = max(1, chunk_prefill if chunk_prefill is not None
+                  else page_size)
+    chunk_fn = (jax.jit(SS.make_chunk_prefill_step(cfg, yoco, rt),
+                        donate_argnums=(4,))
+                if (prefix_cache or chunk_prefill is not None) else None)
+    cow_fn = (jax.jit(layouts_mod.copy_tree_pages, donate_argnums=(0,))
+              if prefix_cache else None)
+    tail_fn = (jax.jit(layouts_mod.zero_tree_tail, donate_argnums=(0,))
+               if has_pool else None)
+
+    def run_prefill(part, req, slot, plan):
+        """Admission prefill over the slot-sliced tree ``part``, following
+        the allocator's plan: COW-split the boundary page, compute only
+        [prefill_start, plen) (chunked when the plan or --chunk-prefill
+        demands it), then zero the padded tail rows of the last owned page
+        so no stale bytes of a previous tenant survive into state that
+        :meth:`PagedKVCache.seal_slot` is about to publish."""
+        plen = len(req.prompt)
+        if plan['cow'] is not None:
+            src, dst = plan['cow']
+            part = cow_fn(part, jnp.asarray(src, jnp.int32),
+                          jnp.asarray(dst, jnp.int32))
+        if chunk_fn is not None and (plan['hit']
+                                     or chunk_prefill is not None):
+            lim = jnp.asarray([plen], jnp.int32)
+            logits = None
+            for off in range(plan['prefill_start'], plen, chunk_c):
+                ck = np.zeros((1, chunk_c), np.int32)
+                seg = req.prompt[off:off + chunk_c]
+                ck[0, :len(seg)] = seg
+                logits, part = chunk_fn(params,
+                                        dict(inputs=jnp.asarray(ck)),
+                                        jnp.asarray([off], jnp.int32),
+                                        lim, part)
+        else:
+            pad = np.zeros((prompt_len,), np.int32)
+            pad[:plen] = req.prompt
+            logits, part = prefill_fn(params,
+                                      dict(inputs=jnp.asarray(pad[None])),
+                                      part, jnp.asarray([plen - 1]))
+        if tail_fn is not None:
+            stop = int(kv.counts[slot]) * page_size
+            if plen < stop:
+                part = tail_fn(part, jnp.asarray(kv.tables[slot]),
+                               jnp.asarray(plen, jnp.int32),
+                               jnp.asarray(stop, jnp.int32))
+        return logits, part
 
     def build_decode(impl):
         return jax.jit(
@@ -790,11 +898,37 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
     steps = busy_slot_steps = 0
     peak_pages = 0
     t_prefill = 0.0
+
+    def _admit_one(req, slot, plan):
+        """One admission, every layout: zero the slot's recurrent rows (a
+        fresh request must not see the evicted tenant's state), prefill a
+        batch-1 view — recurrent leaves sliced to the slot (a copy, so the
+        full tree survives the donated prefill), paged pools by reference
+        — then fold the prefilled state back in. On attention-only trees
+        the slice/merge walks are the identity. ``run_prefill`` follows
+        the allocator's plan (COW copy, shared-suffix start, padded-tail
+        zeroing); sealing right after prefill lets the NEXT admission of
+        this same step share the pages just published."""
+        nonlocal cache, t_prefill
+        tp = time.perf_counter()
+        cache = layouts_mod.reset_state_slots(cache, [slot])
+        part = layouts_mod.slice_state_slot(
+            kvc.with_block_tables(cache, kv.tables[slot:slot + 1]), slot)
+        logits, part = run_prefill(part, req, slot, plan)
+        cache = layouts_mod.merge_state_slot(cache, part, slot)
+        kv.seal_slot(slot, req.prompt)
+        tp_end = time.perf_counter()
+        t_prefill += tp_end - tp
+        # the admit event predates the prefill; attach the measured
+        # duration so spans (TTFT) derive from the log alone
+        events.annotate_last('admit', req.rid, prefill_s=tp_end - tp)
+        if telem is not None:
+            telem.prefill(rid=req.rid, slot=slot, t_start=tp, t_end=tp_end)
+        sched.seed(req, slot, first_token(logits))
+
     t0 = time.time()
     limit = max_steps if max_steps is not None else \
         n_requests * (prompt_len + gen_len) * 4 + 64
-    has_recurrent = cfg.family == 'ssm' or bool(cfg.hybrid_group)
-    has_pool = cfg.family != 'ssm'      # pure-SSM trees carry no fp pool
     while not sched.done and steps < limit:
         t_step0 = time.perf_counter()
         sched.begin_step(steps)
@@ -822,34 +956,24 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
                 if rid is not None:
                     sched.cancel(rid)
         # --- admit on release -------------------------------------------
-        for req, slot in sched.try_admit():
-            pad = np.zeros((prompt_len,), np.int32)
-            pad[:len(req.prompt)] = req.prompt
-            tp = time.perf_counter()
-            # one admission path for every layout: zero the slot's
-            # recurrent rows (a fresh request must not see the evicted
-            # tenant's state), prefill a batch-1 view — recurrent leaves
-            # sliced to the slot (a copy, so the full tree survives the
-            # donated prefill), paged pools by reference — then fold the
-            # prefilled state back in. On attention-only trees the
-            # slice/merge walks are the identity and this is exactly the
-            # old `cache = pc`.
-            cache = layouts_mod.reset_state_slots(cache, [slot])
-            part = layouts_mod.slice_state_slot(
-                kvc.with_block_tables(cache, kv.tables[slot:slot + 1]), slot)
-            logits, part = prefill_fn(params,
-                                      dict(inputs=jnp.asarray(pad[None])),
-                                      part, jnp.asarray([len(req.prompt) - 1]))
-            cache = layouts_mod.merge_state_slot(cache, part, slot)
-            tp_end = time.perf_counter()
-            t_prefill += tp_end - tp
-            # the admit event predates the prefill; attach the measured
-            # duration so spans (TTFT) derive from the log alone
-            events.annotate_last('admit', req.rid, prefill_s=tp_end - tp)
-            if telem is not None:
-                telem.prefill(rid=req.rid, slot=slot, t_start=tp,
-                              t_end=tp_end)
-            sched.seed(req, slot, first_token(logits))
+        if has_pool:
+            # deferred scrubs: pages a quarantined tenant shared with a
+            # then-live lane reach the queue on that lane's own release —
+            # zero them before the free list can hand them out again
+            deferred = kv.drain_scrub_queue()
+            if deferred:
+                cache = scrub_pages(cache, deferred)
+        # prefix caching admits one at a time (prefill + seal between
+        # admissions) so same-step bursts share the first tenant's pages
+        admit_limit = 1 if prefix_cache else None
+        while True:
+            batch = sched.try_admit(limit=admit_limit)
+            if not batch:
+                break
+            for req, slot, plan in batch:
+                _admit_one(req, slot, plan)
+            if admit_limit is None:
+                break
         if sched.done:
             break
         if injector is not None:
@@ -884,9 +1008,15 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
             if cand:
                 slot, page = injector.pick(cand)
                 cache = poison_page_op(cache, page)
+                # a shared page poisons EVERY owner: each one trips the
+                # sentinel below, and the first quarantine retires the
+                # page from the prefix table so no later admission can
+                # acquire the suspect content
+                owners = kv.owners_of(page) if prefix_cache else [slot]
                 events.emit('fault', step=steps, fault='poison_page',
                             slot=slot, page=page,
-                            rid=sched.active[slot].req.rid)
+                            rid=sched.active[slot].req.rid,
+                            owners=owners)
         poison_slot = None
         if (injector is not None and sched.active
                 and injector.poison_logits_now()):
@@ -1000,6 +1130,14 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
         hot_window=hot_window if kv_quant else None,
         pages_quantized=n_pages_quantized,
         pages_quant_dropped=n_pages_quant_dropped,
+        prefix=(dict(hits=kv.prefix_hits, misses=kv.prefix_misses,
+                     evictions=kv.prefix_evictions,
+                     cow_copies=kv.cow_copies,
+                     cached_pages=kv.cached_pages,
+                     shared_pages=kv.shared_pages)
+                if prefix_cache else None),
+        chunk_prefill=(chunk_c if (prefix_cache or chunk_prefill is not None)
+                       else None),
         events=evc,
         faults=(dict(injector.counts) if injector is not None else None),
         # admit/evict churn must never retrace: idle slots keep the step
@@ -1070,6 +1208,20 @@ def main(argv=None):
     ap.add_argument('--hot-window', type=int, default=2,
                     help='full-precision pages per request (>= 1; '
                          '>= max_blocks disables the int8 tier)')
+    ap.add_argument('--prefix-cache', action='store_true',
+                    help='continuous mode: refcounted sharing of sealed '
+                         'full-block prompt pages across requests, with '
+                         'copy-on-write at the shared/private boundary '
+                         '(attention families only)')
+    ap.add_argument('--chunk-prefill', type=int, default=None, metavar='C',
+                    help='prefill prompts in C-token chunks through the '
+                         'paged chunk kernel instead of one monolithic '
+                         'padded call (implied for prefix-cache hits; '
+                         'attention families only)')
+    ap.add_argument('--shared-prefix', type=int, default=None, metavar='N',
+                    help='give every synthetic request the same leading N '
+                         'tokens (a shared system prompt) — pair with '
+                         '--prefix-cache to observe hits')
     ap.add_argument('--deadline', type=int, default=None,
                     help='per-request TTL in scheduler steps (continuous '
                          'mode); expired requests fail terminally')
@@ -1111,6 +1263,9 @@ def main(argv=None):
                          temperature=args.temperature, top_k=args.top_k,
                          eos_id=args.eos_id, kv_quant=args.kv_quant,
                          hot_window=args.hot_window,
+                         prefix_cache=args.prefix_cache,
+                         chunk_prefill=args.chunk_prefill,
+                         shared_prefix=args.shared_prefix,
                          deadline=args.deadline,
                          retry_budget=(None if args.retry_budget < 0
                                        else args.retry_budget),

@@ -195,6 +195,21 @@ def decode_mask(pos: jnp.ndarray, smax: int,
     return jnp.where(ok, 0.0, NEG_INF)
 
 
+def chunk_mask(offset, c: int, smax: int, window=None) -> jnp.ndarray:
+    """(B, C, smax) additive causal mask for a prefill chunk whose C query
+    rows sit at absolute positions offset[b] .. offset[b] + C - 1 against
+    a length-``smax`` densified cache view. Rows past the prompt length
+    mask like real rows (their outputs are finite garbage the caller
+    discards)."""
+    qp = (jnp.asarray(offset, jnp.int32).reshape(-1, 1, 1)
+          + jnp.arange(c, dtype=jnp.int32)[None, :, None])
+    kpos = jnp.arange(smax, dtype=jnp.int32)[None, None, :]
+    ok = kpos <= qp
+    if window is not None:
+        ok &= kpos > qp - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
 def _cache_update(c: jnp.ndarray, t: jnp.ndarray, pos) -> jnp.ndarray:
     """Write the step's K/V slab ``t`` (B, 1, ...) into a contiguous cache
     ``c`` (B, S_max, ...) at absolute position ``pos`` (scalar, or (B,)
@@ -337,6 +352,42 @@ def attention_decode(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
         kd, vd = layout.gather(new_cache, posr)
         out = sdpa_decode(q, kd, vd, posr, scale, window)
     out = yoco_linear.linear(out.reshape(b, 1, -1), p['wo'], cfg=yoco)
+    return out, new_cache
+
+
+def attention_chunk(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
+                    cache: dict, offset: jnp.ndarray, limit: jnp.ndarray,
+                    window: Optional[int] = None,
+                    theta: Optional[float] = None,
+                    rt=None,
+                    ) -> Tuple[jnp.ndarray, dict]:
+    """Chunked prefill: C tokens of a longer prompt, at absolute positions
+    offset[b] .. offset[b] + C - 1, attending everything already written
+    into the paged cache (earlier chunks + any shared prefix pages) plus
+    the chunk itself. x: (B, C, d); ``offset``/``limit``: (B,) int32 —
+    rows at positions >= limit are padding (written to the garbage page,
+    outputs discarded by the caller). Reads go through the fp pools only
+    (just-written pages are never quantized yet)."""
+    b, c, _ = x.shape
+    dh = cfg.resolved_head_dim
+    theta = theta if theta is not None else cfg.rope_theta
+    offset = jnp.asarray(offset, jnp.int32).reshape(-1)
+    positions = offset[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    q, k, v = _project_qkv(p, x, cfg, yoco, positions, theta)
+    scale = 1.0 / float(dh) ** 0.5
+    from repro.runtime import layouts
+    layout = layouts.get_layout(cache)
+    new_cache = layout.write_chunk(cache, dict(k=k, v=v), offset, limit)
+    use_flash = (rt is not None
+                 and getattr(rt, 'attn_impl', 'einsum') == 'flash')
+    if use_flash:
+        out = layout.flash_chunk(q, new_cache, offset, limit, scale=scale,
+                                 window=window)
+    else:
+        kd, vd = layout.gather_fp(new_cache)
+        mask = chunk_mask(offset, c, kd.shape[1], window)
+        out = _sdpa(q, kd, vd, mask[:, None, None, :, :], scale)
+    out = yoco_linear.linear(out.reshape(b, c, -1), p['wo'], cfg=yoco)
     return out, new_cache
 
 
@@ -565,5 +616,67 @@ def mla_attention_decode(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
 
     out = jnp.einsum('bqhr,rhd->bqhd', o_lat, w_uv.astype(jnp.float32))
     out = out.reshape(b, 1, -1).astype(x.dtype)
+    out = yoco_linear.linear(out, p['wo'], cfg=yoco)
+    return out, new_cache
+
+
+def mla_attention_chunk(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
+                        cache: dict, offset: jnp.ndarray,
+                        limit: jnp.ndarray, rt=None,
+                        ) -> Tuple[jnp.ndarray, dict]:
+    """Chunked MLA prefill through the absorbed decode math: C tokens at
+    absolute positions offset[b] .. offset[b] + C - 1 attend the paged
+    latent cache (earlier chunks + shared prefix pages + the chunk
+    itself). Same contract as :func:`attention_chunk`; reads are fp-pool
+    only and W_uv is applied once, outside the softmax."""
+    m = cfg.mla
+    b, c, _ = x.shape
+    h = cfg.n_heads
+    offset = jnp.asarray(offset, jnp.int32).reshape(-1)
+    positions = offset[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    cq = rmsnorm(yoco_linear.linear(x, p['w_dq'], cfg=yoco), p['q_ln'])
+    q = yoco_linear.linear(cq, p['w_uq'], cfg=yoco)
+    q = q.reshape(b, c, h, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+    q_rope = rope_mod.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = yoco_linear.linear(x, p['w_dkv'], cfg=yoco)
+    ckv_t = rmsnorm(dkv[..., :m.kv_lora_rank], p['kv_ln'])
+    krope_t = dkv[..., m.kv_lora_rank:]
+    krope_t = rope_mod.apply_rope(krope_t[:, :, None, :], positions,
+                                  cfg.rope_theta)[:, :, 0, :]
+
+    w_ukv = p['w_ukv'].reshape(m.kv_lora_rank, h,
+                               m.nope_head_dim + m.v_head_dim)
+    w_uk = w_ukv[..., :m.nope_head_dim]
+    w_uv = w_ukv[..., m.nope_head_dim:]
+    q_lat = jnp.einsum('bqhd,rhd->bqhr', q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scale = 1.0 / float(m.nope_head_dim + m.rope_head_dim) ** 0.5
+
+    from repro.runtime import layouts
+    layout = layouts.get_layout(cache)
+    r = m.kv_lora_rank
+    new_cache = layout.write_chunk(cache, dict(ckv=ckv_t, krope=krope_t),
+                                   offset, limit)
+    use_flash = (rt is not None
+                 and getattr(rt, 'attn_impl', 'einsum') == 'flash')
+    if use_flash and layout.paged:
+        o_lat = layout.flash_chunk(
+            jnp.concatenate([q_lat, q_rope.astype(jnp.float32)], -1),
+            new_cache, offset, limit, scale=scale, r=r)
+    else:
+        ckv_d, krope_d = layout.gather_fp(new_cache, r=r)
+        lo = jnp.einsum('bqhr,bsr->bhqs', q_lat,
+                        ckv_d.astype(jnp.float32))
+        lo += jnp.einsum('bqhd,bsd->bhqs', q_rope.astype(jnp.float32),
+                         krope_d.astype(jnp.float32))
+        mask = chunk_mask(offset, c, ckv_d.shape[1])
+        probs = jax.nn.softmax(lo * scale + mask[:, None, :, :], axis=-1)
+        o_lat = jnp.einsum('bhqs,bsr->bqhr', probs,
+                           ckv_d.astype(jnp.float32))
+
+    out = jnp.einsum('bqhr,rhd->bqhd', o_lat, w_uv.astype(jnp.float32))
+    out = out.reshape(b, c, -1).astype(x.dtype)
     out = yoco_linear.linear(out, p['wo'], cfg=yoco)
     return out, new_cache

@@ -210,7 +210,8 @@ def _head(params: dict, x: jnp.ndarray, cfg, yoco: YocoConfig) -> jnp.ndarray:
 # layer-stack drivers (train / prefill / decode share these)
 # ----------------------------------------------------------------------------
 def _transformer_stack(stack: dict, x: jnp.ndarray, cfg, yoco, rt, *,
-                       cache: Optional[dict], decode_pos, use_moe: bool):
+                       cache: Optional[dict], decode_pos, use_moe: bool,
+                       chunk_ctx=None):
     """Scan a homogeneous transformer stack. cache: stacked (L, ...) or None.
     Returns (x, new_cache, aux_sum)."""
     gemma = cfg.local_global_every > 0
@@ -230,7 +231,8 @@ def _transformer_stack(stack: dict, x: jnp.ndarray, cfg, yoco, rt, *,
             th = None
         h, new_lc, metrics = blk.transformer_block(
             lp, h, cfg, yoco, window=win, theta=th, cache=lc,
-            decode_pos=decode_pos, moe_ctx=moe_ctx, rt=rt)
+            decode_pos=decode_pos, moe_ctx=moe_ctx, rt=rt,
+            chunk_ctx=chunk_ctx)
         h = _constrain(h, rt)
         aux = aux + (metrics.get('aux_loss', 0.0) if use_moe else 0.0)
         return (h, aux), new_lc
@@ -259,18 +261,27 @@ def _tree_slice(tree, lo: int, hi: int):
 
 
 def _backbone(params: dict, x: jnp.ndarray, cfg, yoco, rt, *,
-              cache: Optional[dict], decode_pos, last_pos=None):
+              cache: Optional[dict], decode_pos, last_pos=None,
+              chunk_ctx=None):
     """Run all sequence-mixing layers. Returns (x, new_cache, aux).
 
     ``last_pos`` (prefill only): per-request last valid prompt positions
     of a right-padded batch. Attention layers ignore it (the causal mask
     plus decode's write-before-attend already keep padded keys inert) but
     mamba layers must mask the padded steps' dt to 0 so the recurrent
-    state snapshot equals the unpadded prompt's state."""
+    state snapshot equals the unpadded prompt's state.
+
+    ``chunk_ctx`` (dict(offset=, limit=)) runs the attention layers in
+    chunked-prefill mode — attention-only families (recurrent state has
+    no random-access positions to resume a chunk from)."""
     aux = jnp.float32(0.0)
     new_cache: Optional[dict] = None
     if decode_pos is not None:
         last_pos = None     # decode steps have no padding to mask
+    if chunk_ctx is not None and (cfg.family == 'ssm' or cfg.hybrid_group):
+        raise NotImplementedError(
+            f'chunked prefill needs random-access cache positions; '
+            f'family={cfg.family!r} carries recurrent state')
     if cfg.family == 'ssm':
         st = cache['ssm'] if cache is not None else None
         x, new_st = _mamba_stack(params['layers'], x, cfg, yoco, rt,
@@ -319,10 +330,10 @@ def _backbone(params: dict, x: jnp.ndarray, cfg, yoco, rt, *,
         mc = cache['moe'] if cache is not None else None
         x, npc, _ = _transformer_stack(params['dense_prefix'], x, cfg, yoco,
                                        rt, cache=pc, decode_pos=decode_pos,
-                                       use_moe=False)
+                                       use_moe=False, chunk_ctx=chunk_ctx)
         x, nmc, aux = _transformer_stack(params['layers'], x, cfg, yoco, rt,
                                          cache=mc, decode_pos=decode_pos,
-                                         use_moe=True)
+                                         use_moe=True, chunk_ctx=chunk_ctx)
         if cache is not None:
             new_cache = dict(prefix=npc, moe=nmc)
     else:
@@ -330,7 +341,8 @@ def _backbone(params: dict, x: jnp.ndarray, cfg, yoco, rt, *,
         lc = cache['layers'] if cache is not None else None
         x, nlc, aux = _transformer_stack(params['layers'], x, cfg, yoco, rt,
                                          cache=lc, decode_pos=decode_pos,
-                                         use_moe=use_moe)
+                                         use_moe=use_moe,
+                                         chunk_ctx=chunk_ctx)
         if cache is not None:
             new_cache = dict(layers=nlc)
     return x, new_cache, aux
@@ -476,6 +488,38 @@ def prefill(params: dict, batch: dict, cache: dict, cfg,
     else:
         idx = jnp.asarray(last_pos, jnp.int32).reshape(-1, 1, 1)
         x = jnp.take_along_axis(x, idx, axis=1)
+    x = apply_norm(params['final_norm'], x, cfg)
+    logits = _head(params, x, cfg, yoco)
+    return logits[:, 0], new_cache
+
+
+def prefill_chunk(params: dict, batch: dict, offset, limit, cache: dict,
+                  cfg, yoco: YocoConfig = DEFAULT_YOCO,
+                  rt: ModelRuntime = DEFAULT_RT) -> Tuple[jnp.ndarray, dict]:
+    """Process ONE C-token chunk of a longer prompt into a paged cache.
+
+    ``batch['inputs']``: the chunk's (B, C) tokens; ``offset``/``limit``:
+    (B,) int32 — the chunk covers absolute positions
+    [offset, min(offset + C, limit)); rows past ``limit`` are padding
+    (written to the garbage page, excluded from attention by every other
+    row's causal mask). Earlier chunks — and any shared prefix pages the
+    scheduler pointed the block table at — are already in the cache, so
+    chunk k attends [0, offset_k + C) exactly like a monolithic prefill
+    would. Returns logits gathered at the chunk row holding position
+    ``limit - 1`` (meaningful on the final chunk only) and the updated
+    cache. Attention-only families."""
+    x = _embed(params, batch, cfg, rt)
+    c = x.shape[1]
+    b = x.shape[0]
+    offset = jnp.broadcast_to(
+        jnp.asarray(offset, jnp.int32).reshape(-1), (b,))
+    limit = jnp.broadcast_to(
+        jnp.asarray(limit, jnp.int32).reshape(-1), (b,))
+    x, new_cache, _ = _backbone(params, x, cfg, yoco, rt, cache=cache,
+                                decode_pos=None,
+                                chunk_ctx=dict(offset=offset, limit=limit))
+    idx = jnp.clip(limit - 1 - offset, 0, c - 1).reshape(-1, 1, 1)
+    x = jnp.take_along_axis(x, idx, axis=1)
     x = apply_norm(params['final_norm'], x, cfg)
     logits = _head(params, x, cfg, yoco)
     return logits[:, 0], new_cache

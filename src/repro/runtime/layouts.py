@@ -165,6 +165,14 @@ class CacheLayout:
     def write_prefill(cls, cache: dict, updates: dict) -> dict:
         raise NotImplementedError
 
+    @classmethod
+    def write_chunk(cls, cache: dict, updates: dict, offset, limit) -> dict:
+        """Write a prefill chunk's rows at absolute positions
+        [offset, offset + C); rows at or beyond ``limit`` clamp onto the
+        garbage page (chunked prefill never writes padding into owned —
+        possibly shared — pages). Paged layouts only."""
+        raise NotImplementedError(f'{cls.name} has no chunked-prefill path')
+
     # -- densify oracle / kernel entrypoint ---------------------------------
     @classmethod
     def gather(cls, cache: dict, pos, r: Optional[int] = None):
@@ -175,11 +183,29 @@ class CacheLayout:
         raise NotImplementedError
 
     @classmethod
+    def gather_fp(cls, cache: dict, r: Optional[int] = None):
+        """Full-precision-pool densify, ignoring any int8 tier — the
+        chunked-prefill read path: pages written moments ago by earlier
+        chunks are not quantized yet, so tier mixing would read zeros.
+        The fp pools always hold the authoritative content (quantization
+        copies, never moves). Defaults to :meth:`gather` for layouts
+        without a tier."""
+        return cls.gather(cache, 0, r=r)
+
+    @classmethod
     def flash_decode(cls, q, cache: dict, pos, *, scale, window=None,
                      interpret=None, r: Optional[int] = None):
         """Route the decode read through this layout's Pallas kernel
         (``r`` is the static latent rank, MLA layouts only)."""
         raise NotImplementedError
+
+    @classmethod
+    def flash_chunk(cls, q, cache: dict, offset, limit, *, scale,
+                    window=None, interpret=None, r: Optional[int] = None):
+        """Route a chunked-prefill read (q_len > 1) through the paged
+        flash kernel. Reads the fp pools only (same rationale as
+        :meth:`gather_fp`). Paged layouts only."""
+        raise NotImplementedError(f'{cls.name} has no chunked-prefill path')
 
     # -- tier ops (quantized layouts only) ----------------------------------
     @classmethod
@@ -232,10 +258,21 @@ class PagedMLAQ8Layout(CacheLayout):
             cache['cl'], _latent_row(updates), cache['bt']))
 
     @classmethod
+    def write_chunk(cls, cache, updates, offset, limit):
+        return dict(cache, cl=kvc.paged_chunk_update(
+            cache['cl'], _latent_row(updates), offset, limit, cache['bt']))
+
+    @classmethod
     def gather(cls, cache, pos, r=None):
         assert r is not None, 'MLA gathers need the static latent rank r'
         dense = kvq.dequant_gather_mla(
             cache, _pos_vec(pos, cache['bt'].shape[0]))
+        return dense[..., :r], dense[..., r:]
+
+    @classmethod
+    def gather_fp(cls, cache, r=None):
+        assert r is not None, 'MLA gathers need the static latent rank r'
+        dense = kvc.gather_pages(cache['cl'], cache['bt'])
         return dense[..., :r], dense[..., r:]
 
     @classmethod
@@ -246,6 +283,15 @@ class PagedMLAQ8Layout(CacheLayout):
             q, cache['cl'], cache['clq'], cache['cs'], pos, cache['bt'],
             cache['hw'], r=r, scale=scale, window=window,
             interpret=interpret)
+
+    @classmethod
+    def flash_chunk(cls, q, cache, offset, limit, *, scale, window=None,
+                    interpret=None, r=None):
+        # fp pool only: earlier chunks' pages are not quantized yet
+        from repro.kernels import flash_decode as fd
+        return fd.flash_chunk_paged_mla(q, cache['cl'], offset, limit,
+                                        cache['bt'], r=r, scale=scale,
+                                        window=window, interpret=interpret)
 
     @classmethod
     def quantize_pages(cls, cache, pages):
@@ -277,6 +323,11 @@ class PagedMLALayout(CacheLayout):
             cache['cl'], _latent_row(updates), cache['bt']))
 
     @classmethod
+    def write_chunk(cls, cache, updates, offset, limit):
+        return dict(cache, cl=kvc.paged_chunk_update(
+            cache['cl'], _latent_row(updates), offset, limit, cache['bt']))
+
+    @classmethod
     def gather(cls, cache, pos, r=None):
         del pos
         assert r is not None, 'MLA gathers need the static latent rank r'
@@ -290,6 +341,14 @@ class PagedMLALayout(CacheLayout):
         return fd.flash_decode_paged_mla(q, cache['cl'], pos, cache['bt'],
                                          r=r, scale=scale, window=window,
                                          interpret=interpret)
+
+    @classmethod
+    def flash_chunk(cls, q, cache, offset, limit, *, scale, window=None,
+                    interpret=None, r=None):
+        from repro.kernels import flash_decode as fd
+        return fd.flash_chunk_paged_mla(q, cache['cl'], offset, limit,
+                                        cache['bt'], r=r, scale=scale,
+                                        window=window, interpret=interpret)
 
 
 @_register
@@ -328,10 +387,25 @@ class PagedQ8Layout(CacheLayout):
                                        cache['bt']))
 
     @classmethod
+    def write_chunk(cls, cache, updates, offset, limit):
+        return dict(
+            cache,
+            k=kvc.paged_chunk_update(cache['k'], updates['k'], offset,
+                                     limit, cache['bt']),
+            v=kvc.paged_chunk_update(cache['v'], updates['v'], offset,
+                                     limit, cache['bt']))
+
+    @classmethod
     def gather(cls, cache, pos, r=None):
         del r
         return kvq.dequant_gather(cache, _pos_vec(pos,
                                                   cache['bt'].shape[0]))
+
+    @classmethod
+    def gather_fp(cls, cache, r=None):
+        del r
+        return (kvc.gather_pages(cache['k'], cache['bt']),
+                kvc.gather_pages(cache['v'], cache['bt']))
 
     @classmethod
     def flash_decode(cls, q, cache, pos, *, scale, window=None,
@@ -342,6 +416,16 @@ class PagedQ8Layout(CacheLayout):
             q, cache['k'], cache['v'], cache['kq'], cache['vq'],
             cache['ks'], cache['vs'], pos, cache['bt'], cache['hw'],
             scale=scale, window=window, interpret=interpret)
+
+    @classmethod
+    def flash_chunk(cls, q, cache, offset, limit, *, scale, window=None,
+                    interpret=None, r=None):
+        # fp pools only: earlier chunks' pages are not quantized yet
+        del r
+        from repro.kernels import flash_decode as fd
+        return fd.flash_chunk_paged(q, cache['k'], cache['v'], offset,
+                                    limit, cache['bt'], scale=scale,
+                                    window=window, interpret=interpret)
 
     @classmethod
     def quantize_pages(cls, cache, pages):
@@ -378,6 +462,15 @@ class PagedLayout(CacheLayout):
                                        cache['bt']))
 
     @classmethod
+    def write_chunk(cls, cache, updates, offset, limit):
+        return dict(
+            cache,
+            k=kvc.paged_chunk_update(cache['k'], updates['k'], offset,
+                                     limit, cache['bt']),
+            v=kvc.paged_chunk_update(cache['v'], updates['v'], offset,
+                                     limit, cache['bt']))
+
+    @classmethod
     def gather(cls, cache, pos, r=None):
         del pos, r
         return (kvc.gather_pages(cache['k'], cache['bt']),
@@ -391,6 +484,15 @@ class PagedLayout(CacheLayout):
         return fd.flash_decode_paged(q, cache['k'], cache['v'], pos,
                                      cache['bt'], scale=scale,
                                      window=window, interpret=interpret)
+
+    @classmethod
+    def flash_chunk(cls, q, cache, offset, limit, *, scale, window=None,
+                    interpret=None, r=None):
+        del r
+        from repro.kernels import flash_decode as fd
+        return fd.flash_chunk_paged(q, cache['k'], cache['v'], offset,
+                                    limit, cache['bt'], scale=scale,
+                                    window=window, interpret=interpret)
 
 
 @_register
@@ -608,6 +710,79 @@ def scrub_tree_pages(cache_tree, pages: jnp.ndarray):
             if lay is not None and lay.scrub_leaves:
                 return _page_indexed_update(node, lay, lay.scrub_leaves,
                                             pages, 0)
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    return walk(cache_tree)
+
+
+def copy_tree_pages(cache_tree, src: int, dst: int):
+    """Copy ONE physical page's content ``src`` -> ``dst`` in every
+    per-page leaf (fp pools, int8 tiers, scales) of every paged node —
+    the copy-on-write split: a request that matched a full cached prefix
+    gets a private copy of the boundary page before its first write, so
+    the shared original is never mutated. Copying the int8 tier and
+    scales too keeps the new owner's tier state consistent if the source
+    page had already aged out and quantized."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+
+    def walk(node):
+        if isinstance(node, dict):
+            lay = match_layout(node)
+            if lay is not None and lay.scrub_leaves:
+                stacked = node[lay.table_leaves[0]].ndim == 3
+                out = dict(node)
+                for key in lay.scrub_leaves:
+                    leaf = node[key]
+                    if stacked:
+                        out[key] = leaf.at[:, dst].set(leaf[:, src])
+                    else:
+                        out[key] = leaf.at[dst].set(leaf[src])
+                return out
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    return walk(cache_tree)
+
+
+def zero_tree_tail(cache_tree, table_row: jnp.ndarray, start: int,
+                   stop: int):
+    """Zero the logical rows [start, stop) of one request's pages in
+    every paged node's fp pools, following its block-table row
+    ``table_row`` (W,). The monolithic prefill pads prompts to a page
+    multiple and writes the padded tail rows into owned pages; with
+    prefix sharing those rows become publishable (sealed) state, so the
+    driver zeroes them right after prefill. Rows outside [start, stop)
+    redirect onto the garbage page 0 (never read), so the update is a
+    single static-shape scatter."""
+    table_row = jnp.asarray(table_row, jnp.int32).reshape(-1)
+    start = jnp.asarray(start, jnp.int32)   # traced: one jit shape covers
+    stop = jnp.asarray(stop, jnp.int32)     # every (plen, blocks) pair
+
+    def zero_node(lay, node):
+        stacked = node[lay.table_leaves[0]].ndim == 3
+        out = dict(node)
+        for key in lay.poison_leaves:
+            pool = node[key]
+            ps = pool.shape[2] if stacked else pool.shape[1]
+            w = table_row.shape[0]
+            logical = jnp.arange(w * ps, dtype=jnp.int32)
+            live = (logical >= start) & (logical < stop)
+            page = jnp.where(live, table_row[logical // ps],
+                             kvc.GARBAGE_PAGE)
+            row = logical % ps
+            if stacked:
+                out[key] = pool.at[:, page, row].set(0)
+            else:
+                out[key] = pool.at[page, row].set(0)
+        return out
+
+    def walk(node):
+        if isinstance(node, dict):
+            lay = match_layout(node)
+            if lay is not None and lay.paged and lay.poison_leaves:
+                return zero_node(lay, node)
             return {k: walk(v) for k, v in node.items()}
         return node
 

@@ -30,6 +30,21 @@ def make_prefill_step(cfg, yoco: YocoConfig = DEFAULT_YOCO,
     return prefill_step
 
 
+def make_chunk_prefill_step(cfg, yoco: YocoConfig = DEFAULT_YOCO,
+                            rt: ModelRuntime = DEFAULT_RT):
+    """Chunked-prefill step: one C-token slice of a longer prompt at
+    absolute positions [offset, min(offset + C, limit)). The driver loops
+    this over a prompt's chunks (C stays constant per jit signature) so
+    long-prompt admission interleaves with the decode batch instead of
+    stalling it, and prefix-cache hits prefill only the unshared suffix.
+    Returns (last-chunk-row logits, cache) — logits meaningful on the
+    final chunk only. Attention-only families."""
+    def chunk_prefill_step(params, batch, offset, limit, cache):
+        return model_mod.prefill_chunk(params, batch, offset, limit, cache,
+                                       cfg, yoco, rt)
+    return chunk_prefill_step
+
+
 def sample_tokens(logits: jnp.ndarray, key: jax.Array, *,
                   temperature: float = 1.0, top_k: int = 0) -> jnp.ndarray:
     """Temperature / top-k sampling over (..., V) logits -> int32 ids.

@@ -402,7 +402,8 @@ class EnergyMeter:
     """
 
     _KEYS = ('tokens', 'hot_bytes', 'cold_bytes', 'achieved_bytes',
-             'baseline_bytes', 'achieved_pj', 'baseline_pj', 'ops')
+             'baseline_bytes', 'achieved_pj', 'baseline_pj', 'ops',
+             'shared_saved_bytes', 'shared_saved_pj')
 
     def __init__(self, cfg, *, page_size: int, kv_quant: bool = False,
                  hot_window: int = 1, fp_bytes: int = 2,
@@ -428,10 +429,20 @@ class EnergyMeter:
             self._kv_kw = dict(n_heads=cfg.n_heads,
                                latent_dim=m.kv_lora_rank + m.rope_head_dim,
                                kv_lora_rank=m.kv_lora_rank)
+            # per-block fetch cost, mirroring decode_latent_traffic: the
+            # latent row is fetched once; one absmax scale per cold page
+            self._elems_per_block = page_size * (m.kv_lora_rank
+                                                 + m.rope_head_dim)
+            self._cold_scale_b = tier.scale_bytes
         else:
             self._kv_kw = dict(n_heads=cfg.n_heads,
                                n_kv_heads=cfg.n_kv_heads,
                                head_dim=cfg.resolved_head_dim)
+            # per-block fetch cost, mirroring decode_kv_traffic: K and V
+            # rows; per-head K/V absmax scales per cold page
+            self._elems_per_block = (page_size * cfg.n_kv_heads
+                                     * cfg.resolved_head_dim * 2)
+            self._cold_scale_b = cfg.n_kv_heads * 2 * tier.scale_bytes
         self._state: Optional[dict] = None
         if self.n_mamba:
             from repro.models.ssm import dims as ssm_dims
@@ -457,11 +468,22 @@ class EnergyMeter:
             self._price_cache[(s_live, cold_blocks)] = r
         return r
 
-    def observe_step(self, lanes: Iterable[Tuple[int, int]]) -> dict:
+    def observe_step(self, lanes: Iterable[Tuple[int, int]], *,
+                     dup_hot_blocks: int = 0,
+                     dup_cold_blocks: int = 0) -> dict:
         """Account one decode step. ``lanes`` is ``(s_live, cold_blocks)``
         per active slot — ``s_live`` the position count the step attends
         over (write pos + 1), ``cold_blocks`` the tier tracker's quantized
-        residency (0 when untiered). Returns this step's increments."""
+        residency (0 when untiered). Returns this step's increments.
+
+        ``dup_hot_blocks`` / ``dup_cold_blocks`` are this step's
+        *duplicate* physical-page reads under prefix sharing: instances
+        beyond the first lane reading the same page (per tier). A shared
+        page is fetched once and attended by every owner, so duplicate
+        fetches are refunded from the achieved bytes/pJ — arithmetic
+        (``ops``) is NOT discounted (every lane still runs its own
+        attention over those positions), and the baseline columns price
+        the unshared pool a private-pages run would have read."""
         inc = {k: 0.0 for k in self._KEYS}
         for s_live, cold in lanes:
             inc['tokens'] += 1
@@ -490,6 +512,24 @@ class EnergyMeter:
                 inc['achieved_pj'] += st['baseline_pj_per_token']
                 inc['baseline_pj'] += st['baseline_pj_per_token']
                 inc['ops'] += st['ops_per_token']
+        if self.n_attn and (dup_hot_blocks or dup_cold_blocks):
+            n = self.n_attn
+            hot_b = dup_hot_blocks * self._elems_per_block * self.fp_bytes * n
+            if self.kv_quant:
+                cold_b = dup_cold_blocks * (self._elems_per_block
+                                            + self._cold_scale_b) * n
+                saved_pj = (hot_b * self.tier.sram_pj_per_byte
+                            + cold_b * self.tier.hbm_pj_per_byte)
+                inc['cold_bytes'] -= cold_b
+            else:
+                # untiered: every duplicate is an fp block from bulk
+                cold_b = 0.0
+                saved_pj = hot_b * self.tier.hbm_pj_per_byte
+            inc['hot_bytes'] -= hot_b
+            inc['achieved_bytes'] -= hot_b + cold_b
+            inc['achieved_pj'] -= saved_pj
+            inc['shared_saved_bytes'] += hot_b + cold_b
+            inc['shared_saved_pj'] += saved_pj
         for k, v in inc.items():
             self.totals_raw[k] += v
         return inc
@@ -509,6 +549,8 @@ class EnergyMeter:
             achieved_pj=t['achieved_pj'],
             baseline_pj=t['baseline_pj'],
             ops=t['ops'],
+            shared_saved_bytes=t['shared_saved_bytes'],
+            shared_saved_pj=t['shared_saved_pj'],
             achieved_bytes_per_token=t['achieved_bytes'] / tok,
             baseline_bytes_per_token=t['baseline_bytes'] / tok,
             bytes_reduction=t['baseline_bytes'] / max(t['achieved_bytes'],
@@ -655,6 +697,11 @@ class ServeTelemetry:
             help='pool pages by state (free/reserved/owned)')
         self._g_cold = r.gauge('serve_cold_pages',
                                help='pages resident in the int8 tier')
+        self._c_prefix = r.counter(
+            'serve_prefix_events_total', labels=('event',),
+            help='prefix-cache outcomes '
+                 '(hit/miss/evict/cow, deltas of the allocator counters)')
+        self._prefix_last = dict(hit=0, miss=0, evict=0, cow=0)
         self._g_lmax = r.gauge(
             'serve_logits_max_abs',
             help='max |logit| this step (drift sentinel)')
@@ -723,19 +770,50 @@ class ServeTelemetry:
         p.set_at(('free',), occ['free'])
         p.set_at(('reserved',), occ['reserved'])
         p.set_at(('owned',), occ['owned'])
+        p.set_at(('cached',), occ.get('cached', 0))
+        p.set_at(('shared',), occ.get('shared', 0))
         tier = getattr(sched, 'tier', None)
-        if tier is not None:
-            res = tier.residency()
-            self._g_cold.set_at((), sum(res.values()))
-            lanes = [(st.pos + 1, res.get(slot, 0))
-                     for slot, st in sched.active.items()]
-        else:
-            self._g_cold.set_at((), 0)
-            lanes = [(st.pos + 1, 0) for st in sched.active.values()]
-        inc = self.meter.observe_step(lanes)
+        res = tier.residency() if tier is not None else {}
+        self._g_cold.set_at((), sum(res.values()))
+        lanes = [(st.pos + 1, res.get(slot, 0))
+                 for slot, st in sched.active.items()]
+        dup_hot = dup_cold = 0
+        if getattr(kv, 'prefix_cache', False):
+            c = self._c_prefix
+            last = self._prefix_last
+            for ev, now in (('hit', kv.prefix_hits),
+                            ('miss', kv.prefix_misses),
+                            ('evict', kv.prefix_evictions),
+                            ('cow', kv.cow_copies)):
+                if now > last[ev]:
+                    c.inc_at((ev,), now - last[ev])
+                    last[ev] = now
+            # duplicate physical-page reads this step: each shared page
+            # is fetched once, every further owner's read is coalesced —
+            # the meter refunds those fetches (cold iff the instance sits
+            # inside its lane's quantized residency)
+            seen = set()
+            ps = kv.page_size
+            for slot, st in sched.active.items():
+                nb = min(-(-(st.pos + 1) // ps), int(kv.counts[slot]))
+                cold_n = res.get(slot, 0)
+                row = kv.tables[slot]
+                for i in range(nb):
+                    page = int(row[i])
+                    if page in seen:
+                        if i < cold_n:
+                            dup_cold += 1
+                        else:
+                            dup_hot += 1
+                    else:
+                        seen.add(page)
+        inc = self.meter.observe_step(lanes, dup_hot_blocks=dup_hot,
+                                      dup_cold_blocks=dup_cold)
         kvb = self._c_kvb
         kvb.inc_at(('hot',), inc['hot_bytes'])
         kvb.inc_at(('cold',), inc['cold_bytes'])
+        if inc['shared_saved_bytes']:
+            kvb.inc_at(('shared_saved',), inc['shared_saved_bytes'])
         pj = self._c_pj
         pj.inc_at(('achieved',), inc['achieved_pj'])
         pj.inc_at(('baseline',), inc['baseline_pj'])
@@ -802,6 +880,8 @@ def summarize(snapshot: Optional[dict]) -> Optional[dict]:
         step_p50_s=pct('serve_step_seconds', 'p50'),
         tokens=e.get('tokens'),
         achieved_bytes_per_token=round(e['achieved_bytes_per_token'], 1)
+        if e else None,
+        shared_saved_bytes=round(e.get('shared_saved_bytes', 0.0), 1)
         if e else None,
         baseline_bytes_per_token=round(e['baseline_bytes_per_token'], 1)
         if e else None,

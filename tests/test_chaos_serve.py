@@ -261,3 +261,76 @@ def test_chaos_soak_kv_quant_tier():
               + out['cancelled'])
     assert n_term == 8
     assert out['completed'] >= 4             # the stream survives the storm
+
+
+def test_poisoned_shared_page_quarantines_every_owner_losslessly():
+    """Chaos x prefix sharing: a NaN'd SHARED page trips the integrity
+    sentinel in EVERY owner lane, the first quarantine retires the page
+    from the prefix table (no later admission can acquire the suspect
+    content), the deferred scrub never zeroes it while other owners still
+    read it — and the retried requests land token-identical to solo."""
+    rs = np.random.RandomState(0)
+    vocab = configs.get(ARCH, smoke=True).vocab_size
+    sysp = rs.randint(1, vocab, size=12).astype(np.int32)   # 3 full pages
+    reqs = [SV.Request(rid=i,
+                       prompt=np.concatenate(
+                           [sysp, rs.randint(1, vocab, size=1 + i)
+                            .astype(np.int32)]),
+                       target_gen=6) for i in range(4)]
+    inj = faults.FaultInjector(seed=0, schedule=[(2, 'poison_page', None)])
+    audited = [0]
+    out = SV.serve_continuous(ARCH, attn_impl='einsum', slots=4,
+                              prompt_len=16, gen_len=8, page_size=4,
+                              prefix_cache=True, request_stream=reqs,
+                              faults=inj, quiet=True,
+                              step_hook=_invariant_hook(audited))
+    assert audited[0] == out['steps']
+    assert out['completed'] == len(reqs)
+    pois = [e for e in out['event_log']
+            if e['kind'] == 'fault' and e.get('fault') == 'poison_page']
+    assert len(pois) == 1 and len(pois[0]['owners']) >= 2   # shared hit
+    assert out['quarantined'] >= len(pois[0]['owners'])
+    for req in reqs:   # lossless recovery for every owner
+        want = _reference_tokens(req, 16, 8)
+        assert out['outputs'][req.rid] == want, (req.rid,)
+
+
+def test_chaos_soak_with_prefix_sharing():
+    """The PR 7 seeded soak with the prefix cache on: a shared-prefix
+    stream under the full chaos profile (squeezes, storms, poisons,
+    cancels) keeps ``check_invariants`` — now auditing refcounts, the
+    prefix-table bijection, and the evictable LRU — green after every
+    step, completes the stream, and every request the injector did not
+    touch decodes token-identically to solo."""
+    rs = np.random.RandomState(5)
+    vocab = configs.get(ARCH, smoke=True).vocab_size
+    sysp = rs.randint(1, vocab, size=8).astype(np.int32)
+    reqs = [SV.Request(rid=i,
+                       prompt=np.concatenate(
+                           [sysp, rs.randint(1, vocab, size=1 + (i % 5))
+                            .astype(np.int32)]),
+                       target_gen=5 + (i % 3)) for i in range(8)]
+    prof = faults.FaultProfile(pool_squeeze=0.06, squeeze_pages=3,
+                               squeeze_steps=3, preempt_storm=0.05,
+                               poison_page=0.04, poison_logits=0.04,
+                               cancel=0.03)
+    inj = faults.FaultInjector(seed=11, profile=prof)
+    audited = [0]
+    out = SV.serve_continuous(ARCH, attn_impl='einsum', slots=3,
+                              prompt_len=16, gen_len=8, page_size=4,
+                              prefix_cache=True, request_stream=reqs,
+                              retry_budget=16, quiet=True, faults=inj,
+                              step_hook=_invariant_hook(audited))
+    assert audited[0] == out['steps'] > 0
+    assert out['prefix']['hits'] > 0         # the stream actually shared
+    assert sorted(out['terminal']) == list(range(8))
+    cancelled = {e['rid'] for e in out['event_log'] if e['kind'] == 'cancel'}
+    for req in reqs:
+        if req.rid in inj.touched or req.rid in cancelled:
+            continue
+        if req.rid not in out['outputs']:
+            continue
+        if len(out['outputs'][req.rid]) < req.target_gen:
+            continue                          # failed/deadline-cut lanes
+        want = _reference_tokens(req, 16, 8)
+        assert out['outputs'][req.rid] == want, (req.rid,)

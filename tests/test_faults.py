@@ -235,9 +235,9 @@ def _req(rid, plen=4, gen=64, **kw):
 
 def _admit_all(sched):
     admitted = sched.try_admit()
-    for req, slot in admitted:
+    for req, slot, _plan in admitted:
         sched.seed(req, slot, 1)
-    return [slot for _, slot in admitted]
+    return [slot for _, slot, _ in admitted]
 
 
 def test_preempt_victim_order_never_the_grower():
@@ -379,3 +379,40 @@ def test_quarantine_returns_owned_pages_and_requeues():
     kv.check_invariants()
     kinds = [e.kind for e in sched.events]
     assert kinds == ['submit', 'admit', 'evict', 'quarantine', 'retry']
+
+
+def test_quarantine_shared_page_defers_scrub_until_last_owner():
+    """Cross-tenant scrub safety under prefix sharing: quarantining one
+    owner of a shared page must retire the page from the cache (no future
+    admission can acquire suspect content) but NEVER zero it in place —
+    the other owners keep reading it until their own release, at which
+    point the deferred mark surfaces it in the scrub queue."""
+    kv = kvc.PagedKVCache(num_pages=16, page_size=4, max_blocks=4,
+                          slots=3, prefix_cache=True)
+    prompt = np.arange(1, 13, dtype=np.int32)          # 3 full pages
+    assert kv.admit_prompt(0, prompt) is not None
+    kv.seal_slot(0, prompt)
+    plan = kv.admit_prompt(1, np.concatenate([prompt, [50]]))
+    assert plan['hit'] and plan['shared'] == 3
+    shared = [int(p) for p in kv.tables[0, :3]]
+
+    now = kv.quarantine_slot(0)
+    # nothing shared is scrubbed now: slot 1 still owns every page
+    assert not set(now) & set(shared)
+    assert all(int(kv.refs[p]) == 1 for p in shared)
+    assert all(p in kv.sealed for p in shared)
+    assert kv.owners_of(shared[0]) == [1]
+    kv.check_invariants()
+    # but the content is retired: a fresh admission of the same prompt
+    # must miss and build private pages
+    plan = kv.admit_prompt(2, prompt)
+    assert plan is not None and not plan['hit']
+    assert not set(int(p) for p in kv.tables[2, :3]) & set(shared)
+    kv.check_invariants()
+    # last owner leaves -> the deferred mark surfaces the pages for the
+    # driver's device-side scrub, and only then do they recirculate
+    kv.release(1)
+    q = kv.drain_scrub_queue()
+    assert set(shared) <= set(q)
+    kv.release(2)
+    kv.check_invariants()

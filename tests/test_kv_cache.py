@@ -137,6 +137,19 @@ def test_scatter_gather_roundtrip():
         np.asarray(dense))
 
 
+def test_scatter_pages_rejects_bad_dense_views():
+    """The shape contract fails loudly (ValueError, not a bare assert
+    that ``python -O`` strips into silent pool corruption): unaligned
+    views and views wider than the block table both raise."""
+    ps, w, b, hkv, dh = 4, 2, 1, 2, 8
+    pool = jnp.zeros((b * w + 1, ps, hkv, dh))
+    bt = jnp.ones((b, w), jnp.int32)
+    with pytest.raises(ValueError, match='multiple of the page size'):
+        kvc.scatter_pages(pool, jnp.zeros((b, ps + 2, hkv, dh)), bt)
+    with pytest.raises(ValueError, match='block-table capacity'):
+        kvc.scatter_pages(pool, jnp.zeros((b, (w + 1) * ps, hkv, dh)), bt)
+
+
 def test_prefill_update_matches_contiguous():
     ps, w, b, hkv, dh, sp = 4, 4, 3, 2, 8, 10
     kv = kvc.PagedKVCache(num_pages=b * w + 1, page_size=ps, max_blocks=w,

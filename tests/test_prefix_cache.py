@@ -1,0 +1,476 @@
+"""Prefix caching + copy-on-write page sharing (PR 9): allocator plan
+semantics (COW boundary positions, refcount walks), solo-vs-shared token
+parity on GQA and MLA, forced preemption of sharing tenants, the int8
+tier's quantize-once discipline over multi-owner pages, and the energy
+meter's shared-read refund.
+
+The core safety contract under test: a sealed page is immutable — every
+tenant that acquires it by reference must decode token-identically to a
+run that owned a private copy, under admission bursts, preemption churn,
+and the quantized tier alike.
+
+Run with ``make test-prefix`` (part of ``make check``)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import hwmodel
+from repro.core.yoco_linear import YocoConfig
+from repro.launch import serve as SV
+from repro.models import model as model_mod
+from repro.models.model import ModelRuntime
+from repro.runtime import kv_cache as kvc
+from repro.runtime import layouts as LY
+from repro.runtime import serve_step as SS
+from repro.runtime import telemetry as T
+
+pytestmark = pytest.mark.prefix
+
+ARCH = 'stablelm-1.6b'
+MLA_ARCH = 'deepseek-v3-671b'
+
+
+# ----------------------------------------------------------------------------
+# solo-decode oracle + shared-prefix streams
+# ----------------------------------------------------------------------------
+@functools.lru_cache(maxsize=2)
+def _reference_model(arch=ARCH):
+    cfg = configs.get(arch, smoke=True)
+    yoco, rt = YocoConfig(mode='bf16'), ModelRuntime()
+    params = model_mod.init_params(jax.random.key(0), cfg)
+    prefill = jax.jit(SS.make_prefill_step(cfg, yoco, rt))
+    decode = jax.jit(SS.make_decode_step(cfg, yoco, rt))
+    return cfg, params, prefill, decode
+
+
+def _reference_tokens(req, prompt_len, arch=ARCH):
+    """Greedy-decode one request alone through the contiguous einsum path:
+    the oracle every tenant of a shared page must reproduce."""
+    cfg, params, prefill, decode = _reference_model(arch)
+    cache = model_mod.init_cache_tree(cfg, 1, prompt_len + req.target_gen)
+    pad = np.zeros((1, prompt_len), np.int32)
+    pad[0, :len(req.prompt)] = req.prompt
+    logits, cache = prefill(params, dict(inputs=jnp.asarray(pad)), cache,
+                            jnp.asarray([len(req.prompt) - 1]))
+    toks = [int(jnp.argmax(logits, -1)[0])]
+    pos = len(req.prompt)
+    while len(toks) < req.target_gen:
+        t, _, cache = decode(params, jnp.asarray([toks[-1]], jnp.int32),
+                             jnp.asarray([pos], jnp.int32), cache)
+        toks.append(int(t[0]))
+        pos += 1
+    return toks
+
+
+def _shared_stream(suffixes, *, shared=12, arch=ARCH, seed=0):
+    """Requests that all open with the same ``shared``-token system prompt
+    followed by per-request suffixes of the given lengths (0 = an exact
+    full-block duplicate, the COW case when ``shared`` is page-aligned)."""
+    rs = np.random.RandomState(seed)
+    vocab = configs.get(arch, smoke=True).vocab_size
+    sysp = rs.randint(1, vocab, size=shared).astype(np.int32)
+    reqs = []
+    for i, (extra, gen) in enumerate(suffixes):
+        p = np.concatenate(
+            [sysp, rs.randint(1, vocab, size=extra).astype(np.int32)])
+        reqs.append(SV.Request(rid=i, prompt=p, target_gen=gen))
+    return reqs
+
+
+def _invariant_hook(counter):
+    def hook(sched, kv, cache):
+        kv.check_invariants()
+        counter[0] += 1
+    return hook
+
+
+SUFFIXES = [(2, 6), (0, 5), (3, 7), (1, 6), (4, 8)]
+
+
+# ----------------------------------------------------------------------------
+# end-to-end: shared decode is token-identical and strictly cheaper
+# ----------------------------------------------------------------------------
+def _shared_vs_solo(arch, suffixes, *, shared=12, slots=5, prompt_len=16):
+    reqs = _shared_stream(suffixes, shared=shared, arch=arch)
+    kwargs = dict(slots=slots, prompt_len=prompt_len, gen_len=8,
+                  page_size=4, attn_impl='einsum', request_stream=reqs,
+                  quiet=True)
+    audited = [0]
+    out = SV.serve_continuous(arch, prefix_cache=True,
+                              step_hook=_invariant_hook(audited), **kwargs)
+    priv = SV.serve_continuous(arch, **kwargs)
+    n = len(reqs)
+    assert out['completed'] == priv['completed'] == n
+    assert audited[0] == out['steps']
+    # the burst shares: every admission after the donor is a hit, the
+    # exact-cover duplicate COWs its one boundary page, and the peak page
+    # footprint sits strictly below the all-private baseline
+    assert out['prefix']['hits'] >= n - 1
+    assert out['prefix']['cow_copies'] >= 1
+    assert out['peak_pages'] < priv['peak_pages']
+    # token-for-token: vs the private run AND vs each solo contiguous
+    # decode (the shared pages must read bit-identically to owned ones)
+    assert out['outputs'] == priv['outputs']
+    for req in reqs:
+        want = _reference_tokens(req, prompt_len, arch)
+        assert out['outputs'][req.rid] == want, (req.rid,
+                                                 out['outputs'][req.rid],
+                                                 want)
+    return out
+
+
+def test_shared_prefix_decode_matches_solo():
+    """5 requests with one 12-token system prompt (3 full pages at
+    page_size=4) admitted as one burst: 4 hits + 1 COW, fewer peak pages,
+    every token identical to solo decode."""
+    _shared_vs_solo(ARCH, SUFFIXES)
+
+
+@pytest.mark.slow
+def test_shared_prefix_decode_matches_solo_mla():
+    """The same sharing contract on the paged LATENT pool: deepseek-v3
+    smoke tenants acquiring sealed latent pages by reference decode
+    token-identically to solo absorbed decode."""
+    _shared_vs_solo(MLA_ARCH, [(2, 5), (0, 4), (3, 6), (1, 5)], slots=4)
+
+
+def test_forced_preemption_of_sharing_tenant_is_lossless():
+    """A pool too small for all sharing lanes preempts mid-share: the
+    refcounted release must keep the surviving owners' pages intact and
+    the preempted tenant's re-admission (a fresh hit on the still-cached
+    prefix) must land on identical tokens."""
+    reqs = _shared_stream(SUFFIXES)
+    kwargs = dict(slots=3, prompt_len=16, gen_len=8, page_size=4,
+                  attn_impl='einsum', request_stream=reqs, quiet=True,
+                  prefix_cache=True)
+    audited = [0]
+    tight = SV.serve_continuous(ARCH, num_pages=9,
+                                step_hook=_invariant_hook(audited),
+                                **kwargs)
+    roomy = SV.serve_continuous(ARCH, num_pages=None, **kwargs)
+    assert tight['preempted'] > 0
+    assert audited[0] == tight['steps']
+    assert tight['completed'] == roomy['completed'] == len(reqs)
+    assert tight['outputs'] == roomy['outputs']
+    for req in reqs:
+        assert tight['outputs'][req.rid] == _reference_tokens(req, 16)
+
+
+def test_chunked_prefill_matches_monolithic():
+    """--chunk-prefill without the prefix cache: suffix-chunked admission
+    through the paged chunk kernel emits the same tokens as the padded
+    monolithic prefill."""
+    kwargs = dict(slots=2, n_requests=4, prompt_len=16, gen_len=6,
+                  page_size=4, attn_impl='einsum', quiet=True)
+    a = SV.serve_continuous(ARCH, **kwargs)
+    b = SV.serve_continuous(ARCH, chunk_prefill=4, **kwargs)
+    c = SV.serve_continuous(ARCH, chunk_prefill=7, **kwargs)  # unaligned C
+    assert a['outputs'] == b['outputs'] == c['outputs']
+    assert b['chunk_prefill'] == 4 and a['chunk_prefill'] is None
+
+
+def test_prefix_cache_rejects_recurrent_families():
+    """Recurrent state folds the whole prompt into one snapshot — there is
+    nothing position-addressable to share or to suffix-prefill."""
+    for arch in ('mamba2-780m', 'zamba2-1.2b'):
+        with pytest.raises(ValueError, match='recurrent state'):
+            SV.serve_continuous(arch, prefix_cache=True, quiet=True)
+        with pytest.raises(ValueError, match='recurrent state'):
+            SV.serve_continuous(arch, chunk_prefill=4, quiet=True)
+
+
+# ----------------------------------------------------------------------------
+# allocator plans: COW boundary positions + refcount walks
+# ----------------------------------------------------------------------------
+def _seeded_donor(kv, prompt):
+    assert kv.admit_prompt(0, prompt) is not None
+    kv.seal_slot(0, prompt)
+    kv.check_invariants()
+
+
+def test_admit_prompt_cow_boundary_positions():
+    """The COW rule is exact: only a fully-covered prompt (plen == a
+    cached full-block chain) splits a page, and it splits exactly the one
+    boundary page the last-token recompute writes into. One token past
+    the boundary, or an unaligned partial cover, shares outright and
+    starts the prefill at the block edge."""
+    ps = 4
+    kv = kvc.PagedKVCache(num_pages=16, page_size=ps, max_blocks=5,
+                          slots=4, prefix_cache=True)
+    prompt = np.arange(1, 13, dtype=np.int32)          # 12 = 3 full pages
+    _seeded_donor(kv, prompt)
+    donor_pages = kv.tables[0, :3].tolist()
+
+    # exact full-block cover -> COW: share n-1 blocks, private boundary
+    plan = kv.admit_prompt(1, prompt)
+    assert plan['hit'] and plan['shared'] == 2
+    assert plan['prefill_start'] == 11                 # last-token recompute
+    src, dst = plan['cow']
+    assert src == donor_pages[2] and dst == int(kv.tables[1, 2])
+    assert dst not in donor_pages                      # private copy target
+    assert kv.tables[1, :2].tolist() == donor_pages[:2]
+    kv.check_invariants()
+
+    # one token past the boundary -> plain hit, no COW, suffix prefill
+    plan = kv.admit_prompt(2, np.concatenate([prompt, [99]]))
+    assert plan['hit'] and plan['cow'] is None
+    assert plan['shared'] == 3 and plan['prefill_start'] == 12
+    assert kv.tables[2, :3].tolist() == donor_pages
+    kv.check_invariants()
+
+    # unaligned partial cover (10 tokens = 2 full blocks + 2) -> share the
+    # full blocks only, prefill from the block edge
+    plan = kv.admit_prompt(3, prompt[:10])
+    assert plan['hit'] and plan['cow'] is None
+    assert plan['shared'] == 2 and plan['prefill_start'] == 8
+    assert kv.tables[3, :2].tolist() == donor_pages[:2]
+    kv.check_invariants()
+
+    assert kv.prefix_hits == 3 and kv.cow_copies == 1
+    assert kv.shared_pages >= 2
+    for s in range(4):
+        kv.release(s)
+        kv.check_invariants()
+    # all pages either free or cached — nothing leaked
+    assert kv.free_capacity == kv.num_pages - 1
+
+
+def test_admit_prompt_divergent_prefix_never_shares():
+    """A prompt differing inside the first block must miss even when the
+    lengths line up — the key is the content, not the length."""
+    kv = kvc.PagedKVCache(num_pages=16, page_size=4, max_blocks=4,
+                          slots=2, prefix_cache=True)
+    prompt = np.arange(1, 13, dtype=np.int32)
+    _seeded_donor(kv, prompt)
+    other = prompt.copy()
+    other[1] += 1
+    plan = kv.admit_prompt(1, other)
+    assert not plan['hit'] and plan['shared'] == 0 and plan['cow'] is None
+    assert not set(kv.tables[1, :3].tolist()) & set(kv.tables[0, :3].tolist())
+    kv.check_invariants()
+
+
+def test_prefix_eviction_frees_cached_pages_under_pressure():
+    """Caching never blocks an admission plain allocation could serve:
+    refcount-0 sealed pages are evicted LRU-first when the free list runs
+    dry, and the evicted content misses on its next admission."""
+    kv = kvc.PagedKVCache(num_pages=7, page_size=4, max_blocks=3,
+                          slots=2, prefix_cache=True)
+    prompt = np.arange(1, 13, dtype=np.int32)          # 3 pages
+    _seeded_donor(kv, prompt)
+    kv.release(0)
+    assert kv.cached_pages == 3 and kv.free_pages == 3
+    # a 3-page disjoint admission fits only by evicting nothing (3 free),
+    # a second one must evict cached pages
+    other = np.arange(50, 62, dtype=np.int32)
+    assert kv.admit_prompt(0, other) is not None
+    kv.seal_slot(0, other)
+    disjoint = np.arange(80, 92, dtype=np.int32)
+    plan = kv.admit_prompt(1, disjoint)
+    assert plan is not None and kv.prefix_evictions >= 3
+    kv.check_invariants()
+    # the evicted prefix is gone: re-admitting the first prompt misses
+    kv.release(0)
+    kv.release(1)
+    plan = kv.admit_prompt(0, prompt)
+    assert plan is not None and not plan['hit']
+    kv.check_invariants()
+
+
+@pytest.mark.parametrize('seed', [0, 1, 2])
+def test_prefix_refcount_random_walk_invariants(seed):
+    """Property walk over the sharing allocator: random admissions from a
+    small family of overlapping prompts, decode growth, releases, and
+    quarantines — ``check_invariants()`` (refs == table references,
+    shared ⇒ sealed, the free/reserved/cached/owned partition) must hold
+    after EVERY op."""
+    rng = np.random.RandomState(seed)
+    ps, slots, max_blocks = 4, 4, 5
+    kv = kvc.PagedKVCache(num_pages=14, page_size=ps,
+                          max_blocks=max_blocks, slots=slots,
+                          prefix_cache=True)
+    base = rng.randint(1, 40, size=max_blocks * ps).astype(np.int32)
+    prompts = {}   # slot -> prompt while admitted
+    for _ in range(400):
+        op = rng.randint(4)
+        s = rng.randint(slots)
+        if op == 0 and s not in prompts:
+            # overlapping family: shared head of the base prompt plus an
+            # occasional divergent tail
+            plen = rng.randint(ps, max_blocks * ps + 1)
+            p = base[:plen].copy()
+            if rng.rand() < 0.4:
+                p[-1] = 100 + rng.randint(40)
+            if kv.admit_prompt(s, p) is not None:
+                kv.seal_slot(s, p)
+                prompts[s] = p
+        elif op == 1 and s in prompts:
+            pos = rng.randint(max_blocks * ps)
+            kv.ensure(s, pos)
+        elif op == 2 and s in prompts:
+            kv.release(s)
+            del prompts[s]
+        elif op == 3 and s in prompts:
+            kv.quarantine_slot(s)
+            del prompts[s]
+        kv.check_invariants()
+    for s in list(prompts):
+        kv.release(s)
+    kv.check_invariants()
+    assert kv.free_capacity == kv.num_pages - 1
+    assert kv.shared_pages == 0
+
+
+# ----------------------------------------------------------------------------
+# int8 tier: a multi-owner page quantizes once
+# ----------------------------------------------------------------------------
+def test_kv_quant_multi_owner_page_quantizes_once():
+    """Under --kv-quant a page aged out by several sharing owners must
+    enter the int8 tier once, not once per owner — and the quantized
+    shared read must stay token-identical to the all-private tiered
+    run."""
+    reqs = _shared_stream(SUFFIXES)
+    kwargs = dict(slots=5, prompt_len=16, gen_len=8, page_size=4,
+                  attn_impl='einsum', request_stream=reqs,
+                  kv_quant=True, hot_window=1, quiet=True)
+    audited = [0]
+    shared = SV.serve_continuous(ARCH, prefix_cache=True,
+                                 step_hook=_invariant_hook(audited),
+                                 **kwargs)
+    priv = SV.serve_continuous(ARCH, **kwargs)
+    assert shared['completed'] == priv['completed'] == len(reqs)
+    assert audited[0] == shared['steps']
+    assert shared['prefix']['hits'] >= len(reqs) - 1
+    # dedupe: strictly fewer quantize ops than the private baseline
+    assert 0 < shared['pages_quantized'] < priv['pages_quantized']
+    assert shared['outputs'] == priv['outputs']
+
+
+# ----------------------------------------------------------------------------
+# telemetry: the energy meter refunds duplicate shared fetches
+# ----------------------------------------------------------------------------
+def test_energy_meter_refunds_duplicate_shared_reads():
+    """The meter's shared-read discount is exact bookkeeping against the
+    hwmodel per-block constants: duplicate fetches refund bytes and pJ at
+    the tier the instance would have read from, while ops (every lane
+    still computes its own attention) and the baseline columns (a
+    private-pages run) stay untouched."""
+    cfg = configs.get(ARCH, smoke=True)
+    tier = hwmodel.DEFAULT_KV_TIER
+    elems = 4 * cfg.n_kv_heads * cfg.resolved_head_dim * 2   # K and V rows
+    lanes = [(8, 0), (8, 0)]
+
+    a = T.EnergyMeter(cfg, page_size=4).observe_step(lanes)
+    b = T.EnergyMeter(cfg, page_size=4).observe_step(lanes,
+                                                     dup_hot_blocks=2)
+    n = T.EnergyMeter(cfg, page_size=4).n_attn
+    refund = 2 * elems * 2 * n                               # fp16 blocks
+    assert b['ops'] == a['ops']
+    assert b['baseline_bytes'] == a['baseline_bytes']
+    assert b['baseline_pj'] == a['baseline_pj']
+    assert a['achieved_bytes'] - b['achieved_bytes'] == refund
+    assert b['shared_saved_bytes'] == refund
+    assert (a['achieved_pj'] - b['achieved_pj']) == pytest.approx(
+        refund * tier.hbm_pj_per_byte)
+
+    # tiered: hot duplicates refund fp bytes at the SRAM-tier rate, cold
+    # duplicates refund int8+scale bytes at the bulk rate
+    lanes_q = [(16, 2), (16, 2)]
+    kw = dict(page_size=4, kv_quant=True, hot_window=1)
+    aq = T.EnergyMeter(cfg, **kw).observe_step(lanes_q)
+    bq = T.EnergyMeter(cfg, **kw).observe_step(lanes_q, dup_hot_blocks=1,
+                                               dup_cold_blocks=2)
+    hot_b = 1 * elems * 2 * n
+    cold_b = 2 * (elems + cfg.n_kv_heads * 2 * tier.scale_bytes) * n
+    assert bq['ops'] == aq['ops'] and bq['baseline_pj'] == aq['baseline_pj']
+    assert bq['shared_saved_bytes'] == pytest.approx(hot_b + cold_b)
+    assert (aq['achieved_pj'] - bq['achieved_pj']) == pytest.approx(
+        hot_b * tier.sram_pj_per_byte + cold_b * tier.hbm_pj_per_byte)
+
+
+def test_serve_report_counts_shared_savings():
+    """An instrumented shared run reports the refund: achieved bytes/token
+    drop below baseline, the prefix counter matches the allocator, and
+    the shared-saved traffic counter is positive."""
+    reqs = _shared_stream(SUFFIXES)
+    out = SV.serve_continuous(ARCH, slots=5, prompt_len=16, gen_len=8,
+                              page_size=4, attn_impl='einsum',
+                              prefix_cache=True, request_stream=reqs,
+                              quiet=True)
+    snap = out['telemetry']
+    e = snap['energy']
+    assert e['shared_saved_bytes'] > 0
+    assert e['achieved_bytes'] + e['shared_saved_bytes'] == pytest.approx(
+        e['baseline_bytes'])
+    assert e['achieved_pj'] < e['baseline_pj']
+    vals = snap['metrics']['serve_prefix_events_total']['values']
+    assert int(vals['hit']) == out['prefix']['hits']
+    assert int(vals['cow']) == out['prefix']['cow_copies']
+    assert snap['metrics']['serve_kv_bytes_total']['values'][
+        'shared_saved'] == pytest.approx(e['shared_saved_bytes'])
+
+
+# ----------------------------------------------------------------------------
+# the padded-tail guard (the stale-bytes satellite)
+# ----------------------------------------------------------------------------
+def _first_paged(tree):
+    if isinstance(tree, dict):
+        lay = LY.match_layout(tree)
+        if lay is not None and lay.paged:
+            return lay, tree
+        for v in tree.values():
+            r = _first_paged(v)
+            if r is not None:
+                return r
+    return None
+
+
+def test_zero_tree_tail_zeroes_only_the_tail_rows():
+    """``zero_tree_tail`` must zero exactly the logical rows
+    [start, stop) of the request's own pages in the fp pools — not the
+    head of the last page, not other pages, not other leaves."""
+    cfg = configs.get(ARCH, smoke=True)
+    cache = model_mod.init_paged_cache_tree(cfg, 2, num_pages=5,
+                                            page_size=4, max_blocks=3)
+    cache = LY.poison_tree_pages(cache, jnp.arange(1, 5), value=1.0)
+    table_row = jnp.asarray([1, 2, 0], jnp.int32)
+    out = LY.zero_tree_tail(cache, table_row, 5, 8)    # block 1, rows 1..3
+    lay, node = _first_paged(out)
+    pool = np.asarray(node[lay.poison_leaves[0]], np.float32)
+    stacked = node[lay.table_leaves[0]].ndim == 3
+    if stacked:
+        pool = pool[0]
+    assert (pool[2, 1:] == 0).all()                    # the tail rows
+    assert (pool[2, 0] == 1).all()                     # head of that page
+    assert (pool[1] == 1).all() and (pool[3] == 1).all()
+    assert (pool[4] == 1).all()
+
+
+def test_padded_tail_never_published_into_shared_pages():
+    """End-to-end stale-bytes regression: tenant A's monolithic padded
+    prefill writes junk rows past its prompt into its last page; when that
+    page is sealed and tenant B extends the same prefix PAST those rows,
+    B must still decode token-identically to solo (the driver zeroed the
+    tail before sealing)."""
+    rs = np.random.RandomState(3)
+    vocab = configs.get(ARCH, smoke=True).vocab_size
+    sysp = rs.randint(1, vocab, size=10).astype(np.int32)  # unaligned: 2.5
+    reqs = [SV.Request(rid=0, prompt=sysp, target_gen=4),
+            SV.Request(rid=1,
+                       prompt=np.concatenate(
+                           [sysp, rs.randint(1, vocab, size=4)
+                            .astype(np.int32)]),
+                       target_gen=6)]
+    out = SV.serve_continuous(ARCH, slots=2, prompt_len=16, gen_len=8,
+                              page_size=4, attn_impl='einsum',
+                              prefix_cache=True, request_stream=reqs,
+                              quiet=True)
+    assert out['completed'] == 2
+    assert out['prefix']['hits'] >= 1
+    for req in reqs:
+        assert out['outputs'][req.rid] == _reference_tokens(req, 16)
