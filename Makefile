@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src:.$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test test-fast test-slow test-mla test-layouts test-ssm-serve test-chaos test-telemetry test-prefix bench bench-smoke serve-demo check
+.PHONY: test test-fast test-slow test-mla test-layouts test-ssm-serve test-chaos test-telemetry test-prefix test-distributed bench bench-smoke serve-demo check
 
 # tier-1: the full suite (what CI / the driver runs)
 test:
@@ -54,6 +54,16 @@ test-telemetry:
 test-prefix:
 	$(PY) -m pytest -q -m "prefix and not slow" tests/test_prefix_cache.py
 
+# the distributed surface: tensor-parallel continuous-serving token parity
+# (GQA + MLA, +-kv-quant, under preemption, on forced 2/4-way CPU host
+# meshes), the one-collective-per-layer jaxpr guarantee, per-shard energy
+# accounting, and real shard_map collectives (psum / tiled all-gather /
+# int8 error-feedback compressed psum) + sharding-spec validation
+test-distributed:
+	$(PY) -m pytest -q -m "distributed" tests/test_distributed_serve.py \
+		tests/test_distributed_collectives.py \
+		tests/test_distributed_parity.py
+
 bench:
 	$(PY) -m benchmarks.run
 
@@ -72,7 +82,7 @@ bench-smoke:
 # smoke benchmarks (test-fast already runs the non-slow cells of the
 # grids; the dedicated targets add the rest so each surface is complete
 # pre-push)
-check: test-fast test-layouts test-ssm-serve test-chaos test-telemetry test-prefix bench-smoke
+check: test-fast test-layouts test-ssm-serve test-chaos test-telemetry test-prefix test-distributed bench-smoke
 
 serve-demo:
 	$(PY) examples/serve_decode.py

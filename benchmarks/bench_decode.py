@@ -42,6 +42,12 @@ real kernels and the prefetch/streamed gap becomes the dead-tile DMA gap.
 
 ``--smoke`` (what ``make bench-smoke`` and the fast test tier run) shrinks
 to toy sizes, asserts flash-vs-oracle parity, and still emits the JSON.
+
+``--backend real`` gates the wall-clock columns on a compiled (non-
+interpret) backend — it refuses to run where the kernels would interpret,
+so a tracked artifact claiming real timings can only come from real
+hardware. Interpret-mode runs (``auto`` off-TPU, or ``interpret``) label
+every row ``timings='parity_only'`` in the JSON instead.
 """
 
 from __future__ import annotations
@@ -264,20 +270,48 @@ def _bench_prefix_sharing(rows: list, smoke: bool) -> None:
              f'tok_per_s={row["tok_per_s"]},peak_pages={row["peak_pages"]}')
 
 
-def run(smoke: bool = False, out_path: Optional[str] = None) -> dict:
+def resolve_backend(backend: str) -> bool:
+    """``--backend`` -> interpret flag. ``auto`` keeps the historical rule
+    (interpret everywhere but TPU); ``real`` REFUSES to run if the only
+    available backend would interpret — wall-clock rows from interpret
+    mode are simulator overhead, not kernel performance (ROADMAP "Known
+    debt"), and a row that looks like a timing must not enter the tracked
+    artifact pretending to be one; ``interpret`` forces the simulator even
+    on a real accelerator (parity-only runs)."""
+    compiled = jax.default_backend() == 'tpu'
+    if backend == 'real' and not compiled:
+        raise SystemExit(
+            f'--backend real: no non-interpret backend available '
+            f'(jax.default_backend()={jax.default_backend()!r}). The '
+            f'Pallas kernels would run in interpret mode, where timings '
+            f'measure the simulator, not the kernel — run on TPU, or use '
+            f'--backend auto/interpret for parity-only rows.')
+    return not compiled or backend == 'interpret'
+
+
+def run(smoke: bool = False, out_path: Optional[str] = None,
+        backend: str = 'auto') -> dict:
     if out_path is None:
         out_path = SMOKE_OUT if smoke else DEFAULT_OUT
-    interpret = jax.default_backend() != 'tpu'
+    interpret = resolve_backend(backend)
     rows: list = []
     for s_max in (SMOKE_SEQ_LENS if smoke else SEQ_LENS):
         _bench_one(s_max, rows, interpret)
         _bench_mla_one(s_max, rows, interpret, smoke)
     _bench_state_families(rows, smoke)
     _bench_prefix_sharing(rows, smoke)
+    # label what the us_per_call/tok_per_s columns MEAN: interpret-mode
+    # numbers are parity-only context (the simulator dominates the wall
+    # clock); only a compiled backend produces real kernel timings
+    timings = 'parity_only' if interpret else 'wall_clock'
+    for row in rows:
+        row['timings'] = timings
     result = dict(
         bench='decode',
         backend=jax.default_backend(),
+        backend_mode=backend,
         interpret=interpret,
+        timings=timings,
         smoke=smoke,
         batch=B, n_heads=HKV * G, n_kv_heads=HKV, head_dim=DH,
         page_size=PAGE_SIZE,
@@ -304,8 +338,15 @@ def main(argv=None):
                     help='toy sizes, parity-asserted (the CI tier); writes '
                          'BENCH_decode.smoke.json, not the tracked artifact')
     ap.add_argument('--out', default=None)
+    ap.add_argument('--backend', default='auto',
+                    choices=['auto', 'real', 'interpret'],
+                    help='auto: interpret everywhere but TPU (historical); '
+                         'real: refuse to run without a compiled backend '
+                         '(wall-clock rows must be real kernel timings); '
+                         'interpret: force the simulator (parity-only '
+                         'rows, labeled as such in the JSON)')
     args = ap.parse_args(argv)
-    run(smoke=args.smoke, out_path=args.out)
+    run(smoke=args.smoke, out_path=args.out, backend=args.backend)
 
 
 if __name__ == '__main__':

@@ -95,12 +95,26 @@ def _axis_size(mesh: Optional[Mesh], axis) -> int:
 def sanitize(spec: P, shape, mesh: Optional[Mesh]) -> P:
     """Drop spec axes that do not divide the dim evenly (jit in_shardings
     requires exact divisibility): qwen2-moe's 60 experts over a 16-way EP
-    axis, 8-KV-head caches over TP=16, batch-1 long-context, etc."""
+    axis, 8-KV-head caches over TP=16, batch-1 long-context, etc.
+
+    Stacking MULTIPLE mesh axes on one dim whose size is smaller than the
+    stacked product is a spec-authoring bug, not a fall-back case — e.g.
+    P(('data', 'model')) on a dim of 4 over a 2x16 mesh. Silently dropping
+    it used to surface later as an opaque XLA shape error; reject it here
+    with the offending dim named instead."""
     if mesh is None:
         return spec
     out = []
     for d, ax in enumerate(tuple(spec) + (None,) * (len(shape) - len(spec))):
         sz = _axis_size(mesh, ax)
+        if (isinstance(ax, (tuple, list)) and len(ax) > 1
+                and 0 < shape[d] < sz):
+            raise ValueError(
+                f'stacked mesh axes {tuple(ax)} (product {sz}) cannot '
+                f'shard dim {d} of shape {tuple(shape)}: dim size '
+                f'{shape[d]} < {sz}. Drop an axis from the spec or use a '
+                f'single-axis spec (single axes that do not divide are '
+                f'dropped automatically).')
         out.append(ax if sz > 1 and shape[d] % sz == 0 else None)
     return P(*out)
 
@@ -190,6 +204,65 @@ def param_specs(params: Any, mesh: Optional[Mesh] = None,
         # pad/truncate to leaf rank
         core = (core + [None] * nd)[:nd]
         specs.append(sanitize(P(*core), np.shape(leaf), mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ----------------------------------------------------------------------------
+# head-parallel serving TP (the shard_map'd continuous-serving path)
+# ----------------------------------------------------------------------------
+# attention projections whose LAST dim is head-major (head, dh) flattened —
+# splitting it by the TP degree gives each rank a contiguous head slice.
+# Everything else (wo/wo-like, MLA down-projections, norms, MLP, embeddings,
+# lm_head) stays REPLICATED: each rank runs the identical non-attention
+# compute, so the per-layer head all-gather is the ONLY collective and the
+# result is bit-identical to the single-device run (a psum over partial wo
+# products would reassociate the float reduction — see
+# models/attention.py::_tp_heads_gather).
+_SERVE_TP_HEAD_MATS = ('wq', 'wk', 'wv', 'w_uq', 'w_ukv')
+_SERVE_TP_HEAD_VECS = ('bq', 'bk', 'bv')
+
+
+def validate_serve_tp(cfg, tp: int) -> None:
+    """Reject configs the head-parallel serving layout cannot split
+    exactly. Both the query AND kv head counts must divide ``tp`` — the
+    GQA grouping g = H/Hkv then survives sharding unchanged, which is what
+    keeps every rank's attention an exact slice of the global one."""
+    if tp < 1:
+        raise ValueError(f'tp must be >= 1, got {tp}')
+    if tp == 1:
+        return
+    if cfg.family == 'ssm' or cfg.hybrid_group:
+        raise NotImplementedError(
+            f'serving TP shards attention heads; family={cfg.family!r} '
+            'carries recurrent state with no head-parallel split')
+    if cfg.n_heads % tp:
+        raise ValueError(
+            f'n_heads={cfg.n_heads} does not divide tp={tp}')
+    if cfg.mla is None and cfg.n_kv_heads % tp:
+        raise ValueError(
+            f'n_kv_heads={cfg.n_kv_heads} does not divide tp={tp} '
+            '(the KV pools shard on the Hkv axis)')
+
+
+def serve_tp_param_specs(params: Any, tp_axis: str = 'model') -> Any:
+    """PartitionSpec pytree for the head-parallel SERVING layout (distinct
+    from :func:`param_specs`, the training layout: here nothing is FSDP-
+    sharded and the row-parallel weights are replicated on purpose).
+    Pre-quantized leaves (QuantizedWeight children named ``wq``/``scale``)
+    inherit their parent projection's rule."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        parts = _path_str(path).split('/')
+        name = parts[-1]
+        if name in ('wq', 'scale') and len(parts) >= 2 and \
+                parts[-2] in _COL_NAMES + _ROW_NAMES + ('lm_head',):
+            name = parts[-2]
+        nd = np.ndim(leaf)
+        spec = [None] * nd
+        if name in _SERVE_TP_HEAD_MATS + _SERVE_TP_HEAD_VECS and nd >= 1:
+            spec[-1] = tp_axis
+        specs.append(P(*spec))
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 

@@ -76,6 +76,7 @@ from repro import configs
 from repro.core.yoco_linear import YocoConfig
 from repro.core import yoco_linear
 from repro.data import synthetic
+from repro.distributed import sharding
 from repro.models import model as model_mod
 from repro.models.model import ModelRuntime
 from repro.runtime import faults as faults_mod
@@ -603,7 +604,8 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
                      gen_len: int = 32, page_size: int = 8,
                      num_pages: Optional[int] = None, mode: str = 'bf16',
                      prequantize: bool = False, seed: int = 0,
-                     attn_impl: str = 'flash', greedy: bool = True,
+                     attn_impl: str = 'flash', tp: int = 1,
+                     greedy: bool = True,
                      temperature: float = 1.0, top_k: int = 0,
                      eos_id: Optional[int] = None,
                      max_steps: Optional[int] = None,
@@ -683,6 +685,22 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
                          f'hybrid_group={cfg.hybrid_group}) carries '
                          f'recurrent state that must see every prompt '
                          f'position')
+    mesh = None
+    if tp > 1:
+        # head-parallel tensor parallelism over a 1-D 'model' mesh: the
+        # attention projections and the paged KV pools shard by head, the
+        # scheduler/allocator stay host-global, and every jit'd step runs
+        # under shard_map with exactly one collective per layer (the
+        # head all-gather before wo). Token streams are bit-identical to
+        # the single-device run — see runtime/serve_step.py tp_* builders.
+        sharding.validate_serve_tp(cfg, tp)
+        devs = jax.devices()
+        if len(devs) < tp:
+            raise ValueError(
+                f'--tp {tp} needs {tp} devices; {len(devs)} visible '
+                f'(CPU: set XLA_FLAGS=--xla_force_host_platform_'
+                f'device_count={tp} before importing jax)')
+        mesh = jax.sharding.Mesh(np.asarray(devs[:tp]), ('model',))
     yoco = YocoConfig(mode=mode)
     rt = ModelRuntime(attn_impl=attn_impl)
     max_seq = prompt_len + gen_len
@@ -702,8 +720,8 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
     if metrics or trace:
         telem = telemetry_mod.ServeTelemetry(
             cfg, slots=slots, page_size=page_size, kv_quant=kv_quant,
-            hot_window=hot_window, metrics=metrics, trace_path=trace,
-            registry=registry)
+            hot_window=hot_window, tp=tp, metrics=metrics,
+            trace_path=trace, registry=registry)
         telem.attach(events)
     injector = faults
     sched = ContinuousScheduler(kv, prompt_pad=prompt_len, eos_id=eos_id,
@@ -743,6 +761,15 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
         cfg, slots, num_pages=num_pages, page_size=page_size,
         max_blocks=max_blocks, kv_dtype='int8' if kv_quant else None,
         hot_window=hot_window)
+    if mesh is not None:
+        # place the weights and pools once: head-sharded leaves split on
+        # their head axis, everything else (block tables, MLA latent
+        # pools, wo/MLP/embed) replicated. The jit'd walkers (quantize/
+        # scrub/COW/tail-zero) need no TP variants — GSPMD propagates
+        # these shardings through their gather/scatter bodies unchanged.
+        pspecs, cspecs = SS.serve_tp_specs(params, cache)
+        params = jax.device_put(params, sharding.to_shardings(mesh, pspecs))
+        cache = jax.device_put(cache, sharding.to_shardings(mesh, cspecs))
     # one jit'd shape: aged-out page lists are chunked to max_blocks wide
     # and padded with the garbage page (quantizing page 0 is harmless)
     quantize_fn = jax.jit(kvq.quantize_tree_pages, donate_argnums=(0,))
@@ -813,17 +840,30 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
                                            donate_argnums=(0,))
         return _chaos_fns['poison'](cache, jnp.asarray([page], jnp.int32))
 
-    prefill_fn = jax.jit(SS.make_prefill_step(cfg, yoco, rt),
-                         donate_argnums=(2,))
+    if mesh is not None:
+        prefill_fn = jax.jit(
+            SS.make_tp_prefill_step(cfg, yoco, mesh, params, cache,
+                                    attn_impl=attn_impl),
+            donate_argnums=(2,))
+    else:
+        prefill_fn = jax.jit(SS.make_prefill_step(cfg, yoco, rt),
+                             donate_argnums=(2,))
     # chunked prefill: prefix-cache hits MUST take it (a monolithic padded
     # prefill would rewrite the shared pages it just acquired); misses take
     # it only when --chunk-prefill asks for admission/decode interleaving.
     # One chunk width per run = one extra jit signature.
     chunk_c = max(1, chunk_prefill if chunk_prefill is not None
                   else page_size)
-    chunk_fn = (jax.jit(SS.make_chunk_prefill_step(cfg, yoco, rt),
-                        donate_argnums=(4,))
-                if (prefix_cache or chunk_prefill is not None) else None)
+    chunk_fn = None
+    if prefix_cache or chunk_prefill is not None:
+        if mesh is not None:
+            chunk_fn = jax.jit(
+                SS.make_tp_chunk_prefill_step(cfg, yoco, mesh, params,
+                                              cache, attn_impl=attn_impl),
+                donate_argnums=(4,))
+        else:
+            chunk_fn = jax.jit(SS.make_chunk_prefill_step(cfg, yoco, rt),
+                               donate_argnums=(4,))
     cow_fn = (jax.jit(layouts_mod.copy_tree_pages, donate_argnums=(0,))
               if prefix_cache else None)
     tail_fn = (jax.jit(layouts_mod.zero_tree_tail, donate_argnums=(0,))
@@ -868,6 +908,16 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
         return logits, part
 
     def build_decode(impl):
+        if mesh is not None:
+            # the flash->einsum degrade path rebuilds THROUGH this too:
+            # a TP stream degrades to the TP einsum oracle, never back to
+            # a single-device step (the pools are already head-sharded)
+            return jax.jit(
+                SS.make_tp_decode_step(cfg, yoco, mesh, params, cache,
+                                       attn_impl=impl, greedy=greedy,
+                                       temperature=temperature,
+                                       top_k=top_k),
+                donate_argnums=(3,))
         return jax.jit(
             SS.make_decode_step(cfg, yoco, ModelRuntime(attn_impl=impl),
                                 greedy=greedy, temperature=temperature,
@@ -1126,6 +1176,7 @@ def serve_continuous(arch: str, *, smoke: bool = True, slots: int = 4,
         quarantined=evc.get('quarantine', 0),
         attn_impl=attn_impl,
         attn_impl_effective=attn_impl_live,
+        tp=tp,
         kv_quant=bool(kv_quant),
         hot_window=hot_window if kv_quant else None,
         pages_quantized=n_pages_quantized,
@@ -1202,6 +1253,13 @@ def main(argv=None):
                     help='pool size incl. garbage page; shrink to exercise '
                          'queueing/preemption')
     ap.add_argument('--eos-id', type=int, default=None)
+    ap.add_argument('--tp', type=int, default=1,
+                    help='continuous mode: head-parallel tensor '
+                         'parallelism over a 1-D device mesh (attention '
+                         'projections + paged KV pools shard by head; '
+                         'token streams stay bit-identical to --tp 1). '
+                         'On CPU, set XLA_FLAGS=--xla_force_host_'
+                         'platform_device_count=N first')
     ap.add_argument('--kv-quant', action='store_true',
                     help='hybrid-precision KV tier (continuous mode): '
                          'int8 cold pages + fp hot window')
@@ -1259,7 +1317,7 @@ def main(argv=None):
                          page_size=args.page_size, num_pages=args.num_pages,
                          mode=args.mode, prequantize=args.prequantize,
                          attn_impl=args.attn_impl or 'flash',
-                         greedy=not args.sample,
+                         tp=args.tp, greedy=not args.sample,
                          temperature=args.temperature, top_k=args.top_k,
                          eos_id=args.eos_id, kv_quant=args.kv_quant,
                          hot_window=args.hot_window,

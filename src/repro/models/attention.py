@@ -261,16 +261,33 @@ def sdpa_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, pos,
 # ----------------------------------------------------------------------------
 # GQA forward (train / prefill / decode)
 # ----------------------------------------------------------------------------
+def _tp_heads_gather(out_flat: jnp.ndarray, rt) -> jnp.ndarray:
+    """The ONE collective of the TP serving path: inside a ``shard_map``
+    body (``rt.tp_reduce`` = the mesh axis name) every rank holds the
+    attention outputs of its own contiguous head slice; a tiled all-gather
+    on the flattened head dim reassembles the full head-major (B, S, H*dh)
+    activation BEFORE the replicated ``wo`` projection. Concatenating
+    independent per-head outputs is bit-exact vs the single-device run —
+    unlike a psum over partial ``wo`` products, which would reassociate the
+    float reduction. Outside shard_map (``tp_reduce`` unset): identity."""
+    if rt is not None and getattr(rt, 'tp_reduce', None):
+        return jax.lax.all_gather(out_flat, rt.tp_reduce, axis=out_flat.ndim - 1,
+                                  tiled=True)
+    return out_flat
+
+
 def _project_qkv(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig,
                  positions: jnp.ndarray, theta: float):
     b, s, _ = x.shape
-    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    dh = cfg.resolved_head_dim
     q = yoco_linear.linear(x, p['wq'], p.get('bq'), cfg=yoco)
     k = yoco_linear.linear(x, p['wk'], p.get('bk'), cfg=yoco)
     v = yoco_linear.linear(x, p['wv'], p.get('bv'), cfg=yoco)
-    q = q.reshape(b, s, h, dh)
-    k = k.reshape(b, s, hkv, dh)
-    v = v.reshape(b, s, hkv, dh)
+    # head counts derive from the projection widths, not cfg: inside a TP
+    # shard_map body each rank sees only its own contiguous head slice
+    q = q.reshape(b, s, -1, dh)
+    k = k.reshape(b, s, -1, dh)
+    v = v.reshape(b, s, -1, dh)
     if cfg.qk_norm:
         q = rmsnorm(q, p['q_norm'])
         k = rmsnorm(k, p['k_norm'])
@@ -291,6 +308,7 @@ def attention(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
               theta: Optional[float] = None,
               cache: Optional[dict] = None,
               cache_pos: Optional[jnp.ndarray] = None,
+              rt=None,
               ) -> Tuple[jnp.ndarray, Optional[dict]]:
     """Full-sequence attention (train) or prefill (``cache`` given: KV written
     at [0, s)). Returns (out, updated_cache)."""
@@ -310,7 +328,8 @@ def attention(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
             cache, dict(k=k, v=v))
     mask = causal_mask(s, s, 0, window)
     out = _sdpa(q, k, v, mask, 1.0 / jnp.sqrt(dh).astype(jnp.float32))
-    out = yoco_linear.linear(out.reshape(b, s, -1), p['wo'], cfg=yoco)
+    out = _tp_heads_gather(out.reshape(b, s, -1), rt)
+    out = yoco_linear.linear(out, p['wo'], cfg=yoco)
     return out, new_cache
 
 
@@ -351,7 +370,8 @@ def attention_decode(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
         # einsum oracle on the layout's densified (tier-mixing) view
         kd, vd = layout.gather(new_cache, posr)
         out = sdpa_decode(q, kd, vd, posr, scale, window)
-    out = yoco_linear.linear(out.reshape(b, 1, -1), p['wo'], cfg=yoco)
+    out = _tp_heads_gather(out.reshape(b, 1, -1), rt)
+    out = yoco_linear.linear(out, p['wo'], cfg=yoco)
     return out, new_cache
 
 
@@ -387,7 +407,8 @@ def attention_chunk(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
         kd, vd = layout.gather_fp(new_cache)
         mask = chunk_mask(offset, c, kd.shape[1], window)
         out = _sdpa(q, kd, vd, mask[:, None, None, :, :], scale)
-    out = yoco_linear.linear(out.reshape(b, c, -1), p['wo'], cfg=yoco)
+    out = _tp_heads_gather(out.reshape(b, c, -1), rt)
+    out = yoco_linear.linear(out, p['wo'], cfg=yoco)
     return out, new_cache
 
 
@@ -396,13 +417,13 @@ def attention_chunk(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
 # ----------------------------------------------------------------------------
 def _mla_qkv_full(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig,
                   positions: jnp.ndarray):
-    """Naive (non-absorbed) q/k/v for train & prefill."""
+    """Naive (non-absorbed) q/k/v for train & prefill. Head counts derive
+    from the (possibly TP-sharded) ``w_uq``/``w_ukv`` widths, not cfg."""
     m = cfg.mla
     b, s, _ = x.shape
-    h = cfg.n_heads
     cq = rmsnorm(yoco_linear.linear(x, p['w_dq'], cfg=yoco), p['q_ln'])
     q = yoco_linear.linear(cq, p['w_uq'], cfg=yoco)
-    q = q.reshape(b, s, h, m.nope_head_dim + m.rope_head_dim)
+    q = q.reshape(b, s, -1, m.nope_head_dim + m.rope_head_dim)
     q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
     q_rope = rope_mod.apply_rope(q_rope, positions, cfg.rope_theta)
 
@@ -412,7 +433,7 @@ def _mla_qkv_full(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig,
     krope = rope_mod.apply_rope(krope[:, :, None, :], positions,
                                 cfg.rope_theta)[:, :, 0, :]
     kv = yoco_linear.linear(ckv, p['w_ukv'], cfg=yoco)
-    kv = kv.reshape(b, s, h, m.nope_head_dim + m.v_head_dim)
+    kv = kv.reshape(b, s, -1, m.nope_head_dim + m.v_head_dim)
     k_nope, v = kv[..., :m.nope_head_dim], kv[..., m.nope_head_dim:]
     return q_nope, q_rope, k_nope, krope, v, ckv
 
@@ -473,7 +494,7 @@ def mla_attention(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
     probs = jax.nn.softmax(lo * scale + mask, axis=-1)
     out = jnp.einsum('bhqs,bshd->bqhd', probs.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
-    out = out.reshape(b, s, -1).astype(x.dtype)
+    out = _tp_heads_gather(out.reshape(b, s, -1).astype(x.dtype), rt)
     out = yoco_linear.linear(out, p['wo'], cfg=yoco)
     return out, new_cache
 
@@ -566,14 +587,14 @@ def mla_attention_decode(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
     applied once, outside the softmax loop."""
     m = cfg.mla
     b = x.shape[0]
-    h = cfg.n_heads
     if jnp.ndim(pos) == 0:
         positions = jnp.full((b, 1), pos, jnp.int32)
     else:
         positions = jnp.asarray(pos, jnp.int32).reshape(b, 1)
     cq = rmsnorm(yoco_linear.linear(x, p['w_dq'], cfg=yoco), p['q_ln'])
     q = yoco_linear.linear(cq, p['w_uq'], cfg=yoco)
-    q = q.reshape(b, 1, h, m.nope_head_dim + m.rope_head_dim)
+    # -1: the local head count under TP sharding (w_uq split by head)
+    q = q.reshape(b, 1, -1, m.nope_head_dim + m.rope_head_dim)
     q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
     q_rope = rope_mod.apply_rope(q_rope, positions, cfg.rope_theta)
 
@@ -584,7 +605,8 @@ def mla_attention_decode(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
                                   cfg.rope_theta)[:, :, 0, :]
 
     # absorb W_uk into q: (b,1,h,dn) @ (r, h, dn) -> (b,1,h,r)
-    w_ukv = p['w_ukv'].reshape(m.kv_lora_rank, h, m.nope_head_dim + m.v_head_dim)
+    w_ukv = p['w_ukv'].reshape(m.kv_lora_rank, -1,
+                               m.nope_head_dim + m.v_head_dim)
     w_uk = w_ukv[..., :m.nope_head_dim]                    # (r, h, dn)
     w_uv = w_ukv[..., m.nope_head_dim:]                    # (r, h, dv)
     q_lat = jnp.einsum('bqhd,rhd->bqhr', q_nope.astype(jnp.float32),
@@ -615,7 +637,7 @@ def mla_attention_decode(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
                                     scale)
 
     out = jnp.einsum('bqhr,rhd->bqhd', o_lat, w_uv.astype(jnp.float32))
-    out = out.reshape(b, 1, -1).astype(x.dtype)
+    out = _tp_heads_gather(out.reshape(b, 1, -1).astype(x.dtype), rt)
     out = yoco_linear.linear(out, p['wo'], cfg=yoco)
     return out, new_cache
 
@@ -631,12 +653,11 @@ def mla_attention_chunk(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
     only and W_uv is applied once, outside the softmax."""
     m = cfg.mla
     b, c, _ = x.shape
-    h = cfg.n_heads
     offset = jnp.asarray(offset, jnp.int32).reshape(-1)
     positions = offset[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
     cq = rmsnorm(yoco_linear.linear(x, p['w_dq'], cfg=yoco), p['q_ln'])
     q = yoco_linear.linear(cq, p['w_uq'], cfg=yoco)
-    q = q.reshape(b, c, h, m.nope_head_dim + m.rope_head_dim)
+    q = q.reshape(b, c, -1, m.nope_head_dim + m.rope_head_dim)
     q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
     q_rope = rope_mod.apply_rope(q_rope, positions, cfg.rope_theta)
 
@@ -646,7 +667,7 @@ def mla_attention_chunk(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
     krope_t = rope_mod.apply_rope(krope_t[:, :, None, :], positions,
                                   cfg.rope_theta)[:, :, 0, :]
 
-    w_ukv = p['w_ukv'].reshape(m.kv_lora_rank, h,
+    w_ukv = p['w_ukv'].reshape(m.kv_lora_rank, -1,
                                m.nope_head_dim + m.v_head_dim)
     w_uk = w_ukv[..., :m.nope_head_dim]
     w_uv = w_ukv[..., m.nope_head_dim:]
@@ -677,6 +698,6 @@ def mla_attention_chunk(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,
                            ckv_d.astype(jnp.float32))
 
     out = jnp.einsum('bqhr,rhd->bqhd', o_lat, w_uv.astype(jnp.float32))
-    out = out.reshape(b, c, -1).astype(x.dtype)
+    out = _tp_heads_gather(out.reshape(b, c, -1).astype(x.dtype), rt)
     out = yoco_linear.linear(out, p['wo'], cfg=yoco)
     return out, new_cache

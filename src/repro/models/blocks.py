@@ -60,7 +60,8 @@ def _mix_attn(p, x, cfg, yoco, *, window, theta, cache, cache_pos,
                                          pos=decode_pos, window=window,
                                          theta=theta, rt=rt)
     return attn_mod.attention(p['attn'], x, cfg, yoco, window=window,
-                              theta=theta, cache=cache, cache_pos=cache_pos)
+                              theta=theta, cache=cache, cache_pos=cache_pos,
+                              rt=rt)
 
 
 def transformer_block(p: dict, x: jnp.ndarray, cfg, yoco: YocoConfig, *,

@@ -44,6 +44,11 @@ class ModelRuntime:
     act_layout: str = 'batch'      # batch (TP baseline) | 2d (batch x seq)
     attn_impl: str = 'einsum'      # einsum (oracle) | flash (Pallas decode)
     compute_dtype: Any = jnp.bfloat16
+    # set INSIDE a serving shard_map body (mesh stays None there): the named
+    # mesh axis the attention output's head shards are all-gathered over —
+    # the ONE collective per layer of the TP serving path (see
+    # runtime/serve_step.py tp_* builders)
+    tp_reduce: Optional[str] = None
 
     @property
     def moe_ctx(self) -> Optional[moe_mod.EPContext]:

@@ -155,6 +155,25 @@ class CacheLayout:
     # tiers/scales too — a poisoned page may already have quantized.
     scrub_leaves: Tuple[str, ...] = ()  # zeroed by scrub_tree_pages
     poison_leaves: Tuple[str, ...] = () # NaN'd by poison_tree_pages
+    # head-parallel serving TP: leaf -> (single-layer ndim, dim carrying
+    # the head axis). Leaves absent here are replicated (block tables, hot
+    # windows, MLA latent pools — no head axis — and recurrent state).
+    shard_dims: dict = {}
+
+    # -- TP shard specs (serving; see tree_shard_specs) ---------------------
+    @classmethod
+    def shard_spec(cls, key: str, leaf, tp_axis: str = 'model'):
+        """PartitionSpec for one leaf of this layout under head-parallel
+        serving TP. Layer-stacked leaves are detected by rank (single-layer
+        ndim + 1) — the extra leading scan dim stays unsharded."""
+        from jax.sharding import PartitionSpec as P
+        nd = jnp.ndim(leaf)
+        spec = [None] * nd
+        entry = cls.shard_dims.get(key)
+        if entry is not None:
+            nd_single, dim = entry
+            spec[nd - nd_single + dim] = tp_axis
+        return P(*spec)
 
     # -- write ops ----------------------------------------------------------
     @classmethod
@@ -366,6 +385,9 @@ class PagedQ8Layout(CacheLayout):
     quant_probe_ndim = 2
     scrub_leaves = ('k', 'v', 'kq', 'vq', 'ks', 'vs')
     poison_leaves = ('k', 'v')
+    # pools split the Hkv axis; the per-page per-head scales follow it
+    shard_dims = {'k': (4, 2), 'v': (4, 2), 'kq': (4, 2), 'vq': (4, 2),
+                  'ks': (2, 1), 'vs': (2, 1)}
 
     @classmethod
     def write_token(cls, cache, updates, pos):
@@ -441,6 +463,7 @@ class PagedLayout(CacheLayout):
     table_leaves = ('bt',)
     scrub_leaves = ('k', 'v')
     poison_leaves = ('k', 'v')
+    shard_dims = {'k': (4, 2), 'v': (4, 2)}     # (P, ps, Hkv, dh): split Hkv
 
     @classmethod
     def write_token(cls, cache, updates, pos):
@@ -534,6 +557,7 @@ class ContiguousLayout(CacheLayout):
     """Contiguous GQA cache: ``k``/``v`` (B, S_max, Hkv, dh)."""
     name = 'contiguous'
     required = frozenset({'k', 'v'})
+    shard_dims = {'k': (4, 2), 'v': (4, 2)}     # (B, S, Hkv, dh): split Hkv
 
     @classmethod
     def write_token(cls, cache, updates, pos):
@@ -858,3 +882,26 @@ def merge_state_slot(full_tree, part_tree, slot: int):
         return part
 
     return walk(full_tree, part_tree)
+
+
+def tree_shard_specs(cache_tree, tp_axis: str = 'model'):
+    """PartitionSpec pytree for a (possibly layer-stacked) cache tree under
+    head-parallel serving TP: each dict node classifies to its layout and
+    each leaf gets that layout's :meth:`~CacheLayout.shard_spec` — GQA
+    pools (and their int8 tiers + per-head scales) split the Hkv axis, MLA
+    latent pools / block tables / hot windows / recurrent state replicate.
+    Keeping the routing here means the tree walkers above stay layout-
+    driven when fed sharded pools: they are plain jit'd pytree ops, so
+    GSPMD propagates these shardings through them unchanged."""
+    from jax.sharding import PartitionSpec as P
+
+    def walk(node):
+        if isinstance(node, dict):
+            lay = match_layout(node)
+            if lay is not None and not lay.composite:
+                return {k: lay.shard_spec(k, v, tp_axis)
+                        for k, v in node.items()}
+            return {k: walk(v) for k, v in node.items()}
+        return P(*([None] * jnp.ndim(node)))
+
+    return walk(cache_tree)

@@ -112,6 +112,110 @@ def make_decode_step(cfg, yoco: YocoConfig = DEFAULT_YOCO,
     return decode_step_sampled
 
 
+# ----------------------------------------------------------------------------
+# tensor-parallel serving steps: head-parallel shard_map over a 1-D mesh
+# ----------------------------------------------------------------------------
+def serve_tp_specs(params, cache, tp_axis: str = 'model'):
+    """(param specs, cache specs) for head-parallel serving TP: attention
+    head projections shard on their last (output) dim, the paged KV pools
+    on their Hkv axis (``layouts.tree_shard_specs`` — the layout registry
+    owns which leaves carry a head axis); everything else — ``wo``, MLP,
+    embeddings, block tables, MLA latent pools — is replicated. Both trees
+    are structural templates only: specs depend on tree structure and leaf
+    ranks, never on values, so an abstract (eval_shape) tree works too."""
+    from repro.runtime import layouts as layouts_mod
+    return (sharding.serve_tp_param_specs(params, tp_axis),
+            layouts_mod.tree_shard_specs(cache, tp_axis))
+
+
+def _tp_wrap(body, mesh, in_specs, out_specs):
+    from repro import compat
+    return compat.shard_map(body, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_vma=False)
+
+
+def make_tp_prefill_step(cfg, yoco: YocoConfig, mesh, params, cache, *,
+                         attn_impl: str = 'einsum', tp_axis: str = 'model'):
+    """Tensor-parallel twin of :func:`make_prefill_step`: the whole jit'd
+    prefill body runs inside one ``shard_map`` over the ``tp_axis`` mesh
+    axis. Inside the body each rank sees its own contiguous head slice of
+    the projections and KV pools; ``rt.tp_reduce`` names the axis so the
+    attention mix all-gathers the per-head outputs before the replicated
+    ``wo`` — the ONE collective per layer of the TP serving path. Tokens,
+    positions and logits are replicated (``P()``), and every rank computes
+    the identical logits, so the host-side scheduler stays untouched.
+
+    ``params``/``cache`` are structural templates for the partition specs
+    (see :func:`serve_tp_specs`); ``last_pos`` is required (the continuous
+    driver always passes it)."""
+    rt = ModelRuntime(attn_impl=attn_impl, tp_reduce=tp_axis)
+    P = jax.sharding.PartitionSpec
+    pspecs, cspecs = serve_tp_specs(params, cache, tp_axis)
+
+    def prefill_body(params, batch, cache, last_pos):
+        return model_mod.prefill(params, batch, cache, cfg, yoco, rt,
+                                 last_pos=last_pos)
+
+    return _tp_wrap(prefill_body, mesh,
+                    in_specs=(pspecs, P(), cspecs, P()),
+                    out_specs=(P(), cspecs))
+
+
+def make_tp_chunk_prefill_step(cfg, yoco: YocoConfig, mesh, params, cache,
+                               *, attn_impl: str = 'einsum',
+                               tp_axis: str = 'model'):
+    """Tensor-parallel twin of :func:`make_chunk_prefill_step` (same
+    shard_map contract as :func:`make_tp_prefill_step`)."""
+    rt = ModelRuntime(attn_impl=attn_impl, tp_reduce=tp_axis)
+    P = jax.sharding.PartitionSpec
+    pspecs, cspecs = serve_tp_specs(params, cache, tp_axis)
+
+    def chunk_body(params, batch, offset, limit, cache):
+        return model_mod.prefill_chunk(params, batch, offset, limit, cache,
+                                       cfg, yoco, rt)
+
+    return _tp_wrap(chunk_body, mesh,
+                    in_specs=(pspecs, P(), P(), P(), cspecs),
+                    out_specs=(P(), cspecs))
+
+
+def make_tp_decode_step(cfg, yoco: YocoConfig, mesh, params, cache, *,
+                        attn_impl: str = 'einsum', tp_axis: str = 'model',
+                        greedy: bool = True, temperature: float = 1.0,
+                        top_k: int = 0):
+    """Tensor-parallel twin of :func:`make_decode_step`: one shard_map'd
+    single-token step over the head-sharded pools. Logits come out
+    replicated — every rank all-gathers the same per-head attention
+    outputs and runs the identical replicated ``wo``/MLP/lm_head math, so
+    argmax (and temperature/top-k sampling from a replicated key) is
+    bit-identical to the single-device step."""
+    rt = ModelRuntime(attn_impl=attn_impl, tp_reduce=tp_axis)
+    P = jax.sharding.PartitionSpec
+    pspecs, cspecs = serve_tp_specs(params, cache, tp_axis)
+
+    def decode_logits(params, token, pos, cache):
+        return model_mod.decode_step(params, token, pos, cache,
+                                     cfg, yoco, rt)
+
+    if greedy:
+        def decode_body(params, token, pos, cache):
+            logits, cache = decode_logits(params, token, pos, cache)
+            next_tok = jnp.argmax(logits, axis=-1)
+            return next_tok.astype(jnp.int32), logits, cache
+        return _tp_wrap(decode_body, mesh,
+                        in_specs=(pspecs, P(), P(), cspecs),
+                        out_specs=(P(), P(), cspecs))
+
+    def decode_body_sampled(params, token, pos, cache, key):
+        logits, cache = decode_logits(params, token, pos, cache)
+        next_tok = sample_tokens(logits, key, temperature=temperature,
+                                 top_k=top_k)
+        return next_tok, logits, cache
+    return _tp_wrap(decode_body_sampled, mesh,
+                    in_specs=(pspecs, P(), P(), cspecs, P()),
+                    out_specs=(P(), P(), cspecs))
+
+
 def abstract_serve_state(cfg, batch: int, max_seq: int,
                          cache_dtype=jnp.bfloat16, prequant: bool = False):
     def mk(k):

@@ -406,10 +406,11 @@ class EnergyMeter:
              'shared_saved_bytes', 'shared_saved_pj')
 
     def __init__(self, cfg, *, page_size: int, kv_quant: bool = False,
-                 hot_window: int = 1, fp_bytes: int = 2,
+                 hot_window: int = 1, fp_bytes: int = 2, tp: int = 1,
                  tier: hwmodel.KVTierConfig = hwmodel.DEFAULT_KV_TIER):
         self.kv_quant = bool(kv_quant)
         self.tier = tier
+        self.tp = max(int(tp), 1)
         self.page_size = page_size
         self.hot_window = max(int(hot_window), 1)
         self.fp_bytes = fp_bytes
@@ -565,6 +566,44 @@ class EnergyMeter:
                        digital_tops_w=self.tier.digital_tops_w,
                        core_tops=hwmodel.throughput_tops()),
         )
+        if self.tp > 1:
+            # tensor-parallel residency view. The meter is host-global (it
+            # prices the scheduler's tier tracker, which never shards), so
+            # the global columns above ARE the single-device figures; this
+            # block decomposes them per shard under head-parallel TP:
+            #
+            # * GQA: the KV pools shard on the Hkv axis, so every byte and
+            #   every attention op lands on exactly one shard — per-shard
+            #   is the global column / ways, and re-aggregating (x ways)
+            #   reproduces the global column BIT-FOR-BIT for power-of-two
+            #   ways (binary float divide-then-multiply by 2^k is exact;
+            #   the unit test pins the equality).
+            # * MLA: the latent pool is physically REPLICATED (no head
+            #   axis), so each rank fetches the full latent rows — bytes
+            #   and (memory-dominated) pJ do not divide; only the absorbed
+            #   per-head expansion ops shard. ``redundant_bytes`` prices
+            #   what that replication costs: (ways - 1) extra copies of
+            #   the achieved traffic. The deduplicated aggregate still
+            #   equals the single-device figures exactly.
+            ways = self.tp
+            sharded = not self.is_mla
+            byte_pj_keys = ('hot_bytes', 'cold_bytes', 'achieved_bytes',
+                            'baseline_bytes', 'achieved_pj', 'baseline_pj')
+            per_shard = {k: (t[k] / ways if sharded else t[k])
+                         for k in byte_pj_keys}
+            per_shard['ops'] = t['ops'] / ways
+            per_shard['tokens'] = int(t['tokens'])
+            agg = {k: per_shard[k] * ways if sharded else per_shard[k]
+                   for k in byte_pj_keys}
+            agg['ops'] = per_shard['ops'] * ways
+            out['tp'] = dict(
+                ways=ways,
+                latent_replicated=self.is_mla,
+                per_shard=per_shard,
+                aggregate=agg,
+                redundant_bytes=(t['achieved_bytes'] * (ways - 1)
+                                 if self.is_mla else 0.0),
+            )
         return out
 
 
@@ -636,7 +675,7 @@ class ServeTelemetry:
     calls when neither is requested."""
 
     def __init__(self, cfg, *, slots: int, page_size: int,
-                 kv_quant: bool = False, hot_window: int = 1,
+                 kv_quant: bool = False, hot_window: int = 1, tp: int = 1,
                  metrics: bool = True, trace_path: Optional[str] = None,
                  registry: Optional[MetricsRegistry] = None,
                  clock=time.perf_counter):
@@ -644,7 +683,8 @@ class ServeTelemetry:
         self.clock = clock
         self.reg = registry if registry is not None else MetricsRegistry()
         self.meter = (EnergyMeter(cfg, page_size=page_size,
-                                  kv_quant=kv_quant, hot_window=hot_window)
+                                  kv_quant=kv_quant, hot_window=hot_window,
+                                  tp=tp)
                       if self.metrics else None)
         self.tracer = (StepTracer(trace_path, slots, clock=clock)
                        if trace_path else None)

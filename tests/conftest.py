@@ -1,9 +1,20 @@
 import os
 import sys
 
-# tests must see exactly ONE device (the dry-run sets its own 512-device
-# flag in its own process); keep any user XLA_FLAGS out of the way
+# the whole suite runs on CPU with a FORCED multi-device host platform
+# (default 4 virtual devices, override with REPRO_HOST_DEVICES) so the
+# distributed tier exercises real collectives — shard_map TP serving,
+# psum/all-gather — in-process instead of only via subprocesses. XLA only
+# reads the flag at backend init, so it MUST land before `import jax`
+# (the dry-run still sets its own 512-device flag in its own process).
+# Single-device semantics are unaffected: jit without shardings places
+# everything on device 0.
 os.environ.setdefault('JAX_PLATFORMS', 'cpu')
+_flags = os.environ.get('XLA_FLAGS', '')
+if '--xla_force_host_platform_device_count' not in _flags:
+    _n = int(os.environ.get('REPRO_HOST_DEVICES', '4'))
+    os.environ['XLA_FLAGS'] = (
+        f'{_flags} --xla_force_host_platform_device_count={_n}'.strip())
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), '..', 'src'))
 # benchmarks/ is imported by the fast-tier bench-smoke test

@@ -1,20 +1,52 @@
 """Multi-(virtual-)device parity: the distributed execution paths — TP
 layout, fsdp2d 2-D layout (sequence-sharded activations + shard_map MLA
 latent core), and EP MoE all_to_all — must compute the same loss as the
-single-device reference. Runs in a subprocess with 4 virtual host devices
-(this process must keep seeing 1 device)."""
+single-device reference.
+
+The big parity grid still runs in a subprocess (it wants a 2x2 mesh at a
+specific training shape), but since tests/conftest.py forces a multi-
+device host platform (``--xla_force_host_platform_device_count``, set
+before ``import jax``) the in-process tests below exercise REAL
+collectives on real device shards too — no subprocess round-trip."""
 
 import os
 import re
 import subprocess
 import sys
 
+import numpy as np
 import pytest
 
 pytestmark = pytest.mark.slow
 
 
 REPO = os.path.join(os.path.dirname(__file__), '..')
+
+
+@pytest.mark.distributed
+def test_host_platform_is_multidevice():
+    """conftest.py forced the multi-device CPU host platform before jax
+    import — the precondition for every in-process distributed test."""
+    import jax
+    assert jax.default_backend() == 'cpu'
+    assert jax.device_count() >= 4, jax.devices()
+
+
+@pytest.mark.distributed
+def test_in_process_shard_map_psum():
+    """A real psum across 4 forced host devices, in-process."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro import compat
+
+    mesh = Mesh(np.asarray(jax.devices()[:4]), ('data',))
+    f = compat.shard_map(lambda x: jax.lax.psum(x, 'data'), mesh=mesh,
+                        in_specs=P('data'), out_specs=P())
+    x = jnp.arange(8.0)
+    got = np.asarray(jax.jit(f)(x))
+    want = np.asarray(x).reshape(4, 2).sum(axis=0)
+    np.testing.assert_allclose(got, want)
 
 
 @pytest.fixture(scope='module')
